@@ -1,0 +1,76 @@
+//! Distributed training walk-through (paper §IV-E): partitions a scaled
+//! Yelp-like graph across 4 simulated ranks and contrasts Morphling's two
+//! distributed contributions against their baselines:
+//!
+//! - degree-aware hierarchical partitioner vs contiguous vertex chunks
+//!   (straggler imbalance);
+//! - pipelined gradient reduction vs blocking collectives
+//!   (exposed communication time).
+//!
+//!     cargo run --release --example distributed
+
+use morphling::dist::runtime::{train_distributed, DistConfig, PartitionerKind};
+use morphling::dist::NetworkModel;
+use morphling::graph::datasets;
+use morphling::partition::{hierarchical_partition, quality};
+use morphling::util::table::{fmt_bytes, fmt_secs, Table};
+
+fn main() {
+    let ds = datasets::load_by_name("yelp").unwrap();
+    println!(
+        "dataset {}: {} nodes, {} edges (scaled replica)\n",
+        ds.spec.name,
+        ds.spec.nodes,
+        ds.raw_graph.num_edges()
+    );
+
+    // --- partition quality (Table I flavor) ---
+    let r = hierarchical_partition(&ds.raw_graph, 4, 1);
+    let q = quality::assess(&ds.raw_graph, &r.partitioning);
+    println!(
+        "hierarchical partitioner chose {}: edge-cut {:.1}%, compute imbalance {:.3}",
+        r.strategy.name(),
+        q.cut_ratio * 100.0,
+        q.compute_imbalance
+    );
+    let chunk = morphling::partition::chunk_partition(ds.spec.nodes, 4);
+    let qc = quality::assess(&ds.raw_graph, &chunk);
+    println!(
+        "vertex-chunk baseline:           edge-cut {:.1}%, compute imbalance {:.3}\n",
+        qc.cut_ratio * 100.0,
+        qc.compute_imbalance
+    );
+
+    // --- the four runtime configurations ---
+    let mut t = Table::new(vec![
+        "partitioner", "comm", "epoch(max-rank)", "exposed-comm(total)", "bytes-sent",
+    ]);
+    for (pk, pk_name) in [
+        (PartitionerKind::Hierarchical, "hierarchical"),
+        (PartitionerKind::VertexChunk, "vertex-chunk"),
+    ] {
+        for pipelined in [true, false] {
+            let cfg = DistConfig {
+                world: 4,
+                epochs: 5,
+                partitioner: pk,
+                pipelined,
+                network: NetworkModel::ethernet(), // slow fabric: comm visible
+                seed: 42,
+            };
+            let rep = train_distributed(&ds, &cfg);
+            let comm: f64 = rep.ranks.iter().map(|s| s.exposed_comm_secs).sum();
+            let bytes: usize = rep.ranks.iter().map(|s| s.bytes_sent).sum();
+            t.row(vec![
+                pk_name.to_string(),
+                if pipelined { "pipelined" } else { "blocking" }.to_string(),
+                fmt_secs(rep.sustained_epoch_secs()),
+                fmt_secs(comm),
+                fmt_bytes(bytes),
+            ]);
+        }
+    }
+    print!("{}", t.render());
+    println!("\nexpected shape: hierarchical+pipelined fastest; vertex-chunk suffers");
+    println!("straggler ranks; blocking exposes the full reduction latency.");
+}

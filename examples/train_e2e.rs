@@ -1,0 +1,101 @@
+//! End-to-end validation driver (DESIGN.md §4): exercises the FULL
+//! three-layer stack on a real small workload, proving all layers compose:
+//!
+//! 1. **native engine** — several hundred epochs on the scaled ogbn-arxiv
+//!    replica, logging the loss curve (the training-systems e2e check);
+//! 2. **PJRT engine** — the same model as the AOT-compiled fused step
+//!    (JAX/Pallas → HLO text → Rust PJRT), verifying the loss decreases
+//!    through the accelerator path too;
+//! 3. **distributed runtime** — 4 simulated ranks with the hierarchical
+//!    partitioner and the pipelined gradient reduction.
+//!
+//!     cargo run --release --example train_e2e [-- --skip-pjrt]
+//!
+//! The run is recorded in EXPERIMENTS.md §End-to-end.
+
+use morphling::coordinator::{run, TrainSpec};
+use morphling::dist::runtime::{train_distributed, DistConfig};
+use morphling::engine::EngineKind;
+use morphling::graph::datasets;
+use morphling::util::argparse::Args;
+use morphling::util::table::fmt_secs;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    println!("=== Morphling end-to-end validation ===\n");
+
+    // --- 1. native engine, 300 epochs, loss curve ---
+    let spec = TrainSpec {
+        dataset: "ogbn-arxiv".to_string(),
+        epochs: 300,
+        ..Default::default()
+    };
+    println!("[1/3] native engine: GCN on {} for {} epochs", spec.dataset, spec.epochs);
+    let out = run(&spec)?;
+    for (e, s) in out.report.epochs.iter().enumerate() {
+        if e % 30 == 0 || e + 1 == out.report.epochs.len() {
+            println!("  epoch {:>3}  loss {:.4}  train_acc {:.3}", e, s.loss, s.train_acc);
+        }
+    }
+    let first = out.report.epochs[0].loss;
+    let last = out.report.final_loss();
+    println!(
+        "  loss {first:.4} → {last:.4}  test acc {:.3}  sustained epoch {}\n",
+        out.report.test_acc,
+        fmt_secs(out.report.sustained_epoch_secs())
+    );
+    anyhow::ensure!(last < first * 0.7, "native loss did not converge");
+
+    // --- 2. PJRT fused-step engine ---
+    if !args.flag("skip-pjrt") {
+        let spec = TrainSpec {
+            dataset: "corafull".to_string(),
+            engine: EngineKind::Pjrt,
+            epochs: 20,
+            ..Default::default()
+        };
+        println!("[2/3] PJRT engine: AOT fused step on {}", spec.dataset);
+        match run(&spec) {
+            Ok(out) => {
+                let first = out.report.epochs[0].loss;
+                let last = out.report.final_loss();
+                println!(
+                    "  loss {first:.4} → {last:.4} over {} epochs ({}/epoch)\n",
+                    spec.epochs,
+                    fmt_secs(out.report.sustained_epoch_secs())
+                );
+                anyhow::ensure!(last < first, "pjrt loss did not decrease");
+            }
+            Err(e) => {
+                println!("  SKIPPED ({e:#})\n  → run `make artifacts` first\n");
+            }
+        }
+    }
+
+    // --- 3. distributed runtime ---
+    let ds = datasets::load_by_name("flickr").unwrap();
+    let cfg = DistConfig {
+        world: 4,
+        epochs: 20,
+        ..Default::default()
+    };
+    println!("[3/3] distributed: {} on {} ranks (pipelined, hierarchical)", ds.spec.name, cfg.world);
+    let r = train_distributed(&ds, &cfg);
+    println!(
+        "  partitioner chose {}; loss {:.4} → {:.4}; sustained epoch {}",
+        r.partition_strategy,
+        r.losses[0],
+        r.final_loss(),
+        fmt_secs(r.sustained_epoch_secs())
+    );
+    for s in &r.ranks {
+        println!(
+            "  rank {}: {} local nodes, {} ghosts, {} local edges",
+            s.rank, s.n_local, s.n_ghost, s.local_edges
+        );
+    }
+    anyhow::ensure!(r.final_loss() < r.losses[0], "distributed loss did not decrease");
+
+    println!("\nall three layers compose: OK");
+    Ok(())
+}

@@ -1,0 +1,155 @@
+"""AOT lowering: JAX/Pallas training graphs → HLO **text** artifacts.
+
+Build-time only — this is the single point where Python runs. The flow is
+
+    cargo build → `morphling shapes` writes artifacts/shapes.json
+    → this script lowers train/eval steps per dataset shape
+    → artifacts/*.hlo.txt + artifacts/manifest.json
+    → the Rust runtime compiles + executes them via PJRT.
+
+HLO *text* (not serialized HloModuleProto) is the interchange format:
+jax ≥ 0.5 emits protos with 64-bit instruction ids that the xla crate's
+XLA (0.5.1) rejects; the text parser reassigns ids (see
+/opt/xla-example/README.md).
+
+Per dataset two training variants are emitted, mirroring the Rust engine
+split (Fig. 4/5's comparison on the accelerator path):
+  - ``fused``  — Morphling: Pallas tiled SpMM + Pallas GEMM;
+  - ``gather`` — PyG-analogue: gather/segment-sum with |E|×H messages.
+plus one ``eval`` (forward-only) artifact for the fused variant.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .model import Csr, GcnParams, AdamState, train_step, eval_step
+
+HIDDEN = 32
+# spmm kernel constraints (see kernels/spmm_tiled.py)
+NODE_BLOCK = 128
+FEAT_TILE = 32
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def pad_up(v: int, m: int) -> int:
+    return ((v + m - 1) // m) * m
+
+
+def specs_for(shape: dict):
+    """Build the ShapeDtypeStruct pytree matching one dataset bucket.
+
+    The Rust side pads N to a NODE_BLOCK multiple (isolated dummy nodes,
+    mask 0) and F to a FEAT_TILE multiple (zero feature columns); E needs
+    no padding.
+    """
+    n = pad_up(shape["n"], NODE_BLOCK)
+    f = pad_up(shape["f"], FEAT_TILE)
+    e = shape["e"]
+    c = shape["c"]
+    f32 = jnp.float32
+    i32 = jnp.int32
+    S = jax.ShapeDtypeStruct
+    csr = Csr(
+        row_ptr=S((n + 1,), i32),
+        col=S((e,), i32),
+        val=S((e,), f32),
+        row_ptr_t=S((n + 1,), i32),
+        col_t=S((e,), i32),
+        val_t=S((e,), f32),
+        edge_row=S((e,), i32),
+    )
+    x = S((n, f), f32)
+    labels = S((n,), i32)
+    mask = S((n,), f32)
+    params = GcnParams(
+        w1=S((f, HIDDEN), f32),
+        b1=S((HIDDEN,), f32),
+        w2=S((HIDDEN, HIDDEN), f32),
+        b2=S((HIDDEN,), f32),
+        w3=S((HIDDEN, c), f32),
+        b3=S((c,), f32),
+    )
+    opt = AdamState(
+        m=params,
+        v=params,
+        t=S((), f32),
+    )
+    return csr, x, labels, mask, params, opt, dict(n_pad=n, f_pad=f)
+
+
+def flat_signature(tree) -> list:
+    """Flatten a pytree of ShapeDtypeStructs into `[ [name, shape, dtype] ]`
+    in the exact order the lowered HLO takes its parameters."""
+    leaves_with_paths = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = []
+    for path, leaf in leaves_with_paths:
+        name = "/".join(str(p) for p in path).replace(".", "")
+        out.append([name, list(leaf.shape), leaf.dtype.name])
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--shapes", default="../artifacts/shapes.json")
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument(
+        "--datasets",
+        default="",
+        help="comma-separated subset (default: every entry in shapes.json)",
+    )
+    args = ap.parse_args()
+
+    with open(args.shapes) as f:
+        shapes = json.load(f)
+    only = {s for s in args.datasets.split(",") if s}
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest = {"hidden": HIDDEN, "node_block": NODE_BLOCK, "feat_tile": FEAT_TILE,
+                "entries": []}
+    for name, shape in sorted(shapes.items()):
+        if only and name not in only:
+            continue
+        csr, x, labels, mask, params, opt, pads = specs_for(shape)
+        for variant in ("fused", "gather"):
+            lowered = train_step.lower(variant, csr, x, labels, mask, params, opt)
+            fname = f"train_{variant}_{name}.hlo.txt"
+            with open(os.path.join(args.out_dir, fname), "w") as f:
+                f.write(to_hlo_text(lowered))
+            manifest["entries"].append({
+                "name": name, "kind": "train", "variant": variant, "file": fname,
+                **shape, **pads,
+                "inputs": flat_signature((csr, x, labels, mask, params, opt)),
+                "num_outputs": 2 + 6 + 13,  # loss, acc, params, adam state
+            })
+            print(f"lowered {fname}")
+        lowered = eval_step.lower("fused", csr, x, labels, mask, params)
+        fname = f"eval_fused_{name}.hlo.txt"
+        with open(os.path.join(args.out_dir, fname), "w") as f:
+            f.write(to_hlo_text(lowered))
+        manifest["entries"].append({
+            "name": name, "kind": "eval", "variant": "fused", "file": fname,
+            **shape, **pads,
+            "inputs": flat_signature((csr, x, labels, mask, params)),
+            "num_outputs": 2,
+        })
+        print(f"lowered {fname}")
+
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"manifest: {len(manifest['entries'])} entries")
+
+
+if __name__ == "__main__":
+    main()

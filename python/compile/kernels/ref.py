@@ -1,0 +1,44 @@
+"""Pure-jnp oracles for the Pallas kernels — the correctness contract every
+kernel is pytest-checked against (and the baseline the §Perf roofline
+comparison uses)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def spmm_ref(row_ptr, col_idx, vals, x):
+    """Dense reference for CSR SpMM: materialize A and matmul.
+
+    Only used at test scale — O(N²) memory.
+    """
+    rp = np.asarray(row_ptr)
+    ci = np.asarray(col_idx)
+    vv = np.asarray(vals)
+    n = rp.shape[0] - 1
+    a = np.zeros((n, n), np.float32)
+    for u in range(n):
+        for e in range(rp[u], rp[u + 1]):
+            a[u, ci[e]] += vv[e]
+    return jnp.asarray(a) @ x
+
+
+def spmm_ref_segsum(edge_row, col_idx, vals, x, n):
+    """Segment-sum reference (scales to larger graphs): `edge_row[e]` is the
+    destination row of edge `e` (expanded row_ptr)."""
+    msgs = vals[:, None] * x[col_idx]
+    return jax.ops.segment_sum(msgs, edge_row, num_segments=n)
+
+
+def expand_row_ptr(row_ptr):
+    """CSR row_ptr → per-edge row ids (numpy, test helper)."""
+    rp = np.asarray(row_ptr)
+    n = rp.shape[0] - 1
+    out = np.zeros(rp[-1], np.int32)
+    for u in range(n):
+        out[rp[u] : rp[u + 1]] = u
+    return out
+
+
+def matmul_ref(a, b):
+    return a @ b

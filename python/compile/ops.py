@@ -1,0 +1,98 @@
+"""Differentiable wrappers over the L1 Pallas kernels.
+
+``pallas_call`` has no automatic VJP, so the aggregation and transform ops
+carry ``custom_vjp`` rules — which is also where the paper's backward
+strategies live:
+
+- ``spmm``'s cotangent is ``Âᵀ · ḡ``; the rule runs the *same* tiled
+  kernel on the pre-materialized transposed CSR (the paper's CPU backward:
+  explicit CSC view, conflict-free).
+- ``matmul``'s cotangents are the two standard matmuls, routed through the
+  Pallas GEMM again so the whole training step lowers to Morphling kernels.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import gemm as gemm_kernel
+from .kernels import spmm_tiled
+
+
+def _padded_spmm(row_ptr, col, val, x):
+    """Tiled SpMM with automatic feature-dim padding to a tile multiple
+    (the class-width last layer is narrower than the 32-wide tile)."""
+    f = x.shape[1]
+    t = spmm_tiled.DEFAULT_T if f >= spmm_tiled.DEFAULT_T else 8
+    fp = ((f + t - 1) // t) * t
+    if fp != f:
+        x = jnp.pad(x, ((0, 0), (0, fp - f)))
+    y = spmm_tiled.spmm(row_ptr, col, val, x, t=t)
+    return y[:, :f]
+
+
+@jax.custom_vjp
+def spmm(row_ptr, col, val, row_ptr_t, col_t, val_t, x):
+    """``Y = A·X`` with A given as CSR (fwd) + its transpose (bwd)."""
+    return _padded_spmm(row_ptr, col, val, x)
+
+
+def _spmm_fwd(row_ptr, col, val, row_ptr_t, col_t, val_t, x):
+    y = _padded_spmm(row_ptr, col, val, x)
+    return y, (row_ptr_t, col_t, val_t)
+
+
+def _spmm_bwd(res, g):
+    row_ptr_t, col_t, val_t = res
+    dx = _padded_spmm(row_ptr_t, col_t, val_t, g)
+    return (None, None, None, None, None, None, dx)
+
+
+spmm.defvjp(_spmm_fwd, _spmm_bwd)
+
+
+def _pad_to(x, rows=None, cols=None):
+    """Zero-pad a matrix up to tile-divisible shape."""
+    r = rows if rows is not None else x.shape[0]
+    c = cols if cols is not None else x.shape[1]
+    if (r, c) == x.shape:
+        return x
+    return jnp.pad(x, ((0, r - x.shape[0]), (0, c - x.shape[1])))
+
+
+def _tiled_matmul(a, b):
+    """Pallas matmul with automatic padding to tile multiples."""
+    m, k = a.shape
+    _, n = b.shape
+
+    def rnd(v, t):
+        return ((v + t - 1) // t) * t
+
+    # small dims fall back to single-tile blocks
+    bm = min(gemm_kernel.DEFAULT_BM, rnd(m, 8))
+    bn = min(gemm_kernel.DEFAULT_BN, rnd(n, 8))
+    bk = min(gemm_kernel.DEFAULT_BK, rnd(k, 8))
+    mp, kp, np_ = rnd(m, bm), rnd(k, bk), rnd(n, bn)
+    ap = _pad_to(a, mp, kp)
+    bp = _pad_to(b, kp, np_)
+    out = gemm_kernel.matmul(ap, bp, bm=bm, bn=bn, bk=bk)
+    return out[:m, :n]
+
+
+@jax.custom_vjp
+def matmul(a, b):
+    """``C = A@B`` through the Pallas MXU-tiled kernel."""
+    return _tiled_matmul(a, b)
+
+
+def _matmul_fwd(a, b):
+    return _tiled_matmul(a, b), (a, b)
+
+
+def _matmul_bwd(res, g):
+    a, b = res
+    da = _tiled_matmul(g, b.T)
+    db = _tiled_matmul(a.T, g)
+    return (da, db)
+
+
+matmul.defvjp(_matmul_fwd, _matmul_bwd)

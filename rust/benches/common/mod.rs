@@ -1,0 +1,33 @@
+//! Shared helpers for the bench harness binaries (criterion is not in the
+//! offline vendor set, so benches are `harness = false` binaries built on
+//! `util::timer::bench_fn`).
+
+use morphling::engine::Engine;
+use morphling::graph::Dataset;
+use morphling::util::timer::{bench_fn, median};
+
+/// Measure sustained per-epoch seconds: `warmup` unmeasured epochs, then
+/// the median of `reps` measured ones (median resists single-epoch noise
+/// on a shared machine).
+pub fn epoch_time(engine: &mut dyn Engine, ds: &Dataset, warmup: usize, reps: usize) -> f64 {
+    let (_, samples) = bench_fn(warmup, reps, || engine.train_epoch(ds));
+    median(&samples)
+}
+
+/// Adaptive rep count: fewer reps for slower configurations.
+pub fn reps_for(probe_secs: f64) -> (usize, usize) {
+    if probe_secs > 2.0 {
+        (0, 2)
+    } else if probe_secs > 0.3 {
+        (1, 3)
+    } else {
+        (2, 5)
+    }
+}
+
+/// Probe one epoch (also serves as warmup for page-in effects).
+pub fn probe(engine: &mut dyn Engine, ds: &Dataset) -> f64 {
+    let t = std::time::Instant::now();
+    engine.train_epoch(ds);
+    t.elapsed().as_secs_f64()
+}

@@ -1,0 +1,87 @@
+//! Figures 2 & 3: CPU per-epoch training time and speedups —
+//! Morphling-native vs the gather-scatter (PyG) and nonfused (DGL)
+//! baseline engines, across all eleven scaled datasets.
+//!
+//!     cargo bench --bench cpu_epoch            # full sweep
+//!     cargo bench --bench cpu_epoch -- --datasets corafull,nell
+//!
+//! Expected shape vs the paper (§V-C): Morphling wins everywhere except
+//! dense-feature Reddit-like workloads where the DGL analogue is close;
+//! the largest wins are on sparse/high-dimensional features (NELL-like).
+
+mod common;
+
+use common::{epoch_time, probe, reps_for};
+use morphling::baselines::{GatherScatterEngine, NonFusedEngine};
+use morphling::engine::native::NativeEngine;
+use morphling::engine::Engine;
+use morphling::graph::datasets;
+use morphling::model::Arch;
+use morphling::util::argparse::Args;
+use morphling::util::table::{fmt_secs, Table};
+
+fn main() {
+    let args = Args::from_env();
+    let only: Vec<String> = args
+        .get("datasets")
+        .map(|d| d.split(',').map(str::to_string).collect())
+        .unwrap_or_default();
+
+    println!("=== Fig 2/3: CPU per-epoch time (native vs PyG/DGL analogues) ===\n");
+    let mut lat = Table::new(vec!["dataset", "morphling", "pyg(gs)", "dgl(nonfused)"]);
+    let mut spd = Table::new(vec!["dataset", "vs pyg", "vs dgl", "sparsity-path"]);
+    let (mut geo_pyg, mut geo_dgl, mut n_geo) = (0.0f64, 0.0f64, 0usize);
+
+    for spec in datasets::all_specs() {
+        if !only.is_empty() && !only.contains(&spec.name.to_string()) {
+            continue;
+        }
+        let ds = datasets::load(&spec);
+        let mut native = NativeEngine::paper_default(&ds, Arch::Gcn, 42);
+        let mode = format!("{:?}", native.mode());
+        let p = probe(&mut native, &ds);
+        let (w, r) = reps_for(p);
+        let t_native = epoch_time(&mut native, &ds, w, r);
+        drop(native);
+
+        let mut gs = GatherScatterEngine::paper_default(&ds, 42);
+        let p = probe(&mut gs, &ds);
+        let (w, r) = reps_for(p);
+        let t_gs = epoch_time(&mut gs, &ds, w, r);
+        drop(gs);
+
+        let mut nf = NonFusedEngine::paper_default(&ds, 42);
+        let p = probe(&mut nf, &ds);
+        let (w, r) = reps_for(p);
+        let t_nf = epoch_time(&mut nf, &ds, w, r);
+        drop(nf);
+
+        lat.row(vec![
+            spec.name.to_string(),
+            fmt_secs(t_native),
+            fmt_secs(t_gs),
+            fmt_secs(t_nf),
+        ]);
+        spd.row(vec![
+            spec.name.to_string(),
+            format!("{:.2}x", t_gs / t_native),
+            format!("{:.2}x", t_nf / t_native),
+            mode,
+        ]);
+        geo_pyg += (t_gs / t_native).ln();
+        geo_dgl += (t_nf / t_native).ln();
+        n_geo += 1;
+        eprintln!("  [{}] done", spec.name);
+    }
+    println!("Per-epoch latency (Fig 3):");
+    print!("{}", lat.render());
+    println!("\nSpeedup over baselines (Fig 2):");
+    print!("{}", spd.render());
+    if n_geo > 0 {
+        println!(
+            "\ngeomean speedup: {:.2}x vs PyG-analogue, {:.2}x vs DGL-analogue (paper: 20.2x / 8.2x on real hw)",
+            (geo_pyg / n_geo as f64).exp(),
+            (geo_dgl / n_geo as f64).exp()
+        );
+    }
+}

@@ -1,0 +1,117 @@
+//! Kernel-level ablations (§Perf / DESIGN.md design-choice ablations):
+//!
+//! - cache-tiled SpMM (Algorithm 2) vs the naive row-wise kernel,
+//!   across feature widths — isolates the tiling + prefetch contribution;
+//! - implicit-transpose backward vs explicit-transpose SpMM — the paper's
+//!   CUDA memory-vs-contention trade-off (§IV-D-b);
+//! - sparse-feature CSR×dense vs dense GEMM at the bench sparsity;
+//! - fused Adam vs an unfused two-pass update.
+//!
+//!     cargo bench --bench kernels
+
+use morphling::graph::generator::{power_law_graph, GraphConfig};
+use morphling::kernels::gemm::gemm;
+use morphling::kernels::sparse_feat::spmm_csr_dense;
+use morphling::kernels::spmm::{spmm_implicit_transpose, spmm_naive, spmm_tiled};
+use morphling::kernels::update::{adam_step, AdamParams};
+use morphling::tensor::{CsrMatrix, Matrix};
+use morphling::util::proptest::{random_matrix, random_sparse_matrix};
+use morphling::util::table::{fmt_secs, Table};
+use morphling::util::timer::{bench_fn, median};
+use morphling::util::Rng;
+
+fn main() {
+    let mut rng = Rng::new(17);
+    let n = 8_000;
+    let g = power_law_graph(
+        &GraphConfig {
+            num_nodes: n,
+            num_edges: 160_000,
+            power_law_gamma: 2.3,
+            components: 1,
+        },
+        &mut rng,
+    );
+    println!("=== kernel ablations: N={n}, E={} ===\n", g.num_edges());
+
+    // --- SpMM tiled vs naive across feature widths ---
+    let mut t = Table::new(vec!["F", "naive", "tiled(+prefetch)", "speedup"]);
+    for f in [16usize, 32, 64, 128, 256] {
+        let x = Matrix::from_vec(n, f, random_matrix(&mut rng, n, f));
+        let mut y = Matrix::zeros(n, f);
+        let (_, s1) = bench_fn(1, 5, || spmm_naive(&g, &x, &mut y));
+        let (_, s2) = bench_fn(1, 5, || spmm_tiled(&g, &x, &mut y));
+        let (t1, t2) = (median(&s1), median(&s2));
+        t.row(vec![
+            f.to_string(),
+            fmt_secs(t1),
+            fmt_secs(t2),
+            format!("{:.2}x", t1 / t2),
+        ]);
+    }
+    println!("SpMM aggregation (Algorithm 2 ablation):");
+    print!("{}", t.render());
+
+    // --- backward strategies ---
+    let f = 64;
+    let x = Matrix::from_vec(n, f, random_matrix(&mut rng, n, f));
+    let mut y = Matrix::zeros(n, f);
+    let gt = g.transpose();
+    let (_, s_exp) = bench_fn(1, 5, || spmm_tiled(&gt, &x, &mut y));
+    let (_, s_imp) = bench_fn(1, 5, || spmm_implicit_transpose(&g, &x, &mut y));
+    println!("\nBackward aggregation at F={f} (§IV-D-b trade-off):");
+    println!(
+        "  explicit transpose (CSC, +{} structure bytes): {}",
+        gt.nbytes(),
+        fmt_secs(median(&s_exp))
+    );
+    println!(
+        "  implicit transpose (scatter, zero extra bytes): {}",
+        fmt_secs(median(&s_imp))
+    );
+
+    // --- sparse-feature transform vs dense GEMM ---
+    println!("\nSparse-feature transform (1024→32) vs dense GEMM:");
+    let (rows, fin, h) = (4_000, 1_024, 32);
+    let w = Matrix::from_vec(fin, h, random_matrix(&mut rng, fin, h));
+    let mut out = Matrix::zeros(rows, h);
+    let mut tt = Table::new(vec!["sparsity", "dense GEMM", "CSR SpMM", "speedup"]);
+    for s in [0.5, 0.8, 0.9, 0.95, 0.99] {
+        let xd = Matrix::from_vec(rows, fin, random_sparse_matrix(&mut rng, rows, fin, s));
+        let xs = CsrMatrix::from_dense(&xd);
+        let (_, sd) = bench_fn(1, 3, || gemm(&xd, &w, &mut out));
+        let (_, ss) = bench_fn(1, 3, || spmm_csr_dense(&xs, &w, &mut out));
+        let (td, ts) = (median(&sd), median(&ss));
+        tt.row(vec![
+            format!("{s:.2}"),
+            fmt_secs(td),
+            fmt_secs(ts),
+            format!("{:.2}x", td / ts),
+        ]);
+    }
+    print!("{}", tt.render());
+
+    // --- fused vs unfused Adam ---
+    let len = 1_000_000;
+    let mut p = random_matrix(&mut rng, 1000, 1000);
+    let gr = random_matrix(&mut rng, 1000, 1000);
+    let mut m = vec![0f32; len];
+    let mut v = vec![0f32; len];
+    let hp = AdamParams::default();
+    let (_, sf) = bench_fn(1, 5, || adam_step(&mut p, &gr, &mut m, &mut v, 3, &hp));
+    // unfused: two passes (moments, then params) — framework-style
+    let (_, su) = bench_fn(1, 5, || {
+        for i in 0..len {
+            m[i] = hp.beta1 * m[i] + (1.0 - hp.beta1) * gr[i];
+            v[i] = hp.beta2 * v[i] + (1.0 - hp.beta2) * gr[i] * gr[i];
+        }
+        let bc1 = 1.0 - hp.beta1.powi(3);
+        let bc2 = 1.0 - hp.beta2.powi(3);
+        for i in 0..len {
+            p[i] -= hp.lr * (m[i] / bc1) / ((v[i] / bc2).sqrt() + hp.eps);
+        }
+    });
+    println!("\nAdam update over {len} params (fused single-sweep vs two-pass):");
+    println!("  fused:   {}", fmt_secs(median(&sf)));
+    println!("  unfused: {}", fmt_secs(median(&su)));
+}

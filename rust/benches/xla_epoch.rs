@@ -1,0 +1,76 @@
+//! Figures 4 & 5: accelerator-path per-epoch time — the AOT-compiled
+//! fused (Pallas) training step vs the gather/segment-sum (PyG-analogue)
+//! step, both executed through the same Rust PJRT runtime.
+//!
+//!     cargo bench --bench xla_epoch -- --datasets corafull,ogbn-arxiv
+//!
+//! Requires `make artifacts`. Hardware substitution note (DESIGN.md §2):
+//! the CPU PJRT plugin runs Pallas kernels in interpret mode, whose
+//! per-edge dynamic-slice loops carry overhead a real TPU/Mosaic build
+//! does not; the fused column therefore reports the *interpret-mode*
+//! cost, and the estimated-TPU analysis lives in EXPERIMENTS.md §Perf.
+
+mod common;
+
+use morphling::engine::Engine;
+use morphling::graph::datasets;
+use morphling::runtime::engine::PjrtVariant;
+use morphling::runtime::{PjrtEngine, PjrtRuntime};
+use morphling::util::argparse::Args;
+use morphling::util::table::{fmt_secs, Table};
+use morphling::util::timer::{bench_fn, median};
+
+fn main() {
+    let args = Args::from_env();
+    let default = "corafull,ogbn-arxiv";
+    let names: Vec<&str> = args.get_or("datasets", default).split(',').collect();
+    let artifacts = std::path::PathBuf::from(args.get_or("artifacts", "artifacts"));
+
+    let mut rt = match PjrtRuntime::new(&artifacts) {
+        Ok(rt) => rt,
+        Err(e) => {
+            eprintln!("SKIP xla_epoch: {e:#}\n(run `make artifacts` first)");
+            return;
+        }
+    };
+
+    println!("=== Fig 4/5: accelerator path (PJRT), fused vs gather ===\n");
+    let mut t = Table::new(vec![
+        "dataset",
+        "fused(pallas)",
+        "gather(pyg-xla)",
+        "gather/fused",
+    ]);
+    for name in &names {
+        let Some(ds) = datasets::load_by_name(name) else {
+            eprintln!("unknown dataset {name}");
+            continue;
+        };
+        let mut times = Vec::new();
+        let mut skip = false;
+        for variant in [PjrtVariant::Fused, PjrtVariant::Gather] {
+            match PjrtEngine::new(&mut rt, &ds, variant, 42) {
+                Ok(mut eng) => {
+                    let (_, samples) = bench_fn(1, 3, || eng.train_epoch(&ds));
+                    times.push(median(&samples));
+                }
+                Err(e) => {
+                    eprintln!("  [{name}] no artifact for {variant:?}: {e:#}");
+                    skip = true;
+                    break;
+                }
+            }
+        }
+        if skip {
+            continue;
+        }
+        t.row(vec![
+            name.to_string(),
+            fmt_secs(times[0]),
+            fmt_secs(times[1]),
+            format!("{:.2}x", times[1] / times[0]),
+        ]);
+        eprintln!("  [{name}] done");
+    }
+    print!("{}", t.render());
+}

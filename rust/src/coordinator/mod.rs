@@ -1,0 +1,186 @@
+//! The Morphling coordinator — the front door tying the whole system
+//! together, playing the role of the paper's generated training program
+//! (Listing 1): load dataset → inspect feature statistics → select the
+//! execution path → instantiate the backend engine → drive the training
+//! loop.
+
+use crate::baselines::{GatherScatterEngine, NonFusedEngine};
+use crate::engine::native::NativeEngine;
+use crate::engine::sparsity::{calibrate_gamma, decide, SparsityPolicy};
+use crate::engine::{Engine, EngineKind};
+use crate::graph::{datasets, Dataset};
+use crate::kernels::update::AdamParams;
+use crate::model::{Arch, ModelConfig};
+use crate::optim::OptKind;
+use crate::runtime::engine::PjrtVariant;
+use crate::runtime::PjrtEngine;
+use crate::train::{train, TrainConfig, TrainReport};
+use anyhow::{anyhow, Result};
+use std::path::PathBuf;
+
+/// The DSL-level training specification (Listing 1 analogue).
+#[derive(Clone, Debug)]
+pub struct TrainSpec {
+    pub dataset: String,
+    pub arch: Arch,
+    pub engine: EngineKind,
+    pub epochs: usize,
+    pub optimizer: OptKind,
+    pub lr: f32,
+    /// Sparsity threshold τ; `None` = paper default 0.80; `Some(t)` pins it.
+    pub tau: Option<f64>,
+    /// Measure γ with the offline microbenchmark instead of the default.
+    pub calibrate: bool,
+    pub seed: u64,
+    pub artifacts_dir: PathBuf,
+    pub log: bool,
+}
+
+impl Default for TrainSpec {
+    fn default() -> Self {
+        TrainSpec {
+            dataset: "corafull".to_string(),
+            arch: Arch::Gcn,
+            engine: EngineKind::Native,
+            epochs: 100,
+            optimizer: OptKind::Adam,
+            lr: 0.01,
+            tau: None,
+            calibrate: false,
+            seed: 42,
+            artifacts_dir: PathBuf::from("artifacts"),
+            log: false,
+        }
+    }
+}
+
+impl TrainSpec {
+    /// Resolve the sparsity policy: pinned τ, calibrated γ, or the paper
+    /// default.
+    pub fn policy(&self) -> SparsityPolicy {
+        if let Some(tau) = self.tau {
+            SparsityPolicy::from_tau(tau)
+        } else if self.calibrate {
+            SparsityPolicy::from_gamma(calibrate_gamma(self.seed))
+        } else {
+            SparsityPolicy::paper_default()
+        }
+    }
+}
+
+/// Build the engine named by the spec over a loaded dataset.
+pub fn build_engine(spec: &TrainSpec, ds: &Dataset) -> Result<Box<dyn Engine>> {
+    let config = ModelConfig::paper_default(spec.arch, ds.spec.features, ds.spec.classes);
+    let hp = AdamParams {
+        lr: spec.lr,
+        ..Default::default()
+    };
+    Ok(match spec.engine {
+        EngineKind::Native => Box::new(NativeEngine::new(
+            ds,
+            &config,
+            spec.optimizer,
+            hp,
+            spec.policy(),
+            spec.seed,
+        )),
+        EngineKind::GatherScatter => Box::new(GatherScatterEngine::paper_default(ds, spec.seed)),
+        EngineKind::NonFused => Box::new(NonFusedEngine::paper_default(ds, spec.seed)),
+        EngineKind::Pjrt => Box::new(PjrtEngine::from_artifacts(
+            &spec.artifacts_dir,
+            ds,
+            PjrtVariant::Fused,
+            spec.seed,
+        )?),
+    })
+}
+
+/// Outcome of a coordinated run.
+pub struct RunOutcome {
+    pub report: TrainReport,
+    pub engine_name: &'static str,
+    pub sparsity: f64,
+    pub mode: &'static str,
+    pub peak_bytes: usize,
+}
+
+/// The full coordinated flow: load → decide → train → report.
+pub fn run(spec: &TrainSpec) -> Result<RunOutcome> {
+    let ds = datasets::load_by_name(&spec.dataset)
+        .ok_or_else(|| anyhow!("unknown dataset '{}' (see `morphling info`)", spec.dataset))?;
+    let decision = decide(&ds.features, spec.policy());
+    if spec.log {
+        println!(
+            "dataset {}: N={} E={} F={} s={:.3} τ={:.2} → {:?} path",
+            ds.spec.name,
+            ds.spec.nodes,
+            ds.graph.num_edges(),
+            ds.spec.features,
+            decision.s,
+            decision.policy.tau,
+            decision.mode
+        );
+    }
+    let mut engine = build_engine(spec, &ds)?;
+    let report = train(
+        engine.as_mut(),
+        &ds,
+        &TrainConfig {
+            epochs: spec.epochs,
+            eval_every: if spec.log { 10 } else { 0 },
+            log: spec.log,
+        },
+    );
+    Ok(RunOutcome {
+        engine_name: engine.name(),
+        sparsity: decision.s,
+        mode: match decision.mode {
+            crate::engine::sparsity::ExecutionMode::Sparse => "sparse",
+            crate::engine::sparsity::ExecutionMode::Dense => "dense",
+        },
+        peak_bytes: engine.peak_bytes(),
+        report,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn run_native_on_small_dataset() {
+        let spec = TrainSpec {
+            dataset: "corafull".to_string(),
+            epochs: 3,
+            ..Default::default()
+        };
+        let out = run(&spec).unwrap();
+        assert_eq!(out.engine_name, "morphling-native");
+        assert_eq!(out.report.epochs.len(), 3);
+        assert!(out.report.final_loss().is_finite());
+        // corafull is 95% sparse → sparse path at τ=0.8
+        assert_eq!(out.mode, "sparse");
+        assert!(out.sparsity > 0.9);
+    }
+
+    #[test]
+    fn unknown_dataset_errors() {
+        let spec = TrainSpec {
+            dataset: "nope".into(),
+            ..Default::default()
+        };
+        assert!(run(&spec).is_err());
+    }
+
+    #[test]
+    fn tau_override_forces_dense() {
+        let spec = TrainSpec {
+            dataset: "corafull".into(),
+            epochs: 1,
+            tau: Some(1.01),
+            ..Default::default()
+        };
+        let out = run(&spec).unwrap();
+        assert_eq!(out.mode, "dense");
+    }
+}

@@ -1,0 +1,105 @@
+//! Execution engines — the runtime half of Morphling's code synthesis.
+//!
+//! The paper lowers one DSL program to backend-specialized implementations;
+//! here each backend is an [`Engine`] implementation over the shared model
+//! parameters:
+//!
+//! - [`native::NativeEngine`] — Morphling's fused, sparsity-aware CPU
+//!   backend (cache-tiled SpMM, no edge-tensor materialization).
+//! - [`crate::baselines::GatherScatterEngine`] — the PyG analogue
+//!   (gather-scatter with `O(|E|·F)` message tensors).
+//! - [`crate::baselines::NonFusedEngine`] — the DGL analogue (CSR SpMM but
+//!   dense-only features, unfused stages, duplicate adjacency formats).
+//! - [`crate::runtime::PjrtEngine`] — the accelerator analogue: the whole
+//!   fused training step AOT-compiled from JAX/Pallas, executed via PJRT.
+//!
+//! [`sparsity`] implements the dense/sparse dispatch of paper §IV-B.
+
+pub mod sparsity;
+pub mod native;
+
+use crate::graph::Dataset;
+use crate::train::EpochStats;
+
+/// Which node mask to evaluate against.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Mask {
+    Train,
+    Val,
+    Test,
+}
+
+impl Mask {
+    pub fn select<'a>(&self, ds: &'a Dataset) -> &'a [bool] {
+        match self {
+            Mask::Train => &ds.train_mask,
+            Mask::Val => &ds.val_mask,
+            Mask::Test => &ds.test_mask,
+        }
+    }
+}
+
+/// A training backend: one full-batch epoch = forward + backward + update.
+pub trait Engine {
+    /// Short identifier used in benchmark tables.
+    fn name(&self) -> &'static str;
+
+    /// Run one training epoch (forward, backward, optimizer update) and
+    /// return the loss/accuracy/phase breakdown.
+    fn train_epoch(&mut self, ds: &Dataset) -> EpochStats;
+
+    /// Forward-only evaluation: `(loss, accuracy)` on the given mask.
+    fn evaluate(&mut self, ds: &Dataset, mask: Mask) -> (f64, f64);
+
+    /// Analytic model of the engine's peak resident bytes (its live-set:
+    /// parameters, optimizer state, activations, transient buffers, graph
+    /// copies). Reproduces the Table III comparison.
+    fn peak_bytes(&self) -> usize;
+}
+
+/// Identifier for constructing engines from CLI strings.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EngineKind {
+    /// Morphling native (fused, sparsity-aware).
+    Native,
+    /// PyG-analogue gather-scatter baseline.
+    GatherScatter,
+    /// DGL-analogue non-fused baseline.
+    NonFused,
+    /// AOT XLA/PJRT fused-step engine.
+    Pjrt,
+}
+
+impl EngineKind {
+    pub fn parse(s: &str) -> Option<EngineKind> {
+        match s.to_ascii_lowercase().as_str() {
+            "native" | "morphling" => Some(EngineKind::Native),
+            "gather-scatter" | "gs" | "pyg" => Some(EngineKind::GatherScatter),
+            "nonfused" | "dgl" => Some(EngineKind::NonFused),
+            "pjrt" | "xla" => Some(EngineKind::Pjrt),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            EngineKind::Native => "morphling-native",
+            EngineKind::GatherScatter => "gather-scatter(pyg)",
+            EngineKind::NonFused => "nonfused(dgl)",
+            EngineKind::Pjrt => "morphling-pjrt",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kind_parse() {
+        assert_eq!(EngineKind::parse("pyg"), Some(EngineKind::GatherScatter));
+        assert_eq!(EngineKind::parse("Native"), Some(EngineKind::Native));
+        assert_eq!(EngineKind::parse("xla"), Some(EngineKind::Pjrt));
+        assert_eq!(EngineKind::parse("zzz"), None);
+    }
+}

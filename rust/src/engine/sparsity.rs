@@ -1,0 +1,164 @@
+//! The sparsity-aware execution engine's decision model (paper §IV-B).
+//!
+//! At load time the runtime computes feature sparsity `s = 1 − nnz/(N·F)`
+//! and dispatches to the sparse path iff `s ≥ τ` where `τ = 1 − γ` and
+//! `γ = η_sparse / η_dense` is the hardware **efficiency ratio** — the
+//! sustained-throughput ratio of the irregular SpMM kernel to the regular
+//! GEMM kernel. γ can be taken from the paper's default (≈0.20 → τ≈0.80) or
+//! measured once per machine by [`calibrate_gamma`]'s microbenchmark, which
+//! is what the paper calls "offline profiling on our testbed".
+
+use crate::kernels::{gemm::gemm, sparse_feat::spmm_csr_dense};
+use crate::tensor::{sparsity, CsrMatrix, Matrix};
+use crate::util::proptest::{random_matrix, random_sparse_matrix};
+use crate::util::{timer::bench_fn, Rng};
+
+/// Dense vs sparse feature-processing path (paper Algorithm 1).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ExecutionMode {
+    Dense,
+    Sparse,
+}
+
+/// Decision-model parameters.
+#[derive(Clone, Copy, Debug)]
+pub struct SparsityPolicy {
+    /// Efficiency ratio γ = η_sparse/η_dense.
+    pub gamma: f64,
+    /// Dispatch threshold τ. Invariant: `τ = 1 − γ`.
+    pub tau: f64,
+}
+
+impl SparsityPolicy {
+    /// The paper's default from offline profiling: γ≈0.20, τ≈0.80.
+    pub fn paper_default() -> SparsityPolicy {
+        SparsityPolicy {
+            gamma: 0.20,
+            tau: 0.80,
+        }
+    }
+
+    /// Build from a measured γ.
+    pub fn from_gamma(gamma: f64) -> SparsityPolicy {
+        SparsityPolicy {
+            gamma,
+            tau: (1.0 - gamma).clamp(0.0, 1.0),
+        }
+    }
+
+    /// Build from an explicit threshold (the paper's "tunable τ").
+    pub fn from_tau(tau: f64) -> SparsityPolicy {
+        SparsityPolicy {
+            gamma: 1.0 - tau,
+            tau,
+        }
+    }
+
+    /// The dispatch rule: sparse iff `s ≥ τ` (Eq. 1 rearranged).
+    pub fn select(&self, s: f64) -> ExecutionMode {
+        if s >= self.tau {
+            ExecutionMode::Sparse
+        } else {
+            ExecutionMode::Dense
+        }
+    }
+
+    /// Predicted sparse-over-dense speedup at sparsity `s` from the work/
+    /// throughput model `T_sparse/T_dense = (1−s)/γ` (Eq. 2–5).
+    pub fn predicted_speedup(&self, s: f64) -> f64 {
+        self.gamma / (1.0 - s).max(1e-9)
+    }
+}
+
+/// Decision record for one dataset (logged by the coordinator).
+#[derive(Clone, Debug)]
+pub struct SparsityDecision {
+    pub s: f64,
+    pub policy: SparsityPolicy,
+    pub mode: ExecutionMode,
+}
+
+/// Inspect features and select the path (Algorithm 1 Phase 1).
+pub fn decide(features: &Matrix, policy: SparsityPolicy) -> SparsityDecision {
+    let s = sparsity(&features.data);
+    SparsityDecision {
+        s,
+        policy,
+        mode: policy.select(s),
+    }
+}
+
+/// Offline microbenchmark measuring γ on this machine: times a dense GEMM
+/// vs a CSR SpMM **of equal algorithmic work** (the sparse operand has
+/// `1−s = 1/8` density, and its time is scaled to per-FLOP throughput).
+///
+/// Returns the measured efficiency ratio γ = η_sparse/η_dense.
+pub fn calibrate_gamma(seed: u64) -> f64 {
+    let (n, f, h) = (256, 256, 64);
+    let density = 0.125f64;
+    let mut rng = Rng::new(seed);
+    let xd = Matrix::from_vec(n, f, random_matrix(&mut rng, n, f));
+    let xs_dense = Matrix::from_vec(n, f, random_sparse_matrix(&mut rng, n, f, 1.0 - density));
+    let xs = CsrMatrix::from_dense(&xs_dense);
+    let w = Matrix::from_vec(f, h, random_matrix(&mut rng, f, h));
+    let mut y = Matrix::zeros(n, h);
+
+    let (t_dense, _) = bench_fn(2, 5, || gemm(&xd, &w, &mut y));
+    let (t_sparse, _) = bench_fn(2, 5, || spmm_csr_dense(&xs, &w, &mut y));
+
+    // throughput = work / time; dense work = 2·n·f·h, sparse = 2·nnz·h
+    let dense_flops = 2.0 * n as f64 * f as f64 * h as f64;
+    let sparse_flops = 2.0 * xs.nnz() as f64 * h as f64;
+    let eta_dense = dense_flops / t_dense.max(1e-12);
+    let eta_sparse = sparse_flops / t_sparse.max(1e-12);
+    (eta_sparse / eta_dense).clamp(0.01, 1.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_default_threshold() {
+        let p = SparsityPolicy::paper_default();
+        assert_eq!(p.select(0.85), ExecutionMode::Sparse);
+        assert_eq!(p.select(0.79), ExecutionMode::Dense);
+        assert_eq!(p.select(0.80), ExecutionMode::Sparse); // s ≥ τ inclusive
+    }
+
+    #[test]
+    fn tau_gamma_invariant() {
+        let p = SparsityPolicy::from_gamma(0.3);
+        assert!((p.tau - 0.7).abs() < 1e-12);
+        let q = SparsityPolicy::from_tau(0.9);
+        assert!((q.gamma - 0.1).abs() < 1e-12);
+    }
+
+    #[test]
+    fn predicted_speedup_crosses_one_at_tau() {
+        let p = SparsityPolicy::paper_default();
+        assert!((p.predicted_speedup(p.tau) - 1.0).abs() < 1e-9);
+        assert!(p.predicted_speedup(0.99) > 1.0);
+        assert!(p.predicted_speedup(0.5) < 1.0);
+    }
+
+    #[test]
+    fn decide_uses_feature_stats() {
+        let mut dense = Matrix::zeros(10, 10);
+        dense.data.iter_mut().for_each(|v| *v = 1.0);
+        let d = decide(&dense, SparsityPolicy::paper_default());
+        assert_eq!(d.mode, ExecutionMode::Dense);
+        assert_eq!(d.s, 0.0);
+
+        let sparse = Matrix::zeros(10, 10); // all zeros → s = 1
+        let d = decide(&sparse, SparsityPolicy::paper_default());
+        assert_eq!(d.mode, ExecutionMode::Sparse);
+    }
+
+    #[test]
+    fn calibration_produces_plausible_gamma() {
+        let g = calibrate_gamma(7);
+        // sparse kernels are slower per FLOP than dense GEMM but not by >100×
+        assert!((0.01..=1.0).contains(&g), "gamma={g}");
+    }
+}

@@ -1,0 +1,246 @@
+//! CSR adjacency structure — the canonical graph layout for Morphling's
+//! aggregation kernels (paper Algorithm 2/3 both stream `row_ptr`/`col_idx`).
+//!
+//! Edges carry f32 weights; for GCN these hold the symmetric normalization
+//! coefficients `1/√(d̂_u·d̂_v)` so aggregation is a pure weighted SpMM.
+
+/// A directed graph in CSR form. For undirected graphs both edge directions
+/// are stored explicitly.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Graph {
+    pub num_nodes: usize,
+    /// `num_nodes + 1` offsets into `col_idx` / `weights`.
+    pub row_ptr: Vec<u32>,
+    /// Neighbor (source) node ids per edge.
+    pub col_idx: Vec<u32>,
+    /// Per-edge aggregation weight (1.0 for unweighted graphs).
+    pub weights: Vec<f32>,
+}
+
+impl Graph {
+    /// Build from an edge list (u → v). Duplicate edges are kept (callers
+    /// dedup first if needed); neighbor lists end up sorted by source order.
+    pub fn from_edges(num_nodes: usize, edges: &[(u32, u32)]) -> Graph {
+        Self::from_weighted_edges(num_nodes, edges.iter().map(|&(u, v)| (u, v, 1.0f32)))
+    }
+
+    /// Build from weighted edges (u → v, w).
+    pub fn from_weighted_edges<I>(num_nodes: usize, edges: I) -> Graph
+    where
+        I: IntoIterator<Item = (u32, u32, f32)>,
+        I::IntoIter: Clone,
+    {
+        let iter = edges.into_iter();
+        let mut row_ptr = vec![0u32; num_nodes + 1];
+        for (u, _, _) in iter.clone() {
+            debug_assert!((u as usize) < num_nodes);
+            row_ptr[u as usize + 1] += 1;
+        }
+        for i in 0..num_nodes {
+            row_ptr[i + 1] += row_ptr[i];
+        }
+        let ne = *row_ptr.last().unwrap() as usize;
+        let mut col_idx = vec![0u32; ne];
+        let mut weights = vec![0.0f32; ne];
+        let mut cursor = row_ptr.clone();
+        for (u, v, w) in iter {
+            let at = cursor[u as usize] as usize;
+            col_idx[at] = v;
+            weights[at] = w;
+            cursor[u as usize] += 1;
+        }
+        Graph {
+            num_nodes,
+            row_ptr,
+            col_idx,
+            weights,
+        }
+    }
+
+    #[inline]
+    pub fn num_edges(&self) -> usize {
+        self.col_idx.len()
+    }
+
+    #[inline]
+    pub fn degree(&self, u: usize) -> usize {
+        (self.row_ptr[u + 1] - self.row_ptr[u]) as usize
+    }
+
+    /// Neighbor ids of `u`.
+    #[inline]
+    pub fn neighbors(&self, u: usize) -> &[u32] {
+        &self.col_idx[self.row_ptr[u] as usize..self.row_ptr[u + 1] as usize]
+    }
+
+    /// Neighbor weights of `u` (parallel to `neighbors`).
+    #[inline]
+    pub fn neighbor_weights(&self, u: usize) -> &[f32] {
+        &self.weights[self.row_ptr[u] as usize..self.row_ptr[u + 1] as usize]
+    }
+
+    /// Reverse (transposed) graph — CSC of the adjacency, used by the
+    /// implicit-transpose backward and by partition ghost analysis.
+    pub fn transpose(&self) -> Graph {
+        let edges: Vec<(u32, u32, f32)> = (0..self.num_nodes)
+            .flat_map(|u| {
+                self.neighbors(u)
+                    .iter()
+                    .zip(self.neighbor_weights(u))
+                    .map(move |(&v, &w)| (v, u as u32, w))
+            })
+            .collect();
+        Graph::from_weighted_edges(self.num_nodes, edges)
+    }
+
+    /// Add a self-loop to every node (GCN's Â = A + I) with weight 1.
+    pub fn with_self_loops(&self) -> Graph {
+        let mut edges: Vec<(u32, u32, f32)> = (0..self.num_nodes)
+            .flat_map(|u| {
+                self.neighbors(u)
+                    .iter()
+                    .zip(self.neighbor_weights(u))
+                    .map(move |(&v, &w)| (u as u32, v, w))
+            })
+            .collect();
+        for u in 0..self.num_nodes as u32 {
+            edges.push((u, u, 1.0));
+        }
+        Graph::from_weighted_edges(self.num_nodes, edges)
+    }
+
+    /// Replace edge weights with GCN symmetric normalization
+    /// `w_uv = 1/√(deg(u)·deg(v))` computed over the current structure.
+    pub fn gcn_normalized(&self) -> Graph {
+        let deg: Vec<f32> = (0..self.num_nodes)
+            .map(|u| self.degree(u).max(1) as f32)
+            .collect();
+        let mut g = self.clone();
+        for u in 0..self.num_nodes {
+            let du = deg[u];
+            for e in g.row_ptr[u] as usize..g.row_ptr[u + 1] as usize {
+                let v = g.col_idx[e] as usize;
+                g.weights[e] = 1.0 / (du * deg[v]).sqrt();
+            }
+        }
+        g
+    }
+
+    /// Mean degree.
+    pub fn avg_degree(&self) -> f64 {
+        self.num_edges() as f64 / self.num_nodes.max(1) as f64
+    }
+
+    /// Maximum degree (hub size — drives the straggler analysis).
+    pub fn max_degree(&self) -> usize {
+        (0..self.num_nodes).map(|u| self.degree(u)).max().unwrap_or(0)
+    }
+
+    /// Structural byte footprint.
+    pub fn nbytes(&self) -> usize {
+        self.row_ptr.len() * 4 + self.col_idx.len() * 4 + self.weights.len() * 4
+    }
+
+    /// Check structural invariants.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.row_ptr.len() != self.num_nodes + 1 {
+            return Err("row_ptr length".into());
+        }
+        if self.row_ptr[0] != 0 || *self.row_ptr.last().unwrap() as usize != self.col_idx.len() {
+            return Err("row_ptr endpoints".into());
+        }
+        for w in self.row_ptr.windows(2) {
+            if w[0] > w[1] {
+                return Err("row_ptr not monotone".into());
+            }
+        }
+        if self.col_idx.iter().any(|&v| v as usize >= self.num_nodes) {
+            return Err("col_idx out of range".into());
+        }
+        if self.col_idx.len() != self.weights.len() {
+            return Err("weights length".into());
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{check, random_edges};
+
+    fn triangle() -> Graph {
+        // 0→1, 1→2, 2→0, 0→2
+        Graph::from_edges(3, &[(0, 1), (1, 2), (2, 0), (0, 2)])
+    }
+
+    #[test]
+    fn from_edges_builds_csr() {
+        let g = triangle();
+        g.validate().unwrap();
+        assert_eq!(g.num_edges(), 4);
+        assert_eq!(g.degree(0), 2);
+        assert_eq!(g.neighbors(0), &[1, 2]);
+        assert_eq!(g.neighbors(1), &[2]);
+    }
+
+    #[test]
+    fn transpose_twice_is_identity_structure() {
+        let g = triangle();
+        let tt = g.transpose().transpose();
+        // Same adjacency sets per node (order may differ within a row).
+        for u in 0..3 {
+            let mut a = g.neighbors(u).to_vec();
+            let mut b = tt.neighbors(u).to_vec();
+            a.sort_unstable();
+            b.sort_unstable();
+            assert_eq!(a, b);
+        }
+    }
+
+    #[test]
+    fn self_loops_added_once() {
+        let g = triangle().with_self_loops();
+        assert_eq!(g.num_edges(), 7);
+        for u in 0..3 {
+            assert!(g.neighbors(u).contains(&(u as u32)));
+        }
+    }
+
+    #[test]
+    fn gcn_norm_weights_symmetric_formula() {
+        let g = triangle().with_self_loops().gcn_normalized();
+        g.validate().unwrap();
+        // node 0 has degree 3 (1,2,self); node 1 has degree 2.
+        let idx = g.neighbors(0).iter().position(|&v| v == 1).unwrap();
+        let w = g.neighbor_weights(0)[idx];
+        assert!((w - 1.0 / (3.0f32 * 2.0).sqrt()).abs() < 1e-6);
+    }
+
+    #[test]
+    fn prop_transpose_preserves_edge_count() {
+        check(0x61, 25, |rng| {
+            let n = 2 + rng.below(40);
+            let edges = random_edges(rng, n, 4);
+            let g = Graph::from_edges(n, &edges);
+            g.validate().unwrap();
+            let t = g.transpose();
+            t.validate().unwrap();
+            assert_eq!(g.num_edges(), t.num_edges());
+            // every edge is reversed exactly once
+            for u in 0..n {
+                for &v in g.neighbors(u) {
+                    assert!(t.neighbors(v as usize).contains(&(u as u32)));
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn empty_graph() {
+        let g = Graph::from_edges(5, &[]);
+        g.validate().unwrap();
+        assert_eq!(g.num_edges(), 0);
+        assert_eq!(g.max_degree(), 0);
+    }
+}

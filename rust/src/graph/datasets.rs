@@ -1,0 +1,243 @@
+//! The eleven evaluation datasets (paper Table II) as scaled synthetic
+//! replicas.
+//!
+//! Each [`DatasetSpec`] records the **paper's real statistics** (for the
+//! report tables) and the **scaled statistics** actually synthesized on this
+//! testbed. Scaling preserves: power-law degree skew, average degree
+//! ordering, feature-dimensionality regime (topology-bound vs feature-bound),
+//! and feature sparsity — the four statistics the paper's results hinge on
+//! (see DESIGN.md §2/§5). Node counts are scaled ~4–100×, features capped at
+//! 4096 (NELL), so a full benchmark sweep fits a single-core CPU testbed.
+
+use super::csr::Graph;
+use super::generator::{self, GraphConfig};
+use crate::tensor::Matrix;
+use crate::util::Rng;
+
+/// Static description of one benchmark dataset.
+#[derive(Clone, Debug)]
+pub struct DatasetSpec {
+    pub name: &'static str,
+    // --- paper (real) statistics, for reporting ---
+    pub real_nodes: usize,
+    pub real_edges: usize,
+    pub real_features: usize,
+    // --- scaled synthesis parameters ---
+    pub nodes: usize,
+    pub edges: usize,
+    pub features: usize,
+    pub classes: usize,
+    /// Target feature sparsity `s` (fraction of zeros).
+    pub feat_sparsity: f64,
+    /// Degree-distribution exponent.
+    pub gamma: f64,
+    /// Forced number of disconnected components (exercises partitioner Phase II).
+    pub components: usize,
+}
+
+impl DatasetSpec {
+    /// Scale factor on node count vs the real dataset.
+    pub fn node_scale(&self) -> f64 {
+        self.real_nodes as f64 / self.nodes as f64
+    }
+}
+
+/// A fully materialized dataset: graph + features + labels + split masks.
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    pub spec: DatasetSpec,
+    /// GCN-normalized adjacency with self-loops (aggregation operand).
+    pub graph: Graph,
+    /// Raw adjacency (no self loops) — partitioner input.
+    pub raw_graph: Graph,
+    pub features: Matrix,
+    pub labels: Vec<u32>,
+    /// Node-level boolean masks.
+    pub train_mask: Vec<bool>,
+    pub val_mask: Vec<bool>,
+    pub test_mask: Vec<bool>,
+}
+
+/// All eleven benchmark configurations, ordered as in Table II
+/// (AmazonComputers appears in the paper's GPU evaluation §V-D).
+pub fn all_specs() -> Vec<DatasetSpec> {
+    vec![
+        DatasetSpec {
+            name: "corafull",
+            real_nodes: 19_793, real_edges: 126_842, real_features: 8_710,
+            nodes: 4_000, edges: 26_000, features: 1_024, classes: 70,
+            feat_sparsity: 0.95, gamma: 2.6, components: 1,
+        },
+        DatasetSpec {
+            name: "physics",
+            real_nodes: 34_493, real_edges: 495_924, real_features: 8_415,
+            nodes: 6_000, edges: 86_000, features: 1_024, classes: 5,
+            feat_sparsity: 0.90, gamma: 2.5, components: 1,
+        },
+        DatasetSpec {
+            name: "ppi",
+            real_nodes: 56_944, real_edges: 1_612_348, real_features: 50,
+            nodes: 8_000, edges: 226_000, features: 50, classes: 121,
+            feat_sparsity: 0.20, gamma: 2.4, components: 20, // PPI = 24 separate graphs
+        },
+        DatasetSpec {
+            name: "nell",
+            real_nodes: 65_755, real_edges: 251_550, real_features: 61_278,
+            nodes: 8_000, edges: 30_000, features: 4_096, classes: 64,
+            feat_sparsity: 0.992, gamma: 2.7, components: 1,
+        },
+        DatasetSpec {
+            name: "flickr",
+            real_nodes: 89_250, real_edges: 899_756, real_features: 500,
+            nodes: 11_000, edges: 110_000, features: 500, classes: 7,
+            feat_sparsity: 0.55, gamma: 2.4, components: 1,
+        },
+        DatasetSpec {
+            name: "reddit",
+            real_nodes: 232_965, real_edges: 114_615_892, real_features: 602,
+            nodes: 12_000, edges: 1_400_000, features: 602, classes: 41,
+            feat_sparsity: 0.0, gamma: 2.2, components: 1, // dense features: DGL's best case
+        },
+        DatasetSpec {
+            name: "yelp",
+            real_nodes: 716_847, real_edges: 13_954_819, real_features: 300,
+            nodes: 20_000, edges: 380_000, features: 300, classes: 100,
+            feat_sparsity: 0.30, gamma: 2.4, components: 1,
+        },
+        DatasetSpec {
+            name: "amazonproducts",
+            real_nodes: 1_569_960, real_edges: 264_339_468, real_features: 200,
+            nodes: 24_000, edges: 2_000_000, features: 200, classes: 107,
+            feat_sparsity: 0.20, gamma: 2.1, components: 1, // avg degree ~83: memory stress
+        },
+        DatasetSpec {
+            name: "ogbn-arxiv",
+            real_nodes: 169_343, real_edges: 1_166_243, real_features: 128,
+            nodes: 10_000, edges: 68_000, features: 128, classes: 40,
+            feat_sparsity: 0.0, gamma: 2.5, components: 1,
+        },
+        DatasetSpec {
+            name: "ogbn-products",
+            real_nodes: 2_449_029, real_edges: 61_859_140, real_features: 100,
+            nodes: 22_000, edges: 540_000, features: 100, classes: 47,
+            feat_sparsity: 0.0, gamma: 2.3, components: 1,
+        },
+        DatasetSpec {
+            name: "amazoncomputers",
+            real_nodes: 13_752, real_edges: 491_722, real_features: 767,
+            nodes: 6_000, edges: 200_000, features: 767, classes: 10,
+            feat_sparsity: 0.65, gamma: 2.3, components: 1,
+        },
+    ]
+}
+
+/// Look up a spec by (case-insensitive) name.
+pub fn spec_by_name(name: &str) -> Option<DatasetSpec> {
+    let lower = name.to_ascii_lowercase();
+    all_specs().into_iter().find(|s| s.name == lower)
+}
+
+/// Deterministically synthesize the dataset for a spec.
+///
+/// The seed is derived from the dataset name so every binary in the repo
+/// sees the identical graph.
+pub fn load(spec: &DatasetSpec) -> Dataset {
+    let seed = spec
+        .name
+        .bytes()
+        .fold(0xD47A5E7u64, |h, b| h.wrapping_mul(31).wrapping_add(b as u64));
+    let mut rng = Rng::new(seed);
+    let cfg = GraphConfig {
+        num_nodes: spec.nodes,
+        num_edges: spec.edges,
+        power_law_gamma: spec.gamma,
+        components: spec.components,
+    };
+    let raw_graph = generator::power_law_graph(&cfg, &mut rng);
+    let graph = raw_graph.with_self_loops().gcn_normalized();
+    let features = generator::features(spec.nodes, spec.features, spec.feat_sparsity, &mut rng);
+    let labels = generator::labels(&features, &raw_graph, spec.classes, &mut rng);
+
+    // 60/20/20 split, deterministic per node id hash.
+    let mut train_mask = vec![false; spec.nodes];
+    let mut val_mask = vec![false; spec.nodes];
+    let mut test_mask = vec![false; spec.nodes];
+    for u in 0..spec.nodes {
+        match rng.below(10) {
+            0..=5 => train_mask[u] = true,
+            6..=7 => val_mask[u] = true,
+            _ => test_mask[u] = true,
+        }
+    }
+    Dataset {
+        spec: spec.clone(),
+        graph,
+        raw_graph,
+        features,
+        labels,
+        train_mask,
+        val_mask,
+        test_mask,
+    }
+}
+
+/// Convenience: load by name.
+pub fn load_by_name(name: &str) -> Option<Dataset> {
+    spec_by_name(name).map(|s| load(&s))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn eleven_specs_unique_names() {
+        let specs = all_specs();
+        assert_eq!(specs.len(), 11);
+        let names: std::collections::HashSet<_> = specs.iter().map(|s| s.name).collect();
+        assert_eq!(names.len(), 11);
+    }
+
+    #[test]
+    fn load_small_dataset() {
+        let spec = spec_by_name("corafull").unwrap();
+        let ds = load(&spec);
+        assert_eq!(ds.features.rows, spec.nodes);
+        assert_eq!(ds.features.cols, spec.features);
+        assert_eq!(ds.labels.len(), spec.nodes);
+        ds.graph.validate().unwrap();
+        ds.raw_graph.validate().unwrap();
+        // sparsity within 1% of target
+        let s = crate::tensor::sparsity(&ds.features.data);
+        assert!((s - spec.feat_sparsity).abs() < 0.01, "s={s}");
+        // self-loops present in normalized graph
+        assert!(ds.graph.num_edges() >= ds.raw_graph.num_edges() + spec.nodes);
+    }
+
+    #[test]
+    fn masks_partition_nodes() {
+        let ds = load_by_name("ogbn-arxiv").unwrap();
+        for u in 0..ds.spec.nodes {
+            let cnt = ds.train_mask[u] as u8 + ds.val_mask[u] as u8 + ds.test_mask[u] as u8;
+            assert_eq!(cnt, 1);
+        }
+        let ntrain = ds.train_mask.iter().filter(|x| **x).count();
+        assert!(ntrain > ds.spec.nodes / 3);
+    }
+
+    #[test]
+    fn deterministic_load() {
+        let spec = spec_by_name("ppi").unwrap();
+        let a = load(&spec);
+        let b = load(&spec);
+        assert_eq!(a.graph, b.graph);
+        assert_eq!(a.features.data, b.features.data);
+        assert_eq!(a.labels, b.labels);
+    }
+
+    #[test]
+    fn unknown_name_is_none() {
+        assert!(spec_by_name("nope").is_none());
+        assert!(spec_by_name("NELL").is_some()); // case-insensitive
+    }
+}

@@ -1,0 +1,339 @@
+//! Synthetic graph + feature synthesis.
+//!
+//! The paper evaluates on eleven real datasets (Table II). The testbed here
+//! has no network access, so `generator` produces deterministic synthetic
+//! replicas that preserve the statistics the paper's effects depend on:
+//! power-law degree distribution (straggler imbalance, hub-induced ghost
+//! explosion), average degree (the `O(|E|·F)` vs `O(|V|·F)` memory gap), the
+//! feature dimensionality, and feature sparsity (the crossover of Eq. 1).
+//!
+//! Degree-skewed topology uses a Chung–Lu style model: each node gets an
+//! expected degree from a truncated power-law, and edges are sampled by
+//! degree-weighted endpoint selection.
+
+use super::csr::Graph;
+use crate::tensor::Matrix;
+use crate::util::Rng;
+
+/// Parameters for the Chung–Lu power-law generator.
+#[derive(Clone, Debug)]
+pub struct GraphConfig {
+    pub num_nodes: usize,
+    /// Target (directed) edge count; both directions are emitted for
+    /// undirected graphs so the CSR edge count ≈ `num_edges`.
+    pub num_edges: usize,
+    /// Power-law exponent of the expected-degree sequence (2.0–3.0 typical).
+    pub power_law_gamma: f64,
+    /// Number of disconnected components to force (1 = connected-ish).
+    pub components: usize,
+}
+
+impl Default for GraphConfig {
+    fn default() -> Self {
+        GraphConfig {
+            num_nodes: 1000,
+            num_edges: 5000,
+            power_law_gamma: 2.5,
+            components: 1,
+        }
+    }
+}
+
+/// Sample a power-law expected-degree sequence and normalize so that degree-
+/// weighted endpoint sampling yields ≈ `num_edges` edges.
+fn degree_weights(cfg: &GraphConfig, rng: &mut Rng) -> Vec<f64> {
+    let alpha = 1.0 / (cfg.power_law_gamma - 1.0);
+    let mut w: Vec<f64> = (0..cfg.num_nodes)
+        .map(|_| {
+            // inverse-CDF sample of P(k) ∝ k^-γ, k ≥ 1, truncated at n^0.8
+            let u = rng.f64().max(1e-12);
+            let k = u.powf(-alpha);
+            k.min((cfg.num_nodes as f64).powf(0.8))
+        })
+        .collect();
+    // Sort descending so node 0 is the biggest hub — convenient for tests
+    // and mirrors real datasets where hubs are few and extreme.
+    w.sort_by(|a, b| b.partial_cmp(a).unwrap());
+    w
+}
+
+/// Build a cumulative alias-free sampling table: prefix sums of weights.
+struct WeightedSampler {
+    prefix: Vec<f64>,
+    total: f64,
+}
+
+impl WeightedSampler {
+    fn new(weights: &[f64]) -> WeightedSampler {
+        let mut prefix = Vec::with_capacity(weights.len());
+        let mut acc = 0.0;
+        for &w in weights {
+            acc += w;
+            prefix.push(acc);
+        }
+        WeightedSampler { prefix, total: acc }
+    }
+
+    fn sample(&self, rng: &mut Rng) -> usize {
+        let x = rng.f64() * self.total;
+        match self
+            .prefix
+            .binary_search_by(|p| p.partial_cmp(&x).unwrap())
+        {
+            Ok(i) => i,
+            Err(i) => i.min(self.prefix.len() - 1),
+        }
+    }
+}
+
+/// Generate an undirected power-law graph (both edge directions stored).
+///
+/// When `cfg.components > 1` the node range is split into that many disjoint
+/// blocks with no cross-block edges (exercises Phase II of the partitioner).
+pub fn power_law_graph(cfg: &GraphConfig, rng: &mut Rng) -> Graph {
+    let n = cfg.num_nodes;
+    let undirected_pairs = cfg.num_edges / 2;
+    let comps = cfg.components.max(1).min(n);
+    let block = n / comps;
+    let weights = degree_weights(cfg, rng);
+
+    let mut edges: Vec<(u32, u32)> = Vec::with_capacity(undirected_pairs * 2);
+    let mut seen = std::collections::HashSet::with_capacity(undirected_pairs * 2);
+
+    // Per-component samplers over that component's node slice.
+    let mut samplers = Vec::with_capacity(comps);
+    for c in 0..comps {
+        let lo = c * block;
+        let hi = if c + 1 == comps { n } else { (c + 1) * block };
+        samplers.push((lo, WeightedSampler::new(&weights[lo..hi])));
+    }
+
+    let mut attempts = 0usize;
+    let max_attempts = undirected_pairs * 20 + 1000;
+    while edges.len() < undirected_pairs * 2 && attempts < max_attempts {
+        attempts += 1;
+        // Pick a component proportional to its size so edges spread.
+        let c = if comps == 1 { 0 } else { rng.below(comps) };
+        let (lo, s) = &samplers[c];
+        let u = (lo + s.sample(rng)) as u32;
+        let v = (lo + s.sample(rng)) as u32;
+        if u == v {
+            continue;
+        }
+        let key = if u < v { (u, v) } else { (v, u) };
+        if seen.insert(key) {
+            edges.push((u, v));
+            edges.push((v, u));
+        }
+    }
+    Graph::from_edges(n, &edges)
+}
+
+/// Generate a star graph: node 0 is the hub connected to all others.
+/// A pathological input for edge-cut partitioners (Phase III trigger).
+pub fn star_graph(n: usize) -> Graph {
+    let mut edges = Vec::with_capacity(2 * (n - 1));
+    for v in 1..n as u32 {
+        edges.push((0, v));
+        edges.push((v, 0));
+    }
+    Graph::from_edges(n, &edges)
+}
+
+/// Generate an Erdős–Rényi-ish random graph with uniform degrees (used as
+/// the low-skew control in partitioner benchmarks).
+pub fn uniform_graph(n: usize, num_edges: usize, rng: &mut Rng) -> Graph {
+    let cfg = GraphConfig {
+        num_nodes: n,
+        num_edges,
+        power_law_gamma: 10.0, // near-uniform expected degrees
+        components: 1,
+    };
+    power_law_graph(&cfg, rng)
+}
+
+/// Synthesize a feature matrix with exact target sparsity.
+///
+/// Non-zeros are distributed uniformly at random with values from N(0, 1),
+/// matching the statistics of TF-IDF / bag-of-words style features after
+/// standardization. `sparsity` = fraction of zero entries.
+pub fn features(num_nodes: usize, dim: usize, sparsity: f64, rng: &mut Rng) -> Matrix {
+    let mut m = Matrix::zeros(num_nodes, dim);
+    let total = num_nodes * dim;
+    let nnz = ((1.0 - sparsity) * total as f64).round() as usize;
+    if nnz >= total {
+        for v in m.data.iter_mut() {
+            *v = rng.normal() as f32;
+        }
+        return m;
+    }
+    // Sample nnz distinct positions via Floyd's algorithm for exactness.
+    let mut chosen = std::collections::HashSet::with_capacity(nnz);
+    for j in total - nnz..total {
+        let t = rng.below(j + 1);
+        let pos = if chosen.contains(&t) { j } else { t };
+        chosen.insert(pos);
+    }
+    // Sort for deterministic RNG-draw order (HashSet iteration is not).
+    let mut positions: Vec<usize> = chosen.into_iter().collect();
+    positions.sort_unstable();
+    for pos in positions {
+        m.data[pos] = rng.normal() as f32;
+        if m.data[pos] == 0.0 {
+            m.data[pos] = 1.0; // keep nnz exact
+        }
+    }
+    m
+}
+
+/// Synthesize integer class labels where a node's label correlates with its
+/// feature row (so the GNN has signal to learn): label = argmax of `classes`
+/// random projections of the features, plus graph smoothing.
+pub fn labels(feats: &Matrix, graph: &Graph, classes: usize, rng: &mut Rng) -> Vec<u32> {
+    let proj = Matrix::xavier(feats.cols, classes, rng);
+    let mut raw: Vec<u32> = (0..feats.rows)
+        .map(|r| {
+            let row = feats.row(r);
+            let mut best = 0usize;
+            let mut best_v = f32::MIN;
+            for c in 0..classes {
+                let mut v = 0.0f32;
+                for (k, &x) in row.iter().enumerate() {
+                    if x != 0.0 {
+                        v += x * proj.get(k, c);
+                    }
+                }
+                if v > best_v {
+                    best_v = v;
+                    best = c;
+                }
+            }
+            best as u32
+        })
+        .collect();
+    // One round of majority smoothing over neighborhoods: GNN-learnable.
+    let smoothed: Vec<u32> = (0..graph.num_nodes)
+        .map(|u| {
+            let nb = graph.neighbors(u);
+            if nb.is_empty() {
+                return raw[u];
+            }
+            let mut counts = vec![0u32; classes];
+            counts[raw[u] as usize] += 2;
+            for &v in nb.iter().take(16) {
+                counts[raw[v as usize] as usize] += 1;
+            }
+            counts
+                .iter()
+                .enumerate()
+                .max_by_key(|(_, &c)| c)
+                .map(|(i, _)| i as u32)
+                .unwrap()
+        })
+        .collect();
+    raw.copy_from_slice(&smoothed);
+    raw
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn power_law_hits_edge_budget() {
+        let mut rng = Rng::new(1);
+        let cfg = GraphConfig {
+            num_nodes: 500,
+            num_edges: 4000,
+            ..Default::default()
+        };
+        let g = power_law_graph(&cfg, &mut rng);
+        g.validate().unwrap();
+        let e = g.num_edges();
+        assert!(e as f64 > 0.8 * 4000.0, "edges={e}");
+        assert!(e <= 4000);
+    }
+
+    #[test]
+    fn power_law_is_skewed() {
+        let mut rng = Rng::new(2);
+        let cfg = GraphConfig {
+            num_nodes: 2000,
+            num_edges: 16000,
+            power_law_gamma: 2.2,
+            components: 1,
+        };
+        let g = power_law_graph(&cfg, &mut rng);
+        // hub degree should far exceed the mean
+        assert!(
+            g.max_degree() as f64 > 5.0 * g.avg_degree(),
+            "max={} avg={}",
+            g.max_degree(),
+            g.avg_degree()
+        );
+    }
+
+    #[test]
+    fn components_are_disjoint() {
+        let mut rng = Rng::new(3);
+        let cfg = GraphConfig {
+            num_nodes: 400,
+            num_edges: 2400,
+            power_law_gamma: 2.5,
+            components: 4,
+        };
+        let g = power_law_graph(&cfg, &mut rng);
+        let block = 100;
+        for u in 0..g.num_nodes {
+            for &v in g.neighbors(u) {
+                assert_eq!(u / block, v as usize / block, "cross-component edge");
+            }
+        }
+    }
+
+    #[test]
+    fn star_graph_shape() {
+        let g = star_graph(10);
+        assert_eq!(g.degree(0), 9);
+        for v in 1..10 {
+            assert_eq!(g.degree(v), 1);
+        }
+    }
+
+    #[test]
+    fn features_exact_sparsity() {
+        let mut rng = Rng::new(4);
+        let f = features(100, 50, 0.9, &mut rng);
+        let s = crate::tensor::sparsity(&f.data);
+        assert!((s - 0.9).abs() < 1e-9, "s={s}");
+    }
+
+    #[test]
+    fn features_dense_case() {
+        let mut rng = Rng::new(5);
+        let f = features(10, 10, 0.0, &mut rng);
+        assert!(crate::tensor::sparsity(&f.data) < 0.02);
+    }
+
+    #[test]
+    fn labels_in_range_and_nontrivial() {
+        let mut rng = Rng::new(6);
+        let cfg = GraphConfig::default();
+        let g = power_law_graph(&cfg, &mut rng);
+        let f = features(cfg.num_nodes, 32, 0.5, &mut rng);
+        let y = labels(&f, &g, 7, &mut rng);
+        assert_eq!(y.len(), cfg.num_nodes);
+        assert!(y.iter().all(|&c| c < 7));
+        // at least 2 distinct classes present
+        let distinct: std::collections::HashSet<_> = y.iter().collect();
+        assert!(distinct.len() >= 2);
+    }
+
+    #[test]
+    fn deterministic_generation() {
+        let cfg = GraphConfig::default();
+        let g1 = power_law_graph(&cfg, &mut Rng::new(42));
+        let g2 = power_law_graph(&cfg, &mut Rng::new(42));
+        assert_eq!(g1, g2);
+    }
+}

@@ -1,0 +1,17 @@
+//! Graph representations, synthesis, and analysis.
+//!
+//! The adjacency structure is stored as CSR (`Graph`), the canonical layout
+//! for the paper's aggregation kernels; COO and CSC views are derived when a
+//! kernel or the distributed runtime needs them. `generator` synthesizes
+//! power-law graphs matching the statistics of the paper's Table II datasets
+//! (see `datasets` for the scaled configurations and DESIGN.md §5 for the
+//! substitution rationale).
+
+pub mod csr;
+pub mod generator;
+pub mod datasets;
+pub mod traversal;
+pub mod stats;
+
+pub use csr::Graph;
+pub use datasets::{Dataset, DatasetSpec};

@@ -1,0 +1,76 @@
+//! Degree-distribution and workload statistics used by the partitioner
+//! quality reports and the dataset info table.
+
+use super::csr::Graph;
+
+/// Summary statistics of a graph's degree distribution.
+#[derive(Clone, Debug)]
+pub struct DegreeStats {
+    pub min: usize,
+    pub max: usize,
+    pub mean: f64,
+    pub p50: usize,
+    pub p99: usize,
+    /// Gini coefficient of the degree distribution — 0 = perfectly uniform,
+    /// →1 = extreme hub concentration. The paper's straggler argument is a
+    /// claim about this skew.
+    pub gini: f64,
+}
+
+/// Compute [`DegreeStats`] for a graph.
+pub fn degree_stats(g: &Graph) -> DegreeStats {
+    let mut degs: Vec<usize> = (0..g.num_nodes).map(|u| g.degree(u)).collect();
+    degs.sort_unstable();
+    let n = degs.len().max(1);
+    let sum: usize = degs.iter().sum();
+    let mean = sum as f64 / n as f64;
+    // Gini via the sorted formulation: G = (2Σ i·x_i)/(n Σx) − (n+1)/n
+    let gini = if sum == 0 {
+        0.0
+    } else {
+        let weighted: f64 = degs
+            .iter()
+            .enumerate()
+            .map(|(i, &d)| (i + 1) as f64 * d as f64)
+            .sum();
+        (2.0 * weighted) / (n as f64 * sum as f64) - (n as f64 + 1.0) / n as f64
+    };
+    DegreeStats {
+        min: *degs.first().unwrap_or(&0),
+        max: *degs.last().unwrap_or(&0),
+        mean,
+        p50: degs[n / 2],
+        p99: degs[(n * 99) / 100],
+        gini,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uniform_degrees_low_gini() {
+        // ring: every node degree 2
+        let n = 100;
+        let mut edges = Vec::new();
+        for u in 0..n as u32 {
+            let v = (u + 1) % n as u32;
+            edges.push((u, v));
+            edges.push((v, u));
+        }
+        let g = Graph::from_edges(n, &edges);
+        let s = degree_stats(&g);
+        assert_eq!(s.min, 2);
+        assert_eq!(s.max, 2);
+        assert!(s.gini < 1e-9);
+    }
+
+    #[test]
+    fn star_high_gini() {
+        let g = crate::graph::generator::star_graph(100);
+        let s = degree_stats(&g);
+        assert_eq!(s.max, 99);
+        assert!(s.gini > 0.45, "gini={}", s.gini);
+    }
+}

@@ -1,0 +1,112 @@
+//! Graph traversal primitives: BFS and connected components.
+//!
+//! Used by partitioner Phase II (component detection, paper Algorithm 4
+//! lines 11–22) and by dataset validation.
+
+use super::csr::Graph;
+
+/// BFS from `src`, returning the hop distance per node (`u32::MAX` if
+/// unreachable). Treats edges as directed (datasets store both directions).
+pub fn bfs(g: &Graph, src: usize) -> Vec<u32> {
+    let mut dist = vec![u32::MAX; g.num_nodes];
+    let mut queue = std::collections::VecDeque::new();
+    dist[src] = 0;
+    queue.push_back(src as u32);
+    while let Some(u) = queue.pop_front() {
+        let du = dist[u as usize];
+        for &v in g.neighbors(u as usize) {
+            if dist[v as usize] == u32::MAX {
+                dist[v as usize] = du + 1;
+                queue.push_back(v);
+            }
+        }
+    }
+    dist
+}
+
+/// Connected components (over the undirected closure of the edge set).
+/// Returns `(component_id_per_node, component_count)`. Component ids are
+/// dense in `0..count`, assigned in discovery order.
+pub fn connected_components(g: &Graph) -> (Vec<u32>, usize) {
+    // Datasets store both directions so a directed BFS suffices; for safety
+    // with arbitrary inputs we also walk reverse edges via the transpose.
+    let gt = g.transpose();
+    let mut comp = vec![u32::MAX; g.num_nodes];
+    let mut next = 0u32;
+    let mut stack = Vec::new();
+    for start in 0..g.num_nodes {
+        if comp[start] != u32::MAX {
+            continue;
+        }
+        comp[start] = next;
+        stack.push(start as u32);
+        while let Some(u) = stack.pop() {
+            for &v in g.neighbors(u as usize).iter().chain(gt.neighbors(u as usize)) {
+                if comp[v as usize] == u32::MAX {
+                    comp[v as usize] = next;
+                    stack.push(v);
+                }
+            }
+        }
+        next += 1;
+    }
+    (comp, next as usize)
+}
+
+/// Sizes of each component, indexed by component id.
+pub fn component_sizes(comp: &[u32], count: usize) -> Vec<usize> {
+    let mut sizes = vec![0usize; count];
+    for &c in comp {
+        sizes[c as usize] += 1;
+    }
+    sizes
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generator::{power_law_graph, GraphConfig};
+    use crate::util::Rng;
+
+    #[test]
+    fn bfs_distances_on_path() {
+        // 0→1→2→3 with both directions
+        let g = Graph::from_edges(4, &[(0, 1), (1, 0), (1, 2), (2, 1), (2, 3), (3, 2)]);
+        let d = bfs(&g, 0);
+        assert_eq!(d, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn bfs_unreachable() {
+        let g = Graph::from_edges(3, &[(0, 1)]);
+        let d = bfs(&g, 0);
+        assert_eq!(d[2], u32::MAX);
+    }
+
+    #[test]
+    fn components_on_disjoint_blocks() {
+        let mut rng = Rng::new(1);
+        let cfg = GraphConfig {
+            num_nodes: 300,
+            num_edges: 3000,
+            power_law_gamma: 2.5,
+            components: 3,
+        };
+        let g = power_law_graph(&cfg, &mut rng);
+        let (comp, n) = connected_components(&g);
+        // at least the 3 forced blocks (isolated nodes may add more)
+        assert!(n >= 3, "components={n}");
+        // nodes in different blocks never share a component
+        assert_ne!(comp[0], comp[150]);
+        assert_ne!(comp[150], comp[250]);
+        let sizes = component_sizes(&comp, n);
+        assert_eq!(sizes.iter().sum::<usize>(), 300);
+    }
+
+    #[test]
+    fn single_component_when_connected() {
+        let g = Graph::from_edges(3, &[(0, 1), (1, 0), (1, 2), (2, 1)]);
+        let (_, n) = connected_components(&g);
+        assert_eq!(n, 1);
+    }
+}

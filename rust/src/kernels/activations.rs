@@ -1,0 +1,184 @@
+//! Activation and loss kernels: ReLU and masked softmax cross-entropy,
+//! forward and backward, fused where the paper fuses them (softmax + CE
+//! produce the combined `p − y` gradient directly).
+
+use crate::tensor::Matrix;
+
+/// In-place ReLU. Returns nothing; the pre-activation sign is recoverable
+/// from the output (`out > 0`), which the backward uses.
+pub fn relu_inplace(m: &mut Matrix) {
+    for v in m.data.iter_mut() {
+        if *v < 0.0 {
+            *v = 0.0;
+        }
+    }
+}
+
+/// ReLU backward: `dX = dY ⊙ 1[Y > 0]` where `y` is the *post*-activation
+/// output saved from the forward. Writes into `dy` in place to avoid a
+/// gradient buffer copy (the fusion the paper applies in generated code).
+pub fn relu_backward_inplace(y: &Matrix, dy: &mut Matrix) {
+    assert_eq!(y.data.len(), dy.data.len());
+    for (g, &o) in dy.data.iter_mut().zip(&y.data) {
+        if o <= 0.0 {
+            *g = 0.0;
+        }
+    }
+}
+
+/// Masked softmax cross-entropy, fused forward + backward.
+///
+/// For every row `i` with `mask[i]`, computes `softmax(logits[i])`, adds
+/// `−log p[label]` to the loss, counts argmax==label for accuracy, and (when
+/// `grad` is `Some`) writes the fused gradient `(p − onehot(label)) / n_masked`
+/// so no separate probability tensor survives the call.
+///
+/// Returns `(mean_loss, accuracy, n_masked)`.
+pub fn softmax_xent(
+    logits: &Matrix,
+    labels: &[u32],
+    mask: &[bool],
+    mut grad: Option<&mut Matrix>,
+) -> (f64, f64, usize) {
+    assert_eq!(logits.rows, labels.len());
+    assert_eq!(logits.rows, mask.len());
+    let c = logits.cols;
+    if let Some(g) = grad.as_deref_mut() {
+        assert_eq!((g.rows, g.cols), (logits.rows, logits.cols));
+        g.fill_zero();
+    }
+    let n_masked = mask.iter().filter(|m| **m).count();
+    if n_masked == 0 {
+        return (0.0, 0.0, 0);
+    }
+    let inv_n = 1.0f32 / n_masked as f32;
+    let mut loss = 0.0f64;
+    let mut correct = 0usize;
+    for i in 0..logits.rows {
+        if !mask[i] {
+            continue;
+        }
+        let row = logits.row(i);
+        let y = labels[i] as usize;
+        debug_assert!(y < c);
+        // stable log-softmax
+        let mx = row.iter().fold(f32::MIN, |a, &b| a.max(b));
+        let mut sum = 0.0f32;
+        for &v in row {
+            sum += (v - mx).exp();
+        }
+        let log_z = mx + sum.ln();
+        loss += (log_z - row[y]) as f64;
+        let argmax = row
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(k, _)| k)
+            .unwrap();
+        if argmax == y {
+            correct += 1;
+        }
+        if let Some(g) = grad.as_deref_mut() {
+            let grow = g.row_mut(i);
+            for k in 0..c {
+                let p = (row[k] - log_z).exp();
+                grow[k] = (p - if k == y { 1.0 } else { 0.0 }) * inv_n;
+            }
+        }
+    }
+    (
+        loss / n_masked as f64,
+        correct as f64 / n_masked as f64,
+        n_masked,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{check, random_matrix};
+
+    #[test]
+    fn relu_forward_backward() {
+        let mut m = Matrix::from_vec(1, 4, vec![-1., 2., 0., 3.]);
+        relu_inplace(&mut m);
+        assert_eq!(m.data, vec![0., 2., 0., 3.]);
+        let mut dy = Matrix::from_vec(1, 4, vec![10., 10., 10., 10.]);
+        relu_backward_inplace(&m, &mut dy);
+        assert_eq!(dy.data, vec![0., 10., 0., 10.]);
+    }
+
+    #[test]
+    fn xent_uniform_logits() {
+        // uniform logits over C classes → loss = ln C, grad = (1/C − onehot)/n
+        let c = 4;
+        let logits = Matrix::zeros(2, c);
+        let labels = vec![1u32, 3];
+        let mask = vec![true, true];
+        let mut g = Matrix::zeros(2, c);
+        let (loss, _acc, n) = softmax_xent(&logits, &labels, &mask, Some(&mut g));
+        assert_eq!(n, 2);
+        assert!((loss - (c as f64).ln()).abs() < 1e-6);
+        assert!((g.get(0, 1) - (0.25 - 1.0) / 2.0).abs() < 1e-6);
+        assert!((g.get(0, 0) - 0.25 / 2.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn xent_mask_excludes_rows() {
+        let logits = Matrix::from_vec(2, 2, vec![5., 0., 0., 5.]);
+        let labels = vec![0u32, 0];
+        let mask = vec![true, false];
+        let (loss, acc, n) = softmax_xent(&logits, &labels, &mask, None);
+        assert_eq!(n, 1);
+        assert!(loss < 0.1);
+        assert_eq!(acc, 1.0);
+    }
+
+    #[test]
+    fn prop_grad_rows_sum_to_zero() {
+        // softmax-CE gradient rows sum to 0 (probabilities sum to 1)
+        check(0x99, 20, |rng| {
+            let n = 1 + rng.below(10);
+            let c = 2 + rng.below(8);
+            let logits = Matrix::from_vec(n, c, random_matrix(rng, n, c));
+            let labels: Vec<u32> = (0..n).map(|_| rng.below(c) as u32).collect();
+            let mask: Vec<bool> = (0..n).map(|_| rng.bool(0.7)).collect();
+            let mut g = Matrix::zeros(n, c);
+            softmax_xent(&logits, &labels, &mask, Some(&mut g));
+            for i in 0..n {
+                let s: f32 = g.row(i).iter().sum();
+                assert!(s.abs() < 1e-5, "row {i} sums to {s}");
+                if !mask[i] {
+                    assert!(g.row(i).iter().all(|v| *v == 0.0));
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn prop_grad_matches_finite_difference() {
+        check(0xAB, 5, |rng| {
+            let n = 2;
+            let c = 3;
+            let logits = Matrix::from_vec(n, c, random_matrix(rng, n, c));
+            let labels = vec![rng.below(c) as u32, rng.below(c) as u32];
+            let mask = vec![true, true];
+            let mut g = Matrix::zeros(n, c);
+            let (l0, _, _) = softmax_xent(&logits, &labels, &mask, Some(&mut g));
+            let eps = 1e-3f32;
+            for i in 0..n {
+                for k in 0..c {
+                    let mut lp = logits.clone();
+                    lp.set(i, k, lp.get(i, k) + eps);
+                    let (l1, _, _) = softmax_xent(&lp, &labels, &mask, None);
+                    let fd = (l1 - l0) / eps as f64;
+                    assert!(
+                        (fd - g.get(i, k) as f64).abs() < 1e-2,
+                        "fd={fd} analytic={}",
+                        g.get(i, k)
+                    );
+                }
+            }
+        });
+    }
+}

@@ -1,0 +1,222 @@
+//! Blocked dense GEMM kernels — the role vendor BLAS (MKL/cuBLAS) plays in
+//! the paper's dense path.
+//!
+//! Three variants cover the training loop's dense needs:
+//! - [`gemm`]        `C = A·B`     (forward transform `X·W`)
+//! - [`gemm_at_b`]   `C = Aᵀ·B`    (weight gradient `Xᵀ·G`)
+//! - [`gemm_a_bt`]   `C = A·Bᵀ`    (input gradient `G·Wᵀ`)
+//!
+//! All use an i-k-j loop order over row-major buffers so the innermost loop
+//! is a contiguous AXPY the compiler vectorizes, with k-blocking for L1/L2
+//! reuse of the `B` panel (the paper's "W loaded into L1 in tiles").
+
+use crate::tensor::Matrix;
+
+/// k-panel height: 64 rows of B (64·cols·4 B) targets L2 residency.
+const KBLOCK: usize = 64;
+
+/// `C = A·B`, shapes `(m×k)·(k×n) = m×n`. `c` is overwritten.
+pub fn gemm(a: &Matrix, b: &Matrix, c: &mut Matrix) {
+    assert_eq!(a.cols, b.rows, "inner dim");
+    assert_eq!((c.rows, c.cols), (a.rows, b.cols), "out shape");
+    let (m, k, n) = (a.rows, a.cols, b.cols);
+    c.fill_zero();
+    for k0 in (0..k).step_by(KBLOCK) {
+        let k1 = (k0 + KBLOCK).min(k);
+        for i in 0..m {
+            let arow = &a.data[i * k..(i + 1) * k];
+            let crow = &mut c.data[i * n..(i + 1) * n];
+            for kk in k0..k1 {
+                // NOTE: deliberately NO zero-skip branch — this kernel
+                // plays the vendor-BLAS role (§IV-B), which is oblivious
+                // to value sparsity; exploiting feature sparsity is the
+                // sparse path's job.
+                let av = arow[kk];
+                let brow = &b.data[kk * n..(kk + 1) * n];
+                for j in 0..n {
+                    crow[j] += av * brow[j];
+                }
+            }
+        }
+    }
+}
+
+/// `C = Aᵀ·B`, shapes `(m×k)ᵀ·(m×n) = k×n`. `c` is overwritten.
+///
+/// Streams rows of A and B together, accumulating rank-1 updates into C —
+/// each C row is owned by one k index, so (in the parallel analogue) the
+/// accumulation is conflict-free (paper §IV-B-c backward).
+pub fn gemm_at_b(a: &Matrix, b: &Matrix, c: &mut Matrix) {
+    assert_eq!(a.rows, b.rows, "outer dim");
+    assert_eq!((c.rows, c.cols), (a.cols, b.cols), "out shape");
+    let (m, k, n) = (a.rows, a.cols, b.cols);
+    c.fill_zero();
+    for i in 0..m {
+        let arow = &a.data[i * k..(i + 1) * k];
+        let brow = &b.data[i * n..(i + 1) * n];
+        for kk in 0..k {
+            let av = arow[kk];
+            let crow = &mut c.data[kk * n..(kk + 1) * n];
+            for j in 0..n {
+                crow[j] += av * brow[j];
+            }
+        }
+    }
+}
+
+/// `C = A·Bᵀ`, shapes `(m×k)·(n×k)ᵀ = m×n`. `c` is overwritten.
+///
+/// Inner loop is a dot product over contiguous rows of both operands.
+pub fn gemm_a_bt(a: &Matrix, b: &Matrix, c: &mut Matrix) {
+    assert_eq!(a.cols, b.cols, "inner dim");
+    assert_eq!((c.rows, c.cols), (a.rows, b.rows), "out shape");
+    let (m, k, n) = (a.rows, a.cols, b.rows);
+    for i in 0..m {
+        let arow = &a.data[i * k..(i + 1) * k];
+        let crow = &mut c.data[i * n..(i + 1) * n];
+        for j in 0..n {
+            let brow = &b.data[j * k..(j + 1) * k];
+            let mut acc = 0.0f32;
+            for kk in 0..k {
+                acc += arow[kk] * brow[kk];
+            }
+            crow[j] = acc;
+        }
+    }
+}
+
+/// `C += A·Bᵀ` — accumulating variant of [`gemm_a_bt`], used where two
+/// gradient paths sum into one buffer (e.g. SAGE's `gz·Wᵀ + g·W_selfᵀ`).
+pub fn gemm_a_bt_acc(a: &Matrix, b: &Matrix, c: &mut Matrix) {
+    assert_eq!(a.cols, b.cols, "inner dim");
+    assert_eq!((c.rows, c.cols), (a.rows, b.rows), "out shape");
+    let (m, k, n) = (a.rows, a.cols, b.rows);
+    for i in 0..m {
+        let arow = &a.data[i * k..(i + 1) * k];
+        let crow = &mut c.data[i * n..(i + 1) * n];
+        for j in 0..n {
+            let brow = &b.data[j * k..(j + 1) * k];
+            let mut acc = 0.0f32;
+            for kk in 0..k {
+                acc += arow[kk] * brow[kk];
+            }
+            crow[j] += acc;
+        }
+    }
+}
+
+/// Add a broadcast row bias in place: `M[i,:] += bias`.
+pub fn add_bias(m: &mut Matrix, bias: &[f32]) {
+    assert_eq!(m.cols, bias.len());
+    for i in 0..m.rows {
+        let row = &mut m.data[i * bias.len()..(i + 1) * bias.len()];
+        for (r, b) in row.iter_mut().zip(bias) {
+            *r += b;
+        }
+    }
+}
+
+/// Column-sum of a matrix (bias gradient).
+pub fn col_sum(m: &Matrix, out: &mut [f32]) {
+    assert_eq!(m.cols, out.len());
+    out.iter_mut().for_each(|v| *v = 0.0);
+    for i in 0..m.rows {
+        let row = &m.data[i * m.cols..(i + 1) * m.cols];
+        for (o, r) in out.iter_mut().zip(row) {
+            *o += r;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{check, random_matrix};
+
+    fn gemm_ref(a: &Matrix, b: &Matrix) -> Matrix {
+        let mut c = Matrix::zeros(a.rows, b.cols);
+        for i in 0..a.rows {
+            for j in 0..b.cols {
+                let mut acc = 0.0f64;
+                for kk in 0..a.cols {
+                    acc += a.get(i, kk) as f64 * b.get(kk, j) as f64;
+                }
+                c.set(i, j, acc as f32);
+            }
+        }
+        c
+    }
+
+    #[test]
+    fn gemm_small() {
+        let a = Matrix::from_vec(2, 2, vec![1., 2., 3., 4.]);
+        let b = Matrix::from_vec(2, 2, vec![1., 1., 1., 1.]);
+        let mut c = Matrix::zeros(2, 2);
+        gemm(&a, &b, &mut c);
+        assert_eq!(c.data, vec![3., 3., 7., 7.]);
+    }
+
+    #[test]
+    fn prop_gemm_matches_ref() {
+        check(0x6e, 25, |rng| {
+            let m = 1 + rng.below(40);
+            let k = 1 + rng.below(80); // crosses KBLOCK sometimes? keep fast
+            let n = 1 + rng.below(40);
+            let a = Matrix::from_vec(m, k, random_matrix(rng, m, k));
+            let b = Matrix::from_vec(k, n, random_matrix(rng, k, n));
+            let mut c = Matrix::zeros(m, n);
+            gemm(&a, &b, &mut c);
+            assert!(c.max_abs_diff(&gemm_ref(&a, &b)) < 1e-4);
+        });
+    }
+
+    #[test]
+    fn prop_at_b_matches_transpose_then_gemm() {
+        check(0x7f, 20, |rng| {
+            let m = 1 + rng.below(30);
+            let k = 1 + rng.below(30);
+            let n = 1 + rng.below(30);
+            let a = Matrix::from_vec(m, k, random_matrix(rng, m, k));
+            let b = Matrix::from_vec(m, n, random_matrix(rng, m, n));
+            let mut c = Matrix::zeros(k, n);
+            gemm_at_b(&a, &b, &mut c);
+            assert!(c.max_abs_diff(&gemm_ref(&a.transpose(), &b)) < 1e-4);
+        });
+    }
+
+    #[test]
+    fn prop_a_bt_matches_gemm_on_transpose() {
+        check(0x8a, 20, |rng| {
+            let m = 1 + rng.below(30);
+            let k = 1 + rng.below(30);
+            let n = 1 + rng.below(30);
+            let a = Matrix::from_vec(m, k, random_matrix(rng, m, k));
+            let b = Matrix::from_vec(n, k, random_matrix(rng, n, k));
+            let mut c = Matrix::zeros(m, n);
+            gemm_a_bt(&a, &b, &mut c);
+            assert!(c.max_abs_diff(&gemm_ref(&a, &b.transpose())) < 1e-4);
+        });
+    }
+
+    #[test]
+    fn bias_and_colsum() {
+        let mut m = Matrix::from_vec(2, 3, vec![1., 2., 3., 4., 5., 6.]);
+        add_bias(&mut m, &[10., 20., 30.]);
+        assert_eq!(m.row(1), &[14., 25., 36.]);
+        let mut s = vec![0.0; 3];
+        col_sum(&m, &mut s);
+        assert_eq!(s, vec![25., 47., 69.]);
+    }
+
+    #[test]
+    fn kblock_boundary() {
+        // k exactly at and above KBLOCK
+        for k in [KBLOCK, KBLOCK + 3] {
+            let a = Matrix::from_vec(2, k, (0..2 * k).map(|i| i as f32 * 0.01).collect());
+            let b = Matrix::from_vec(k, 2, (0..2 * k).map(|i| i as f32 * 0.02).collect());
+            let mut c = Matrix::zeros(2, 2);
+            gemm(&a, &b, &mut c);
+            assert!(c.max_abs_diff(&gemm_ref(&a, &b)) < 1e-3);
+        }
+    }
+}

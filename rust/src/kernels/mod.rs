@@ -1,0 +1,32 @@
+//! Architecture-aware compute kernels — the native-backend analogue of the
+//! paper's synthesized OpenMP/CUDA micro-kernels.
+//!
+//! - [`spmm`] — cache-tiled CSR SpMM aggregation (paper Algorithm 2) with a
+//!   software-prefetch schedule, plus the implicit-transpose backward
+//!   (paper §IV-D-b) and a naive reference used by tests.
+//! - [`gemm`] — blocked dense matmul (`X·W`, `Xᵀ·G`, `G·Wᵀ`) — the vendor-
+//!   BLAS role in the paper's dense path.
+//! - [`sparse_feat`] — sparse-feature kernels: CSR forward `X·W` and CSC
+//!   conflict-free backward `Xᵀ·G` (paper §IV-B-c).
+//! - [`activations`] — ReLU and masked softmax/cross-entropy, forward and
+//!   backward.
+//! - [`update`] — fused vectorized SGD/Adam/AdamW parameter updates (paper
+//!   §IV-E2.4 "Vectorized Optimizer").
+//!
+//! All kernels are single-threaded on this testbed (1 core); the tiling /
+//! prefetch / conflict-freedom structure is what the paper's claims are
+//! about and is preserved (DESIGN.md §2).
+
+pub mod spmm;
+pub mod gemm;
+pub mod sparse_feat;
+pub mod activations;
+pub mod update;
+
+/// Feature tile width, the paper's compile-time `T = 32` (fp32): 128 bytes,
+/// two AVX-512 vectors, resolved at compile time so the reduction loop fully
+/// unrolls.
+pub const TILE: usize = 32;
+
+/// Software-prefetch lookahead distance, the paper's `D = 8`.
+pub const PREFETCH_DIST: usize = 8;

@@ -1,0 +1,31 @@
+//! # Morphling
+//!
+//! A reproduction of *"Morphling: Fast, Fused, and Flexible GNN Training at
+//! Scale"* as a three-layer Rust + JAX + Pallas stack:
+//!
+//! - **L3 (this crate)** — the Morphling coordinator: sparsity-aware execution
+//!   engine, hierarchical graph partitioner, simulated distributed runtime,
+//!   native cache-tiled CPU kernels, baseline engines (gather-scatter / nonfused),
+//!   and a PJRT runtime that executes AOT-compiled fused training steps.
+//! - **L2 (python/compile/model.py)** — JAX forward/backward/optimizer graph,
+//!   lowered once to HLO text artifacts.
+//! - **L1 (python/compile/kernels/)** — Pallas feature-tiled SpMM and MXU-tiled
+//!   GEMM kernels called from L2.
+//!
+//! Python never runs on the training path; `make artifacts` is the only step
+//! that invokes it.
+
+pub mod util;
+pub mod tensor;
+pub mod graph;
+pub mod kernels;
+pub mod engine;
+pub mod model;
+pub mod optim;
+pub mod train;
+pub mod baselines;
+pub mod partition;
+pub mod dist;
+pub mod memtrack;
+pub mod runtime;
+pub mod coordinator;

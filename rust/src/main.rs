@@ -1,0 +1,203 @@
+//! `morphling` — the L3 coordinator CLI.
+//!
+//! Subcommands:
+//! - `info`       — dataset table (paper Table II, scaled replicas)
+//! - `shapes`     — export dataset shape buckets for the AOT compile path
+//! - `train`      — train a GNN on one dataset with a chosen engine
+//! - `partition`  — run the hierarchical partitioner and report quality
+//! - `dist`       — simulated multi-rank distributed training
+//! - `calibrate`  — measure the machine's efficiency ratio γ (Eq. 1)
+
+use anyhow::{anyhow, Result};
+use morphling::coordinator::{run, TrainSpec};
+use morphling::dist::runtime::{train_distributed, DistConfig, PartitionerKind};
+use morphling::dist::NetworkModel;
+use morphling::engine::sparsity::calibrate_gamma;
+use morphling::engine::EngineKind;
+use morphling::graph::datasets;
+use morphling::model::Arch;
+use morphling::optim::OptKind;
+use morphling::partition::{hierarchical_partition, quality};
+use morphling::util::argparse::Args;
+use morphling::util::table::{fmt_bytes, fmt_secs, Table};
+
+fn cmd_info() {
+    let mut t = Table::new(vec![
+        "dataset", "nodes", "edges", "features", "classes", "sparsity", "scale(real N)",
+    ]);
+    for spec in datasets::all_specs() {
+        t.row(vec![
+            spec.name.to_string(),
+            spec.nodes.to_string(),
+            spec.edges.to_string(),
+            spec.features.to_string(),
+            spec.classes.to_string(),
+            format!("{:.2}", spec.feat_sparsity),
+            format!("{:.0}x ({})", spec.node_scale(), spec.real_nodes),
+        ]);
+    }
+    println!("Table II (scaled synthetic replicas — see DESIGN.md §5):");
+    print!("{}", t.render());
+}
+
+fn cmd_shapes(args: &Args) -> Result<()> {
+    let out = args.get_or("out", "artifacts/shapes.json").to_string();
+    let only: Vec<&str> = args
+        .get("datasets")
+        .map(|d| d.split(',').collect())
+        .unwrap_or_default();
+    let mut obj = Vec::new();
+    for spec in datasets::all_specs() {
+        if !only.is_empty() && !only.contains(&spec.name) {
+            continue;
+        }
+        let ds = datasets::load(&spec);
+        obj.push(format!(
+            "\"{}\":{{\"n\":{},\"e\":{},\"f\":{},\"c\":{}}}",
+            spec.name,
+            spec.nodes,
+            ds.graph.num_edges(),
+            spec.features,
+            spec.classes
+        ));
+    }
+    if let Some(parent) = std::path::Path::new(&out).parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    std::fs::write(&out, format!("{{{}}}", obj.join(",")))?;
+    println!("wrote {} dataset shape buckets to {out}", obj.len());
+    Ok(())
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let spec = TrainSpec {
+        dataset: args.get_or("dataset", "corafull").to_string(),
+        arch: Arch::parse(args.get_or("arch", "gcn")).ok_or_else(|| anyhow!("bad --arch"))?,
+        engine: EngineKind::parse(args.get_or("engine", "native"))
+            .ok_or_else(|| anyhow!("bad --engine (native|pyg|dgl|pjrt)"))?,
+        epochs: args.usize_or("epochs", 100),
+        optimizer: OptKind::parse(args.get_or("optimizer", "adam"))
+            .ok_or_else(|| anyhow!("bad --optimizer"))?,
+        lr: args.f32_or("lr", 0.01),
+        tau: args.get("tau").and_then(|v| v.parse().ok()),
+        calibrate: args.flag("calibrate"),
+        seed: args.u64_or("seed", 42),
+        artifacts_dir: args.get_or("artifacts", "artifacts").into(),
+        log: !args.flag("quiet"),
+    };
+    let out = run(&spec)?;
+    println!(
+        "\n{} on {} [{} path, s={:.3}]",
+        out.engine_name, spec.dataset, out.mode, out.sparsity
+    );
+    println!(
+        "epochs {}  final loss {:.4}  test acc {:.3}  sustained epoch {}  peak mem {}",
+        spec.epochs,
+        out.report.final_loss(),
+        out.report.test_acc,
+        fmt_secs(out.report.sustained_epoch_secs()),
+        fmt_bytes(out.peak_bytes),
+    );
+    Ok(())
+}
+
+fn cmd_partition(args: &Args) -> Result<()> {
+    let name = args.get_or("dataset", "corafull");
+    let k = args.usize_or("k", 4);
+    let ds = datasets::load_by_name(name).ok_or_else(|| anyhow!("unknown dataset {name}"))?;
+    let t0 = std::time::Instant::now();
+    let r = hierarchical_partition(&ds.raw_graph, k, args.u64_or("seed", 1));
+    let elapsed = t0.elapsed().as_secs_f64();
+    let q = quality::assess(&ds.raw_graph, &r.partitioning);
+    println!(
+        "partitioned {name} into {k} parts via {} in {}",
+        r.strategy.name(),
+        fmt_secs(elapsed)
+    );
+    println!(
+        "edge-cut {} ({:.1}%)  vertex-imbalance {:.3}  compute-imbalance {:.3}  ghosts max {} total {}",
+        q.edge_cut,
+        q.cut_ratio * 100.0,
+        q.vertex_imbalance,
+        q.compute_imbalance,
+        q.max_ghosts,
+        q.total_ghosts
+    );
+    Ok(())
+}
+
+fn cmd_dist(args: &Args) -> Result<()> {
+    let name = args.get_or("dataset", "corafull");
+    let ds = datasets::load_by_name(name).ok_or_else(|| anyhow!("unknown dataset {name}"))?;
+    let cfg = DistConfig {
+        world: args.usize_or("world", 4),
+        epochs: args.usize_or("epochs", 10),
+        partitioner: if args.flag("chunk") {
+            PartitionerKind::VertexChunk
+        } else {
+            PartitionerKind::Hierarchical
+        },
+        pipelined: !args.flag("blocking"),
+        network: match args.get_or("network", "infiniband") {
+            "ethernet" => NetworkModel::ethernet(),
+            "ideal" => NetworkModel::ideal(),
+            _ => NetworkModel::infiniband(),
+        },
+        seed: args.u64_or("seed", 42),
+    };
+    let r = train_distributed(&ds, &cfg);
+    println!(
+        "{name} x{} ranks [{}, {}]: final loss {:.4}, sustained epoch {}",
+        cfg.world,
+        r.partition_strategy,
+        if cfg.pipelined { "pipelined" } else { "blocking" },
+        r.final_loss(),
+        fmt_secs(r.sustained_epoch_secs())
+    );
+    let mut t = Table::new(vec!["rank", "local", "ghosts", "edges", "sent", "exposed-comm"]);
+    for s in &r.ranks {
+        t.row(vec![
+            s.rank.to_string(),
+            s.n_local.to_string(),
+            s.n_ghost.to_string(),
+            s.local_edges.to_string(),
+            fmt_bytes(s.bytes_sent),
+            fmt_secs(s.exposed_comm_secs),
+        ]);
+    }
+    print!("{}", t.render());
+    Ok(())
+}
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    match args.positional.first().map(String::as_str) {
+        Some("info") => {
+            cmd_info();
+            Ok(())
+        }
+        Some("shapes") => cmd_shapes(&args),
+        Some("train") => cmd_train(&args),
+        Some("partition") => cmd_partition(&args),
+        Some("dist") => cmd_dist(&args),
+        Some("calibrate") => {
+            let g = calibrate_gamma(args.u64_or("seed", 7));
+            println!(
+                "efficiency ratio γ = {:.3} → sparse path when s ≥ τ = {:.3}",
+                g,
+                1.0 - g
+            );
+            Ok(())
+        }
+        _ => {
+            eprintln!(
+                "usage: morphling <info|shapes|train|partition|dist|calibrate> [--flags]\n\
+                 train:     --dataset corafull --engine native|pyg|dgl|pjrt --arch gcn|sage|sage-max|gin --epochs 100\n\
+                 partition: --dataset corafull --k 4\n\
+                 dist:      --dataset corafull --world 4 [--blocking] [--chunk] [--network infiniband|ethernet|ideal]\n\
+                 shapes:    --out artifacts/shapes.json [--datasets a,b,c]"
+            );
+            Ok(())
+        }
+    }
+}

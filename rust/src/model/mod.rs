@@ -1,0 +1,214 @@
+//! GNN model definitions — the DSL-level objects of Listing 1.
+//!
+//! A [`ModelConfig`] is the analogue of the paper's high-level program
+//! (`gnn.initializeLayers(neuronsPerLayer, "xaviers")`,
+//! `gnn.forwardPass(l, "SAGE", "Max")`): architecture, aggregation scheme,
+//! and layer widths. [`GnnParams`] owns the trainable state (weights,
+//! biases, gradients) that the paper keeps in C++ memory, shared by every
+//! execution engine so engines are numerically comparable.
+
+use crate::tensor::Matrix;
+use crate::util::Rng;
+
+/// GNN architecture, mirroring the paper's supported models (§III-A).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Arch {
+    /// GCN: symmetric-normalized mean aggregation (Kipf & Welling).
+    Gcn,
+    /// GraphSAGE with mean aggregation + separate self transform.
+    SageMean,
+    /// GraphSAGE with elementwise max aggregation (Listing 1's "SAGE","Max").
+    SageMax,
+    /// GIN: sum aggregation with (1+ε)·self (ε fixed at 0 here).
+    Gin,
+}
+
+impl Arch {
+    pub fn parse(s: &str) -> Option<Arch> {
+        match s.to_ascii_lowercase().as_str() {
+            "gcn" => Some(Arch::Gcn),
+            "sage" | "sage-mean" | "sagemean" => Some(Arch::SageMean),
+            "sage-max" | "sagemax" => Some(Arch::SageMax),
+            "gin" => Some(Arch::Gin),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Arch::Gcn => "gcn",
+            Arch::SageMean => "sage-mean",
+            Arch::SageMax => "sage-max",
+            Arch::Gin => "gin",
+        }
+    }
+
+    /// Whether layers carry a separate self-feature weight `W_self`.
+    pub fn has_self_weight(&self) -> bool {
+        matches!(self, Arch::SageMean | Arch::SageMax)
+    }
+}
+
+/// Model shape: `dims[0]` = input features, `dims.last()` = classes, hidden
+/// widths in between. The paper's benchmark model is a 3-layer GCN with
+/// hidden width 32.
+#[derive(Clone, Debug)]
+pub struct ModelConfig {
+    pub arch: Arch,
+    pub dims: Vec<usize>,
+}
+
+impl ModelConfig {
+    /// The paper's evaluation model: 3-layer, hidden dim 32.
+    pub fn paper_default(arch: Arch, in_features: usize, classes: usize) -> ModelConfig {
+        ModelConfig {
+            arch,
+            dims: vec![in_features, 32, 32, classes],
+        }
+    }
+
+    pub fn num_layers(&self) -> usize {
+        self.dims.len() - 1
+    }
+}
+
+/// Per-layer trainable parameters plus their gradient buffers.
+#[derive(Clone, Debug)]
+pub struct LayerParams {
+    /// Neighbor-path weight `(in × out)`.
+    pub w: Matrix,
+    /// Self-path weight for SAGE variants.
+    pub w_self: Option<Matrix>,
+    /// Bias `(out)`.
+    pub b: Vec<f32>,
+    // gradients
+    pub dw: Matrix,
+    pub dw_self: Option<Matrix>,
+    pub db: Vec<f32>,
+}
+
+/// All trainable state of a model.
+#[derive(Clone, Debug)]
+pub struct GnnParams {
+    pub config: ModelConfig,
+    pub layers: Vec<LayerParams>,
+}
+
+impl GnnParams {
+    /// Xavier initialization (the paper's `"xaviers"`).
+    pub fn init(config: &ModelConfig, rng: &mut Rng) -> GnnParams {
+        let layers = (0..config.num_layers())
+            .map(|l| {
+                let (i, o) = (config.dims[l], config.dims[l + 1]);
+                LayerParams {
+                    w: Matrix::xavier(i, o, rng),
+                    w_self: config
+                        .arch
+                        .has_self_weight()
+                        .then(|| Matrix::xavier(i, o, rng)),
+                    b: vec![0.0; o],
+                    dw: Matrix::zeros(i, o),
+                    dw_self: config.arch.has_self_weight().then(|| Matrix::zeros(i, o)),
+                    db: vec![0.0; o],
+                }
+            })
+            .collect();
+        GnnParams {
+            config: config.clone(),
+            layers,
+        }
+    }
+
+    /// Total number of trainable scalars.
+    pub fn num_params(&self) -> usize {
+        self.layers
+            .iter()
+            .map(|l| {
+                l.w.data.len()
+                    + l.w_self.as_ref().map(|m| m.data.len()).unwrap_or(0)
+                    + l.b.len()
+            })
+            .sum()
+    }
+
+    /// Visit every (param, grad) buffer pair — the optimizer's iteration
+    /// surface (keeps optimizer code independent of layer structure).
+    pub fn visit_params(&mut self, mut f: impl FnMut(&mut [f32], &[f32])) {
+        for l in self.layers.iter_mut() {
+            f(&mut l.w.data, &l.dw.data);
+            if let (Some(ws), Some(dws)) = (l.w_self.as_mut(), l.dw_self.as_ref()) {
+                f(&mut ws.data, &dws.data);
+            }
+            f(&mut l.b, &l.db);
+        }
+    }
+
+    /// Zero all gradient buffers.
+    pub fn zero_grads(&mut self) {
+        for l in self.layers.iter_mut() {
+            l.dw.fill_zero();
+            if let Some(d) = l.dw_self.as_mut() {
+                d.fill_zero();
+            }
+            l.db.iter_mut().for_each(|v| *v = 0.0);
+        }
+    }
+
+    /// Byte footprint of parameters + gradients.
+    pub fn nbytes(&self) -> usize {
+        self.num_params() * 4 * 2
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_default_shape() {
+        let c = ModelConfig::paper_default(Arch::Gcn, 500, 7);
+        assert_eq!(c.dims, vec![500, 32, 32, 7]);
+        assert_eq!(c.num_layers(), 3);
+    }
+
+    #[test]
+    fn init_shapes_and_counts() {
+        let mut rng = Rng::new(1);
+        let c = ModelConfig::paper_default(Arch::Gcn, 100, 10);
+        let p = GnnParams::init(&c, &mut rng);
+        assert_eq!(p.layers.len(), 3);
+        assert_eq!((p.layers[0].w.rows, p.layers[0].w.cols), (100, 32));
+        assert_eq!((p.layers[2].w.rows, p.layers[2].w.cols), (32, 10));
+        assert!(p.layers[0].w_self.is_none());
+        assert_eq!(p.num_params(), 100 * 32 + 32 + 32 * 32 + 32 + 32 * 10 + 10);
+    }
+
+    #[test]
+    fn sage_has_self_weights() {
+        let mut rng = Rng::new(2);
+        let c = ModelConfig::paper_default(Arch::SageMax, 50, 5);
+        let p = GnnParams::init(&c, &mut rng);
+        assert!(p.layers.iter().all(|l| l.w_self.is_some()));
+    }
+
+    #[test]
+    fn visit_params_covers_all() {
+        let mut rng = Rng::new(3);
+        let c = ModelConfig::paper_default(Arch::SageMean, 20, 4);
+        let mut p = GnnParams::init(&c, &mut rng);
+        let total = p.num_params();
+        let mut seen = 0;
+        p.visit_params(|param, grad| {
+            assert_eq!(param.len(), grad.len());
+            seen += param.len();
+        });
+        assert_eq!(seen, total);
+    }
+
+    #[test]
+    fn arch_parse() {
+        assert_eq!(Arch::parse("GCN"), Some(Arch::Gcn));
+        assert_eq!(Arch::parse("sage-max"), Some(Arch::SageMax));
+        assert_eq!(Arch::parse("bogus"), None);
+    }
+}

@@ -1,0 +1,170 @@
+//! Optimizers over [`GnnParams`] — SGD, Adam, AdamW — driving the fused
+//! update kernels in [`crate::kernels::update`]. State (momentum/variance)
+//! lives alongside the parameters in plain Rust buffers, never crossing a
+//! framework boundary (paper §IV-E2.4).
+
+use crate::kernels::update::{adam_step, sgd_step, AdamParams};
+use crate::model::GnnParams;
+
+/// Which update rule to run (the DSL's `gnn.optimizer("adam", …)`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum OptKind {
+    Sgd,
+    Adam,
+    AdamW,
+}
+
+impl OptKind {
+    pub fn parse(s: &str) -> Option<OptKind> {
+        match s.to_ascii_lowercase().as_str() {
+            "sgd" => Some(OptKind::Sgd),
+            "adam" => Some(OptKind::Adam),
+            "adamw" => Some(OptKind::AdamW),
+            _ => None,
+        }
+    }
+}
+
+/// Optimizer with per-buffer state, matching the parameter layout produced
+/// by [`GnnParams::visit_params`].
+#[derive(Clone, Debug)]
+pub struct Optimizer {
+    pub kind: OptKind,
+    pub hp: AdamParams,
+    /// SGD momentum coefficient (ignored by Adam variants).
+    pub momentum: f32,
+    step: u64,
+    /// First-moment (or SGD momentum) buffers, one per param buffer.
+    m: Vec<Vec<f32>>,
+    /// Second-moment buffers (Adam variants only).
+    v: Vec<Vec<f32>>,
+}
+
+impl Optimizer {
+    /// Build with state buffers sized to `params`.
+    pub fn new(kind: OptKind, hp: AdamParams, params: &mut GnnParams) -> Optimizer {
+        let mut sizes = Vec::new();
+        params.visit_params(|p, _| sizes.push(p.len()));
+        Optimizer {
+            kind,
+            hp,
+            momentum: 0.9,
+            step: 0,
+            m: sizes.iter().map(|&n| vec![0.0; n]).collect(),
+            v: sizes.iter().map(|&n| vec![0.0; n]).collect(),
+        }
+    }
+
+    /// The paper's benchmark setting: Adam(lr=0.01, β1=0.9, β2=0.999).
+    pub fn paper_default(params: &mut GnnParams) -> Optimizer {
+        Optimizer::new(OptKind::Adam, AdamParams::default(), params)
+    }
+
+    /// Apply one update step from the gradients stored in `params`.
+    pub fn step(&mut self, params: &mut GnnParams) {
+        self.step += 1;
+        let t = self.step;
+        let kind = self.kind;
+        let hp = if kind == OptKind::AdamW && self.hp.weight_decay == 0.0 {
+            AdamParams {
+                weight_decay: 0.01,
+                ..self.hp
+            }
+        } else {
+            self.hp
+        };
+        let momentum = self.momentum;
+        let mut idx = 0usize;
+        let (ms, vs) = (&mut self.m, &mut self.v);
+        params.visit_params(|p, g| {
+            match kind {
+                OptKind::Sgd => sgd_step(p, g, &mut ms[idx], hp.lr, momentum),
+                OptKind::Adam | OptKind::AdamW => {
+                    adam_step(p, g, &mut ms[idx], &mut vs[idx], t, &hp)
+                }
+            }
+            idx += 1;
+        });
+    }
+
+    /// Steps taken so far.
+    pub fn steps(&self) -> u64 {
+        self.step
+    }
+
+    /// Byte footprint of optimizer state.
+    pub fn nbytes(&self) -> usize {
+        (self.m.iter().map(|b| b.len()).sum::<usize>()
+            + self.v.iter().map(|b| b.len()).sum::<usize>())
+            * 4
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{Arch, GnnParams, ModelConfig};
+    use crate::util::Rng;
+
+    fn tiny_params() -> GnnParams {
+        let mut rng = Rng::new(1);
+        GnnParams::init(&ModelConfig::paper_default(Arch::Gcn, 8, 3), &mut rng)
+    }
+
+    #[test]
+    fn adam_moves_params_against_gradient() {
+        let mut p = tiny_params();
+        let before = p.layers[0].w.data.clone();
+        // constant positive gradient everywhere
+        p.visit_params(|_, _| {});
+        for l in p.layers.iter_mut() {
+            l.dw.data.iter_mut().for_each(|g| *g = 1.0);
+        }
+        let mut opt = Optimizer::paper_default(&mut p);
+        opt.step(&mut p);
+        assert_eq!(opt.steps(), 1);
+        // every weight moved down
+        assert!(p.layers[0]
+            .w
+            .data
+            .iter()
+            .zip(&before)
+            .all(|(a, b)| a < b));
+    }
+
+    #[test]
+    fn sgd_step_size_exact() {
+        let mut p = tiny_params();
+        let w0 = p.layers[0].w.data[0];
+        p.layers[0].dw.data[0] = 2.0;
+        let mut opt = Optimizer::new(
+            OptKind::Sgd,
+            AdamParams {
+                lr: 0.1,
+                ..Default::default()
+            },
+            &mut p,
+        );
+        opt.momentum = 0.0;
+        opt.step(&mut p);
+        assert!((p.layers[0].w.data[0] - (w0 - 0.2)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn adamw_applies_decay() {
+        let mut p = tiny_params();
+        let w0 = p.layers[0].w.data[0];
+        // zero gradient: only decay acts
+        let mut opt = Optimizer::new(OptKind::AdamW, AdamParams::default(), &mut p);
+        opt.step(&mut p);
+        let w1 = p.layers[0].w.data[0];
+        assert!(w1.abs() < w0.abs() || w0 == 0.0);
+    }
+
+    #[test]
+    fn state_sizes_match_params() {
+        let mut p = tiny_params();
+        let opt = Optimizer::paper_default(&mut p);
+        assert_eq!(opt.nbytes(), p.num_params() * 8);
+    }
+}

@@ -1,0 +1,233 @@
+//! Algorithm 4: Hierarchical Constraint Relaxation Partitioning.
+//!
+//! The driver tries, in order:
+//! - **Phase I** — topology-aware minimization: the multilevel partitioner
+//!   at ε = 1.03 (SHEM k-way); on failure, retry at ε = 1.20 (recursive
+//!   bisection semantics in our implementation).
+//! - **Phase II** — if the graph has multiple connected components,
+//!   Best-Fit-Decreasing bin packing of whole components (keeps dense
+//!   subgraphs rank-local; zero edge cut when it applies).
+//! - **Phase III** — load-aware greedy fallback: vertices in descending
+//!   degree order, each to the currently lightest part, where weight is
+//!   `Σ deg(v)+1` — computational load, not vertex count.
+
+use super::metis_like::{partition_kway, MetisOptions};
+use super::Partitioning;
+use crate::graph::traversal::{component_sizes, connected_components};
+use crate::graph::Graph;
+
+/// Which strategy produced the partition (reported in Table I rows).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PartitionStrategy {
+    /// Phase I at strict ε.
+    MetisStrict,
+    /// Phase I after relaxation to ε = 1.20.
+    MetisRelaxed,
+    /// Phase II component bin packing.
+    ComponentPacking,
+    /// Phase III degree-weighted greedy.
+    GreedyLoad,
+}
+
+impl PartitionStrategy {
+    pub fn name(&self) -> &'static str {
+        match self {
+            PartitionStrategy::MetisStrict => "metis-like(ε=1.03)",
+            PartitionStrategy::MetisRelaxed => "metis-like(ε=1.20)",
+            PartitionStrategy::ComponentPacking => "component-bfd",
+            PartitionStrategy::GreedyLoad => "greedy-degree",
+        }
+    }
+}
+
+/// Phase II: Best-Fit-Decreasing over connected components. Only meaningful
+/// (and only returned) when the graph has ≥ k components.
+pub fn component_partition(g: &Graph, k: usize) -> Option<Partitioning> {
+    let (comp, count) = connected_components(g);
+    if count < k {
+        return None;
+    }
+    let sizes = component_sizes(&comp, count);
+    // components sorted by size descending (Best-Fit-Decreasing)
+    let mut order: Vec<usize> = (0..count).collect();
+    order.sort_by_key(|&c| std::cmp::Reverse(sizes[c]));
+    let mut part_of_comp = vec![0u32; count];
+    let mut weights = vec![0usize; k];
+    for &c in &order {
+        // arg min weight
+        let p = (0..k).min_by_key(|&p| weights[p]).unwrap();
+        part_of_comp[c] = p as u32;
+        weights[p] += sizes[c];
+    }
+    Some(Partitioning {
+        k,
+        assign: comp.iter().map(|&c| part_of_comp[c as usize]).collect(),
+    })
+}
+
+/// Phase III: degree-descending greedy with computational-load balancing
+/// (`weight_p = Σ_{v∈P} deg(v)+1`, Algorithm 4 lines 23–31).
+pub fn greedy_degree_partition(g: &Graph, k: usize) -> Partitioning {
+    let mut order: Vec<u32> = (0..g.num_nodes as u32).collect();
+    order.sort_by_key(|&v| std::cmp::Reverse(g.degree(v as usize)));
+    let mut weights = vec![0u64; k];
+    let mut assign = vec![0u32; g.num_nodes];
+    for &v in &order {
+        let p = (0..k).min_by_key(|&p| weights[p]).unwrap();
+        assign[v as usize] = p as u32;
+        weights[p] += g.degree(v as usize) as u64 + 1;
+    }
+    Partitioning { k, assign }
+}
+
+/// Result of the hierarchical driver.
+#[derive(Clone, Debug)]
+pub struct HierarchicalResult {
+    pub partitioning: Partitioning,
+    pub strategy: PartitionStrategy,
+}
+
+/// The Algorithm 4 driver. Always succeeds (Phase III is total).
+pub fn hierarchical_partition(g: &Graph, k: usize, seed: u64) -> HierarchicalResult {
+    // Phase I strict
+    let strict = MetisOptions {
+        epsilon: 1.03,
+        seed,
+        ..Default::default()
+    };
+    if let Ok(p) = partition_kway(g, k, &strict) {
+        return HierarchicalResult {
+            partitioning: p,
+            strategy: PartitionStrategy::MetisStrict,
+        };
+    }
+    // Phase I relaxed
+    let relaxed = MetisOptions {
+        epsilon: 1.20,
+        seed: seed ^ 0xA5,
+        ..Default::default()
+    };
+    if let Ok(p) = partition_kway(g, k, &relaxed) {
+        return HierarchicalResult {
+            partitioning: p,
+            strategy: PartitionStrategy::MetisRelaxed,
+        };
+    }
+    // Phase II
+    if let Some(p) = component_partition(g, k) {
+        // accept only if reasonably balanced (bin packing can fail on one
+        // giant component + crumbs)
+        let sizes = p.part_sizes();
+        let ideal = g.num_nodes as f64 / k as f64;
+        if *sizes.iter().max().unwrap() as f64 <= 1.5 * ideal + 1.0 {
+            return HierarchicalResult {
+                partitioning: p,
+                strategy: PartitionStrategy::ComponentPacking,
+            };
+        }
+    }
+    // Phase III
+    HierarchicalResult {
+        partitioning: greedy_degree_partition(g, k),
+        strategy: PartitionStrategy::GreedyLoad,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generator::{power_law_graph, star_graph, GraphConfig};
+    use crate::partition::quality::{assess, compute_loads};
+    use crate::util::Rng;
+
+    #[test]
+    fn phase1_used_on_well_behaved_graph() {
+        let mut rng = Rng::new(2);
+        let g = power_law_graph(
+            &GraphConfig {
+                num_nodes: 600,
+                num_edges: 4000,
+                power_law_gamma: 2.8,
+                components: 1,
+            },
+            &mut rng,
+        );
+        let r = hierarchical_partition(&g, 4, 1);
+        r.partitioning.validate(600).unwrap();
+        assert!(
+            matches!(
+                r.strategy,
+                PartitionStrategy::MetisStrict | PartitionStrategy::MetisRelaxed
+            ),
+            "{:?}",
+            r.strategy
+        );
+    }
+
+    #[test]
+    fn component_packing_on_disconnected() {
+        let mut rng = Rng::new(3);
+        let g = power_law_graph(
+            &GraphConfig {
+                num_nodes: 400,
+                num_edges: 2000,
+                power_law_gamma: 2.5,
+                components: 8,
+            },
+            &mut rng,
+        );
+        let p = component_partition(&g, 4).unwrap();
+        p.validate(400).unwrap();
+        // components kept whole → zero edge cut
+        assert_eq!(super::super::quality::edge_cut(&g, &p), 0);
+    }
+
+    #[test]
+    fn greedy_balances_compute_on_star() {
+        // star: hub deg n−1 dominates; greedy puts the hub alone-ish
+        let g = star_graph(201);
+        let p = greedy_degree_partition(&g, 4);
+        p.validate(201).unwrap();
+        let loads = compute_loads(&g, &p);
+        let max = *loads.iter().max().unwrap() as f64;
+        let ideal = loads.iter().sum::<u64>() as f64 / 4.0;
+        // hub = 200 of 400 total degree → perfect balance impossible, but
+        // greedy puts everything else elsewhere: max = hub = 2× ideal
+        assert!(max <= 2.1 * ideal, "max {max} ideal {ideal}");
+        // vertex-count balance is intentionally sacrificed
+    }
+
+    #[test]
+    fn greedy_beats_chunk_on_compute_balance() {
+        let mut rng = Rng::new(7);
+        let g = power_law_graph(
+            &GraphConfig {
+                num_nodes: 1000,
+                num_edges: 8000,
+                power_law_gamma: 2.1,
+                components: 1,
+            },
+            &mut rng,
+        );
+        let greedy = greedy_degree_partition(&g, 4);
+        let chunk = crate::partition::chunk_partition(1000, 4);
+        let qg = assess(&g, &greedy);
+        let qc = assess(&g, &chunk);
+        assert!(
+            qg.compute_imbalance < qc.compute_imbalance,
+            "greedy {} vs chunk {}",
+            qg.compute_imbalance,
+            qc.compute_imbalance
+        );
+        // greedy compute balance should be near-perfect on 1000 nodes
+        assert!(qg.compute_imbalance < 1.05, "{}", qg.compute_imbalance);
+    }
+
+    #[test]
+    fn driver_always_succeeds() {
+        // pathological: star graph
+        let g = star_graph(101);
+        let r = hierarchical_partition(&g, 4, 9);
+        r.partitioning.validate(101).unwrap();
+    }
+}

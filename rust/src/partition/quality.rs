@@ -1,0 +1,139 @@
+//! Partition quality metrics — the columns of the paper's Table I and the
+//! quantities in its communication-cost model (§IV-E3).
+
+use super::Partitioning;
+use crate::graph::Graph;
+
+/// Number of edges crossing partition boundaries (undirected pairs counted
+/// once; the graphs store both directions).
+pub fn edge_cut(g: &Graph, p: &Partitioning) -> usize {
+    let mut cut = 0usize;
+    for u in 0..g.num_nodes {
+        for &v in g.neighbors(u) {
+            if p.assign[u] != p.assign[v as usize] {
+                cut += 1;
+            }
+        }
+    }
+    cut / 2
+}
+
+/// Computational load per part: `Σ_{v∈P} deg(v)` — the quantity the paper's
+/// Eq. 9 says governs per-rank SpMM time.
+pub fn compute_loads(g: &Graph, p: &Partitioning) -> Vec<u64> {
+    let mut loads = vec![0u64; p.k];
+    for u in 0..g.num_nodes {
+        loads[p.assign[u] as usize] += g.degree(u) as u64;
+    }
+    loads
+}
+
+/// Number of distinct ghost (remote-dependency) vertices each part must
+/// fetch: `|{v : v ∉ P, ∃u∈P with (u,v)∈E}|` — the paper's halo-volume
+/// driver (Eq. 10).
+pub fn ghost_counts(g: &Graph, p: &Partitioning) -> Vec<usize> {
+    let mut counts = vec![0usize; p.k];
+    let mut seen = vec![u32::MAX; g.num_nodes]; // last part that counted v
+    for part in 0..p.k as u32 {
+        for u in 0..g.num_nodes {
+            if p.assign[u] != part {
+                continue;
+            }
+            for &v in g.neighbors(u) {
+                if p.assign[v as usize] != part && seen[v as usize] != part {
+                    seen[v as usize] = part;
+                    counts[part as usize] += 1;
+                }
+            }
+        }
+    }
+    counts
+}
+
+/// Full quality summary.
+#[derive(Clone, Debug)]
+pub struct PartitionQuality {
+    pub edge_cut: usize,
+    /// Fraction of undirected edges cut.
+    pub cut_ratio: f64,
+    /// max(part vertex count) / ideal.
+    pub vertex_imbalance: f64,
+    /// max(part Σdeg) / ideal — the straggler factor of Eq. 8/9.
+    pub compute_imbalance: f64,
+    pub total_ghosts: usize,
+    pub max_ghosts: usize,
+}
+
+/// Compute all quality metrics.
+pub fn assess(g: &Graph, p: &Partitioning) -> PartitionQuality {
+    let cut = edge_cut(g, p);
+    let sizes = p.part_sizes();
+    let loads = compute_loads(g, p);
+    let ghosts = ghost_counts(g, p);
+    let ideal_sz = g.num_nodes as f64 / p.k as f64;
+    let total_load: u64 = loads.iter().sum();
+    let ideal_load = total_load as f64 / p.k as f64;
+    PartitionQuality {
+        edge_cut: cut,
+        cut_ratio: cut as f64 / (g.num_edges() / 2).max(1) as f64,
+        vertex_imbalance: *sizes.iter().max().unwrap() as f64 / ideal_sz.max(1e-9),
+        compute_imbalance: *loads.iter().max().unwrap() as f64 / ideal_load.max(1e-9),
+        total_ghosts: ghosts.iter().sum(),
+        max_ghosts: *ghosts.iter().max().unwrap_or(&0),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::partition::chunk_partition;
+
+    fn two_triangles() -> Graph {
+        // triangle {0,1,2} + triangle {3,4,5} + bridge 2-3
+        let mut e = vec![
+            (0u32, 1u32),
+            (1, 2),
+            (0, 2),
+            (3, 4),
+            (4, 5),
+            (3, 5),
+            (2, 3),
+        ];
+        let rev: Vec<_> = e.iter().map(|&(a, b)| (b, a)).collect();
+        e.extend(rev);
+        Graph::from_edges(6, &e)
+    }
+
+    #[test]
+    fn edge_cut_counts_bridge_only() {
+        let g = two_triangles();
+        let p = chunk_partition(6, 2); // {0,1,2} | {3,4,5}
+        assert_eq!(edge_cut(&g, &p), 1);
+    }
+
+    #[test]
+    fn ghost_counts_bridge() {
+        let g = two_triangles();
+        let p = chunk_partition(6, 2);
+        let ghosts = ghost_counts(&g, &p);
+        assert_eq!(ghosts, vec![1, 1]); // each side needs one remote node
+    }
+
+    #[test]
+    fn compute_loads_sum_to_degree_total() {
+        let g = two_triangles();
+        let p = chunk_partition(6, 2);
+        let loads = compute_loads(&g, &p);
+        assert_eq!(loads.iter().sum::<u64>() as usize, g.num_edges());
+    }
+
+    #[test]
+    fn assess_on_perfect_split() {
+        let g = two_triangles();
+        let p = chunk_partition(6, 2);
+        let q = assess(&g, &p);
+        assert_eq!(q.edge_cut, 1);
+        assert!((q.vertex_imbalance - 1.0).abs() < 1e-9);
+        assert!(q.cut_ratio < 0.2);
+    }
+}

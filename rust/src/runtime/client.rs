@@ -1,0 +1,74 @@
+//! PJRT client wrapper: compiles HLO-text artifacts once and caches the
+//! loaded executables.
+
+use super::manifest::{Manifest, ManifestEntry};
+use anyhow::{anyhow, Context, Result};
+use std::collections::HashMap;
+use std::path::Path;
+
+/// A CPU PJRT client + executable cache keyed by artifact file name.
+pub struct PjrtRuntime {
+    pub client: xla::PjRtClient,
+    pub manifest: Manifest,
+    cache: HashMap<String, std::rc::Rc<xla::PjRtLoadedExecutable>>,
+}
+
+impl PjrtRuntime {
+    /// Create the CPU client and load the manifest from `artifacts_dir`.
+    pub fn new(artifacts_dir: &Path) -> Result<PjrtRuntime> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        let manifest = Manifest::load(artifacts_dir)?;
+        Ok(PjrtRuntime {
+            client,
+            manifest,
+            cache: HashMap::new(),
+        })
+    }
+
+    /// Compile (or fetch from cache) the executable for a manifest entry.
+    pub fn executable(
+        &mut self,
+        entry: &ManifestEntry,
+    ) -> Result<std::rc::Rc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.cache.get(&entry.file) {
+            return Ok(exe.clone());
+        }
+        let path = self.manifest.path_of(entry);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .map_err(|e| anyhow!("parsing HLO text {path:?}: {e:?}"))
+        .with_context(|| "run `make artifacts` to regenerate")?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("XLA compile of {}: {e:?}", entry.file))?;
+        let exe = std::rc::Rc::new(exe);
+        self.cache.insert(entry.file.clone(), exe.clone());
+        Ok(exe)
+    }
+}
+
+/// Build an f32 literal of the given shape.
+pub fn literal_f32(data: &[f32], dims: &[i64]) -> Result<xla::Literal> {
+    let l = xla::Literal::vec1(data);
+    if dims.len() == 1 && dims[0] as usize == data.len() {
+        return Ok(l);
+    }
+    l.reshape(dims).map_err(|e| anyhow!("reshape f32: {e:?}"))
+}
+
+/// Build an i32 literal of the given shape.
+pub fn literal_i32(data: &[i32], dims: &[i64]) -> Result<xla::Literal> {
+    let l = xla::Literal::vec1(data);
+    if dims.len() == 1 && dims[0] as usize == data.len() {
+        return Ok(l);
+    }
+    l.reshape(dims).map_err(|e| anyhow!("reshape i32: {e:?}"))
+}
+
+/// f32 scalar literal (shape []).
+pub fn literal_scalar_f32(v: f32) -> xla::Literal {
+    xla::Literal::scalar(v)
+}

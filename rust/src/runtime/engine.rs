@@ -1,0 +1,272 @@
+//! `PjrtEngine` — the accelerator-path [`Engine`]: one AOT-compiled fused
+//! training step per epoch, executed through PJRT.
+//!
+//! Construction pads the dataset to the kernel tile contract
+//! (N → node-block multiple with isolated dummy nodes, F → feature-tile
+//! multiple with zero columns; padding nodes are masked out so the loss is
+//! unchanged), uploads graph + features once as literals, and keeps
+//! parameters/optimizer state as literals that round-trip through the
+//! executable each epoch.
+
+use super::client::{literal_f32, literal_i32, literal_scalar_f32, PjrtRuntime};
+use crate::engine::{Engine, Mask};
+use crate::graph::{Dataset, Graph};
+use crate::tensor::Matrix;
+use crate::train::EpochStats;
+use crate::util::timer::PhaseTimes;
+use crate::util::Rng;
+use anyhow::{anyhow, Result};
+use std::path::Path;
+use std::rc::Rc;
+
+/// Which AOT training variant to execute.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PjrtVariant {
+    /// Morphling: Pallas tiled SpMM + Pallas GEMM.
+    Fused,
+    /// PyG-analogue: gather/segment-sum with |E|×H message tensors.
+    Gather,
+}
+
+impl PjrtVariant {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            PjrtVariant::Fused => "fused",
+            PjrtVariant::Gather => "gather",
+        }
+    }
+}
+
+/// PJRT-backed engine (GCN, the paper's benchmark model).
+pub struct PjrtEngine {
+    exe_train: Rc<xla::PjRtLoadedExecutable>,
+    exe_eval: Rc<xla::PjRtLoadedExecutable>,
+    /// csr(7) + x + labels — static per dataset.
+    static_inputs: Vec<xla::Literal>,
+    /// masks as literals: train/val/test.
+    masks: [xla::Literal; 3],
+    /// 6 parameter literals (w1,b1,w2,b2,w3,b3).
+    params: Vec<xla::Literal>,
+    /// 13 Adam-state literals (m×6, v×6, t).
+    opt: Vec<xla::Literal>,
+    variant: PjrtVariant,
+    entry_info: (usize, usize, usize, usize), // n_pad, e, f_pad, c
+    host_bytes: usize,
+}
+
+/// Pad a graph's CSR arrays to `n_pad` nodes (extra isolated nodes).
+fn padded_csr(g: &Graph, n_pad: usize) -> (Vec<i32>, Vec<i32>, Vec<f32>, Vec<i32>) {
+    let mut row_ptr: Vec<i32> = g.row_ptr.iter().map(|&v| v as i32).collect();
+    let last = *row_ptr.last().unwrap();
+    row_ptr.resize(n_pad + 1, last);
+    let col: Vec<i32> = g.col_idx.iter().map(|&v| v as i32).collect();
+    let val = g.weights.clone();
+    // per-edge destination row (for the gather variant's segment_sum)
+    let mut edge_row = vec![0i32; g.num_edges()];
+    for u in 0..g.num_nodes {
+        for e in g.row_ptr[u] as usize..g.row_ptr[u + 1] as usize {
+            edge_row[e] = u as i32;
+        }
+    }
+    (row_ptr, col, val, edge_row)
+}
+
+impl PjrtEngine {
+    /// Build from the artifacts directory + a dataset. `seed` controls
+    /// Xavier init (same scheme as the native engines).
+    pub fn new(
+        runtime: &mut PjrtRuntime,
+        ds: &Dataset,
+        variant: PjrtVariant,
+        seed: u64,
+    ) -> Result<PjrtEngine> {
+        let entry = runtime
+            .manifest
+            .find(ds.spec.name, "train", variant.as_str())
+            .ok_or_else(|| {
+                anyhow!(
+                    "no '{}' train artifact for dataset {} — rerun `make artifacts`",
+                    variant.as_str(),
+                    ds.spec.name
+                )
+            })?
+            .clone();
+        let eval_entry = runtime
+            .manifest
+            .find(ds.spec.name, "eval", "fused")
+            .ok_or_else(|| anyhow!("no eval artifact for {}", ds.spec.name))?
+            .clone();
+        let exe_train = runtime.executable(&entry)?;
+        let exe_eval = runtime.executable(&eval_entry)?;
+        let hidden = runtime.manifest.hidden;
+
+        let (n_pad, f_pad, c) = (entry.n_pad, entry.f_pad, entry.c);
+        // --- static inputs ---
+        let (row_ptr, col, val, edge_row) = padded_csr(&ds.graph, n_pad);
+        let gt = ds.graph.transpose();
+        let (row_ptr_t, col_t, val_t, _) = padded_csr(&gt, n_pad);
+        let e = ds.graph.num_edges();
+        let mut x = vec![0f32; n_pad * f_pad];
+        for r in 0..ds.spec.nodes {
+            let src = ds.features.row(r);
+            x[r * f_pad..r * f_pad + src.len()].copy_from_slice(src);
+        }
+        let mut labels = vec![0i32; n_pad];
+        for (i, &l) in ds.labels.iter().enumerate() {
+            labels[i] = l as i32;
+        }
+        let mask_lit = |m: &[bool]| -> Result<xla::Literal> {
+            let mut buf = vec![0f32; n_pad];
+            for (i, &b) in m.iter().enumerate() {
+                buf[i] = if b { 1.0 } else { 0.0 };
+            }
+            literal_f32(&buf, &[n_pad as i64])
+        };
+        let host_bytes = (row_ptr.len() + col.len() + row_ptr_t.len() + col_t.len()) * 4
+            + (val.len() + val_t.len() + x.len() + n_pad * 4) * 4;
+
+        let static_inputs = vec![
+            literal_i32(&row_ptr, &[(n_pad + 1) as i64])?,
+            literal_i32(&col, &[e as i64])?,
+            literal_f32(&val, &[e as i64])?,
+            literal_i32(&row_ptr_t, &[(n_pad + 1) as i64])?,
+            literal_i32(&col_t, &[e as i64])?,
+            literal_f32(&val_t, &[e as i64])?,
+            literal_i32(&edge_row, &[e as i64])?,
+            literal_f32(&x, &[n_pad as i64, f_pad as i64])?,
+            literal_i32(&labels, &[n_pad as i64])?,
+        ];
+        let masks = [
+            mask_lit(&ds.train_mask)?,
+            mask_lit(&ds.val_mask)?,
+            mask_lit(&ds.test_mask)?,
+        ];
+
+        // --- parameters (Xavier, same scheme as native engines) ---
+        let mut rng = Rng::new(seed);
+        let dims = [(f_pad, hidden), (hidden, hidden), (hidden, c)];
+        let mut params = Vec::with_capacity(6);
+        for &(i, o) in &dims {
+            let w = Matrix::xavier(i, o, &mut rng);
+            params.push(literal_f32(&w.data, &[i as i64, o as i64])?);
+            params.push(literal_f32(&vec![0f32; o], &[o as i64])?);
+        }
+        let mut opt = Vec::with_capacity(13);
+        for _ in 0..2 {
+            for &(i, o) in &dims {
+                opt.push(literal_f32(&vec![0f32; i * o], &[i as i64, o as i64])?);
+                opt.push(literal_f32(&vec![0f32; o], &[o as i64])?);
+            }
+        }
+        opt.push(literal_scalar_f32(0.0));
+
+        Ok(PjrtEngine {
+            exe_train,
+            exe_eval,
+            static_inputs,
+            masks,
+            params,
+            opt,
+            variant,
+            entry_info: (n_pad, e, f_pad, c),
+            host_bytes,
+        })
+    }
+
+    /// Convenience constructor owning its runtime.
+    pub fn from_artifacts(
+        artifacts_dir: &Path,
+        ds: &Dataset,
+        variant: PjrtVariant,
+        seed: u64,
+    ) -> Result<PjrtEngine> {
+        let mut rt = PjrtRuntime::new(artifacts_dir)?;
+        PjrtEngine::new(&mut rt, ds, variant, seed)
+    }
+
+    fn run_train(&mut self) -> Result<(f64, f64)> {
+        // input order: csr(7), x, labels, mask, params(6), opt(13)
+        let mut args: Vec<&xla::Literal> = Vec::with_capacity(29);
+        args.extend(self.static_inputs.iter().take(9));
+        args.push(&self.masks[0]);
+        args.extend(self.params.iter());
+        args.extend(self.opt.iter());
+        let result = self
+            .exe_train
+            .execute::<&xla::Literal>(&args)
+            .map_err(|e| anyhow!("train execute: {e:?}"))?;
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("to_literal: {e:?}"))?
+            .to_tuple()
+            .map_err(|e| anyhow!("to_tuple: {e:?}"))?;
+        anyhow::ensure!(tuple.len() == 21, "expected 21 outputs, got {}", tuple.len());
+        let mut it = tuple.into_iter();
+        let loss = it
+            .next()
+            .unwrap()
+            .get_first_element::<f32>()
+            .map_err(|e| anyhow!("loss: {e:?}"))? as f64;
+        let acc = it
+            .next()
+            .unwrap()
+            .get_first_element::<f32>()
+            .map_err(|e| anyhow!("acc: {e:?}"))? as f64;
+        self.params = it.by_ref().take(6).collect();
+        self.opt = it.collect();
+        Ok((loss, acc))
+    }
+}
+
+impl Engine for PjrtEngine {
+    fn name(&self) -> &'static str {
+        match self.variant {
+            PjrtVariant::Fused => "morphling-pjrt(fused)",
+            PjrtVariant::Gather => "pjrt(gather/pyg)",
+        }
+    }
+
+    fn train_epoch(&mut self, _ds: &Dataset) -> EpochStats {
+        let mut phases = PhaseTimes::new();
+        let (loss, acc) = phases
+            .time("fused_step", || self.run_train())
+            .expect("pjrt train step");
+        EpochStats {
+            loss,
+            train_acc: acc,
+            phases,
+        }
+    }
+
+    fn evaluate(&mut self, _ds: &Dataset, mask: Mask) -> (f64, f64) {
+        let mask_idx = match mask {
+            Mask::Train => 0,
+            Mask::Val => 1,
+            Mask::Test => 2,
+        };
+        let mut args: Vec<&xla::Literal> = Vec::with_capacity(16);
+        args.extend(self.static_inputs.iter().take(9));
+        args.push(&self.masks[mask_idx]);
+        args.extend(self.params.iter());
+        let result = self
+            .exe_eval
+            .execute::<&xla::Literal>(&args)
+            .expect("eval execute");
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .expect("to_literal")
+            .to_tuple()
+            .expect("to_tuple");
+        let loss = tuple[0].get_first_element::<f32>().expect("loss") as f64;
+        let acc = tuple[1].get_first_element::<f32>().expect("acc") as f64;
+        (loss, acc)
+    }
+
+    fn peak_bytes(&self) -> usize {
+        // Host-side mirror only; XLA's internal allocations are opaque to
+        // this accounting (documented in DESIGN.md §4 — the memory table
+        // compares the native engines).
+        let (n_pad, _e, f_pad, c) = self.entry_info;
+        self.host_bytes + (f_pad * 32 + 32 * 32 + 32 * c + 64 + c) * 4 * 3 + n_pad * 12
+    }
+}

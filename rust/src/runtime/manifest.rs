@@ -1,0 +1,158 @@
+//! Parses `artifacts/manifest.json` — the contract between the Python
+//! compile path and the Rust runtime: which HLO file serves which
+//! (dataset, kind, variant), the padded shapes, and the exact flat input
+//! signature order of each executable.
+
+use crate::util::json::Json;
+use anyhow::{anyhow, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// One input tensor slot of an executable.
+#[derive(Clone, Debug)]
+pub struct InputSlot {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+/// One AOT-compiled artifact.
+#[derive(Clone, Debug)]
+pub struct ManifestEntry {
+    pub name: String,
+    /// "train" or "eval".
+    pub kind: String,
+    /// "fused" (Morphling Pallas) or "gather" (PyG-analogue XLA).
+    pub variant: String,
+    pub file: String,
+    pub n: usize,
+    pub e: usize,
+    pub f: usize,
+    pub c: usize,
+    pub n_pad: usize,
+    pub f_pad: usize,
+    pub inputs: Vec<InputSlot>,
+    pub num_outputs: usize,
+}
+
+/// The whole manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub hidden: usize,
+    pub node_block: usize,
+    pub feat_tile: usize,
+    pub entries: Vec<ManifestEntry>,
+}
+
+impl Manifest {
+    /// Load `manifest.json` from an artifacts directory.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        let v = Json::parse(&text).map_err(|e| anyhow!("manifest parse: {e}"))?;
+        let get_usize = |j: &Json, k: &str| -> Result<usize> {
+            j.get(k)
+                .and_then(Json::as_usize)
+                .ok_or_else(|| anyhow!("manifest missing {k}"))
+        };
+        let entries = v
+            .get("entries")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("manifest missing entries"))?
+            .iter()
+            .map(|e| -> Result<ManifestEntry> {
+                let gets = |k: &str| -> Result<String> {
+                    e.get(k)
+                        .and_then(Json::as_str)
+                        .map(str::to_string)
+                        .ok_or_else(|| anyhow!("entry missing {k}"))
+                };
+                let inputs = e
+                    .get("inputs")
+                    .and_then(Json::as_arr)
+                    .ok_or_else(|| anyhow!("entry missing inputs"))?
+                    .iter()
+                    .map(|s| -> Result<InputSlot> {
+                        let arr = s.as_arr().ok_or_else(|| anyhow!("input slot"))?;
+                        Ok(InputSlot {
+                            name: arr[0].as_str().unwrap_or("").to_string(),
+                            shape: arr[1]
+                                .as_arr()
+                                .ok_or_else(|| anyhow!("slot shape"))?
+                                .iter()
+                                .filter_map(Json::as_usize)
+                                .collect(),
+                            dtype: arr[2].as_str().unwrap_or("").to_string(),
+                        })
+                    })
+                    .collect::<Result<Vec<_>>>()?;
+                Ok(ManifestEntry {
+                    name: gets("name")?,
+                    kind: gets("kind")?,
+                    variant: gets("variant")?,
+                    file: gets("file")?,
+                    n: get_usize(e, "n")?,
+                    e: get_usize(e, "e")?,
+                    f: get_usize(e, "f")?,
+                    c: get_usize(e, "c")?,
+                    n_pad: get_usize(e, "n_pad")?,
+                    f_pad: get_usize(e, "f_pad")?,
+                    inputs,
+                    num_outputs: get_usize(e, "num_outputs")?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            hidden: get_usize(&v, "hidden")?,
+            node_block: get_usize(&v, "node_block")?,
+            feat_tile: get_usize(&v, "feat_tile")?,
+            entries,
+        })
+    }
+
+    /// Find an entry by (dataset, kind, variant).
+    pub fn find(&self, name: &str, kind: &str, variant: &str) -> Option<&ManifestEntry> {
+        self.entries
+            .iter()
+            .find(|e| e.name == name && e.kind == kind && e.variant == variant)
+    }
+
+    /// Absolute path of an entry's HLO file.
+    pub fn path_of(&self, e: &ManifestEntry) -> PathBuf {
+        self.dir.join(&e.file)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_minimal_manifest() {
+        let dir = std::env::temp_dir().join("morphling-manifest-test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"hidden":32,"node_block":128,"feat_tile":32,"entries":[
+                {"name":"x","kind":"train","variant":"fused","file":"a.hlo.txt",
+                 "n":100,"e":500,"f":30,"c":5,"n_pad":128,"f_pad":32,
+                 "inputs":[["row_ptr",[129],"int32"]],"num_outputs":21}]}"#,
+        )
+        .unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.hidden, 32);
+        let e = m.find("x", "train", "fused").unwrap();
+        assert_eq!(e.n_pad, 128);
+        assert_eq!(e.inputs[0].shape, vec![129]);
+        assert!(m.find("x", "train", "gather").is_none());
+        assert!(m.path_of(e).ends_with("a.hlo.txt"));
+    }
+
+    #[test]
+    fn missing_manifest_errors_helpfully() {
+        let err = Manifest::load(Path::new("/nonexistent-dir")).unwrap_err();
+        assert!(err.to_string().contains("make artifacts"));
+    }
+}

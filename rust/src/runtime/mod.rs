@@ -1,0 +1,17 @@
+//! The PJRT runtime: loads the AOT-compiled HLO artifacts produced by
+//! `python/compile/aot.py` and executes them from the Rust training path.
+//!
+//! This is the accelerator-backend analogue of the paper's CUDA path
+//! (DESIGN.md §2): the *entire* fused training step — Pallas SpMM
+//! aggregation, Pallas GEMM transforms, loss, gradients, Adam — is one XLA
+//! executable compiled once and invoked per epoch. Python is never loaded;
+//! the interchange is HLO text (see /opt/xla-example/README.md for why
+//! text, not serialized protos).
+
+pub mod manifest;
+pub mod client;
+pub mod engine;
+
+pub use client::PjrtRuntime;
+pub use engine::PjrtEngine;
+pub use manifest::{Manifest, ManifestEntry};

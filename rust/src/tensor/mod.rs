@@ -1,0 +1,34 @@
+//! Dense and sparse matrix types used throughout the training stack.
+//!
+//! Features are stored either as a dense row-major [`Matrix`] or, when the
+//! sparsity-aware engine selects the sparse path, as a [`CsrMatrix`] /
+//! [`CscMatrix`] pair (CSR for the forward `X·W`, CSC for the conflict-free
+//! backward `Xᵀ·G`, exactly as in paper §IV-B).
+
+pub mod dense;
+pub mod sparse;
+
+pub use dense::Matrix;
+pub use sparse::{CscMatrix, CsrMatrix};
+
+/// Fraction of exactly-zero entries in a dense buffer — the paper's feature
+/// sparsity statistic `s = 1 − nnz(X)/(N·F)` computed at load time.
+pub fn sparsity(values: &[f32]) -> f64 {
+    if values.is_empty() {
+        return 0.0;
+    }
+    let nnz = values.iter().filter(|v| **v != 0.0).count();
+    1.0 - nnz as f64 / values.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sparsity_basic() {
+        assert_eq!(sparsity(&[0.0, 1.0, 0.0, 0.0]), 0.75);
+        assert_eq!(sparsity(&[]), 0.0);
+        assert_eq!(sparsity(&[1.0, 2.0]), 0.0);
+    }
+}

@@ -1,0 +1,248 @@
+//! Sparse feature-matrix representations for the sparsity-aware engine.
+//!
+//! When feature sparsity `s ≥ τ` the engine materializes, **once at load
+//! time** (paper §IV-B "Static Path Selection"):
+//! - a [`CsrMatrix`] view of `X` for the forward pass `X·W`, and
+//! - a [`CscMatrix`] view for the backward pass `Xᵀ·G`, which lets gradient
+//!   accumulation iterate columns and stay free of atomic/write conflicts.
+//!
+//! The `O(nnz)` conversion cost is amortized over the (many) training epochs.
+
+use super::dense::Matrix;
+
+/// Compressed Sparse Row matrix (f32 values, u32 column indices).
+#[derive(Clone, Debug, PartialEq)]
+pub struct CsrMatrix {
+    pub rows: usize,
+    pub cols: usize,
+    /// `rows + 1` offsets into `col_idx`/`vals`.
+    pub row_ptr: Vec<u32>,
+    pub col_idx: Vec<u32>,
+    pub vals: Vec<f32>,
+}
+
+/// Compressed Sparse Column matrix (f32 values, u32 row indices).
+#[derive(Clone, Debug, PartialEq)]
+pub struct CscMatrix {
+    pub rows: usize,
+    pub cols: usize,
+    /// `cols + 1` offsets into `row_idx`/`vals`.
+    pub col_ptr: Vec<u32>,
+    pub row_idx: Vec<u32>,
+    pub vals: Vec<f32>,
+}
+
+impl CsrMatrix {
+    /// Convert a dense matrix, keeping only non-zero entries.
+    pub fn from_dense(m: &Matrix) -> CsrMatrix {
+        let mut row_ptr = Vec::with_capacity(m.rows + 1);
+        let mut col_idx = Vec::new();
+        let mut vals = Vec::new();
+        row_ptr.push(0u32);
+        for r in 0..m.rows {
+            for (c, &v) in m.row(r).iter().enumerate() {
+                if v != 0.0 {
+                    col_idx.push(c as u32);
+                    vals.push(v);
+                }
+            }
+            row_ptr.push(col_idx.len() as u32);
+        }
+        CsrMatrix {
+            rows: m.rows,
+            cols: m.cols,
+            row_ptr,
+            col_idx,
+            vals,
+        }
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.vals.len()
+    }
+
+    /// Expand back to dense (tests / fallback).
+    pub fn to_dense(&self) -> Matrix {
+        let mut out = Matrix::zeros(self.rows, self.cols);
+        for r in 0..self.rows {
+            for e in self.row_ptr[r] as usize..self.row_ptr[r + 1] as usize {
+                out.set(r, self.col_idx[e] as usize, self.vals[e]);
+            }
+        }
+        out
+    }
+
+    /// Byte footprint (row_ptr + col_idx + vals).
+    pub fn nbytes(&self) -> usize {
+        self.row_ptr.len() * 4 + self.col_idx.len() * 4 + self.vals.len() * 4
+    }
+
+    /// Structural invariants (monotone row_ptr, in-range indices).
+    pub fn validate(&self) -> Result<(), String> {
+        if self.row_ptr.len() != self.rows + 1 {
+            return Err("row_ptr length".into());
+        }
+        if self.row_ptr[0] != 0 || *self.row_ptr.last().unwrap() as usize != self.vals.len() {
+            return Err("row_ptr endpoints".into());
+        }
+        for w in self.row_ptr.windows(2) {
+            if w[0] > w[1] {
+                return Err("row_ptr not monotone".into());
+            }
+        }
+        if self.col_idx.iter().any(|&c| c as usize >= self.cols) {
+            return Err("col_idx out of range".into());
+        }
+        if self.col_idx.len() != self.vals.len() {
+            return Err("col_idx/vals length mismatch".into());
+        }
+        Ok(())
+    }
+}
+
+impl CscMatrix {
+    /// Convert a dense matrix, keeping only non-zero entries.
+    pub fn from_dense(m: &Matrix) -> CscMatrix {
+        // Count per-column nnz, then fill via a second pass (stable order).
+        let mut counts = vec![0u32; m.cols + 1];
+        for r in 0..m.rows {
+            for (c, &v) in m.row(r).iter().enumerate() {
+                if v != 0.0 {
+                    counts[c + 1] += 1;
+                }
+            }
+        }
+        for c in 0..m.cols {
+            counts[c + 1] += counts[c];
+        }
+        let col_ptr = counts;
+        let nnz = *col_ptr.last().unwrap() as usize;
+        let mut row_idx = vec![0u32; nnz];
+        let mut vals = vec![0.0f32; nnz];
+        let mut cursor = col_ptr.clone();
+        for r in 0..m.rows {
+            for (c, &v) in m.row(r).iter().enumerate() {
+                if v != 0.0 {
+                    let at = cursor[c] as usize;
+                    row_idx[at] = r as u32;
+                    vals[at] = v;
+                    cursor[c] += 1;
+                }
+            }
+        }
+        CscMatrix {
+            rows: m.rows,
+            cols: m.cols,
+            col_ptr,
+            row_idx,
+            vals,
+        }
+    }
+
+    /// Build the CSC view from an existing CSR (avoids a dense detour when
+    /// features arrive already sparse).
+    pub fn from_csr(m: &CsrMatrix) -> CscMatrix {
+        let mut col_ptr = vec![0u32; m.cols + 1];
+        for &c in &m.col_idx {
+            col_ptr[c as usize + 1] += 1;
+        }
+        for c in 0..m.cols {
+            col_ptr[c + 1] += col_ptr[c];
+        }
+        let nnz = m.nnz();
+        let mut row_idx = vec![0u32; nnz];
+        let mut vals = vec![0.0f32; nnz];
+        let mut cursor = col_ptr.clone();
+        for r in 0..m.rows {
+            for e in m.row_ptr[r] as usize..m.row_ptr[r + 1] as usize {
+                let c = m.col_idx[e] as usize;
+                let at = cursor[c] as usize;
+                row_idx[at] = r as u32;
+                vals[at] = m.vals[e];
+                cursor[c] += 1;
+            }
+        }
+        CscMatrix {
+            rows: m.rows,
+            cols: m.cols,
+            col_ptr,
+            row_idx,
+            vals,
+        }
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.vals.len()
+    }
+
+    pub fn to_dense(&self) -> Matrix {
+        let mut out = Matrix::zeros(self.rows, self.cols);
+        for c in 0..self.cols {
+            for e in self.col_ptr[c] as usize..self.col_ptr[c + 1] as usize {
+                out.set(self.row_idx[e] as usize, c, self.vals[e]);
+            }
+        }
+        out
+    }
+
+    pub fn nbytes(&self) -> usize {
+        self.col_ptr.len() * 4 + self.row_idx.len() * 4 + self.vals.len() * 4
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{check, random_sparse_matrix};
+
+    fn sample() -> Matrix {
+        Matrix::from_vec(3, 4, vec![1., 0., 2., 0., 0., 0., 0., 3., 4., 0., 0., 5.])
+    }
+
+    #[test]
+    fn csr_roundtrip() {
+        let m = sample();
+        let csr = CsrMatrix::from_dense(&m);
+        assert_eq!(csr.nnz(), 5);
+        csr.validate().unwrap();
+        assert_eq!(csr.to_dense(), m);
+    }
+
+    #[test]
+    fn csc_roundtrip() {
+        let m = sample();
+        let csc = CscMatrix::from_dense(&m);
+        assert_eq!(csc.nnz(), 5);
+        assert_eq!(csc.to_dense(), m);
+    }
+
+    #[test]
+    fn csr_to_csc_matches_dense_to_csc() {
+        let m = sample();
+        let via_csr = CscMatrix::from_csr(&CsrMatrix::from_dense(&m));
+        let direct = CscMatrix::from_dense(&m);
+        assert_eq!(via_csr, direct);
+    }
+
+    #[test]
+    fn prop_roundtrips_random() {
+        check(0xC5C, 30, |rng| {
+            let rows = 1 + rng.below(20);
+            let cols = 1 + rng.below(20);
+            let m = Matrix::from_vec(rows, cols, random_sparse_matrix(rng, rows, cols, 0.7));
+            let csr = CsrMatrix::from_dense(&m);
+            csr.validate().unwrap();
+            assert_eq!(csr.to_dense(), m);
+            assert_eq!(CscMatrix::from_csr(&csr).to_dense(), m);
+            assert_eq!(CscMatrix::from_dense(&m).to_dense(), m);
+        });
+    }
+
+    #[test]
+    fn empty_matrix() {
+        let m = Matrix::zeros(4, 3);
+        let csr = CsrMatrix::from_dense(&m);
+        assert_eq!(csr.nnz(), 0);
+        assert_eq!(csr.to_dense(), m);
+    }
+}

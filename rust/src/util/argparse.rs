@@ -1,0 +1,106 @@
+//! A small command-line argument parser for the `morphling` CLI and the
+//! bench/example binaries. Supports `--flag`, `--key value`, `--key=value`,
+//! and positional arguments.
+
+use std::collections::BTreeMap;
+
+/// Parsed arguments: positionals in order, plus a key→value map where bare
+/// flags get the value `"true"`.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub named: BTreeMap<String, String>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw arguments (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Args {
+        let mut out = Args::default();
+        let mut iter = raw.into_iter().peekable();
+        while let Some(a) = iter.next() {
+            if let Some(stripped) = a.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    out.named.insert(k.to_string(), v.to_string());
+                } else if iter
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = iter.next().unwrap();
+                    out.named.insert(stripped.to_string(), v);
+                } else {
+                    out.named.insert(stripped.to_string(), "true".to_string());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    /// Parse from the process environment.
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn flag(&self, key: &str) -> bool {
+        self.named.get(key).map(|v| v == "true").unwrap_or(false)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.named.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> usize {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn f32_or(&self, key: &str, default: f32) -> f32 {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> u64 {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &[&str]) -> Args {
+        Args::parse(s.iter().map(|s| s.to_string()))
+    }
+
+    #[test]
+    fn positional_and_named() {
+        let a = parse(&["train", "--epochs", "10", "--engine=native", "--verbose"]);
+        assert_eq!(a.positional, vec!["train"]);
+        assert_eq!(a.usize_or("epochs", 0), 10);
+        assert_eq!(a.get("engine"), Some("native"));
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse(&[]);
+        assert_eq!(a.f64_or("tau", 0.8), 0.8);
+        assert_eq!(a.get_or("dataset", "corafull"), "corafull");
+    }
+
+    #[test]
+    fn flag_before_positional() {
+        let a = parse(&["--fast", "run"]);
+        // "--fast run": "run" doesn't start with --, so it's consumed as value.
+        assert_eq!(a.get("fast"), Some("run"));
+    }
+}

@@ -1,0 +1,17 @@
+//! Small self-contained utilities the rest of the crate builds on.
+//!
+//! Everything here is hand-rolled because the build is fully offline and the
+//! vendored crate set only covers the `xla` dependency tree: deterministic
+//! RNGs (instead of `rand`), a tiny JSON parser (instead of `serde_json`),
+//! an argument parser (instead of `clap`), timers, and a property-testing
+//! driver (instead of `proptest`).
+
+pub mod rng;
+pub mod json;
+pub mod argparse;
+pub mod timer;
+pub mod proptest;
+pub mod table;
+
+pub use rng::Rng;
+pub use timer::Timer;

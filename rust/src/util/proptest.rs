@@ -1,0 +1,98 @@
+//! A tiny property-based testing driver (the vendored crate set has no
+//! `proptest`). A property is a closure over a seeded [`Rng`]; the driver
+//! runs it across many derived seeds and reports the first failing seed so
+//! failures are reproducible.
+
+use super::rng::Rng;
+
+/// Run `prop` for `cases` independent seeds derived from `seed`. The closure
+/// should panic (e.g. via `assert!`) on property violation; this driver
+/// annotates which case seed failed.
+pub fn check(seed: u64, cases: usize, prop: impl Fn(&mut Rng)) {
+    let mut meta = Rng::new(seed);
+    for case in 0..cases {
+        let case_seed = meta.next_u64();
+        let mut rng = Rng::new(case_seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| prop(&mut rng)));
+        if let Err(e) = result {
+            panic!("property failed on case {case} (seed {case_seed:#x}): {e:?}");
+        }
+    }
+}
+
+/// Generate a random small graph edge list: `n` nodes, ~`avg_deg` expected
+/// out-degree, no self loops, possibly duplicate edges (callers dedup if the
+/// representation requires it).
+pub fn random_edges(rng: &mut Rng, n: usize, avg_deg: usize) -> Vec<(u32, u32)> {
+    let m = n * avg_deg;
+    let mut edges = Vec::with_capacity(m);
+    for _ in 0..m {
+        let u = rng.below(n) as u32;
+        let mut v = rng.below(n) as u32;
+        if n > 1 {
+            while v == u {
+                v = rng.below(n) as u32;
+            }
+            edges.push((u, v));
+        }
+    }
+    edges
+}
+
+/// A random dense matrix with entries in [-1, 1).
+pub fn random_matrix(rng: &mut Rng, rows: usize, cols: usize) -> Vec<f32> {
+    (0..rows * cols).map(|_| rng.f32() * 2.0 - 1.0).collect()
+}
+
+/// A random matrix where each entry is zero with probability `sparsity`.
+pub fn random_sparse_matrix(rng: &mut Rng, rows: usize, cols: usize, sparsity: f64) -> Vec<f32> {
+    (0..rows * cols)
+        .map(|_| {
+            if rng.bool(sparsity) {
+                0.0
+            } else {
+                rng.f32() * 2.0 - 1.0
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn check_passes_trivial_property() {
+        check(1, 50, |rng| {
+            let x = rng.f64();
+            assert!((0.0..1.0).contains(&x));
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn check_reports_failure() {
+        check(1, 50, |rng| {
+            assert!(rng.f64() < 0.5, "intentional failure");
+        });
+    }
+
+    #[test]
+    fn random_edges_no_self_loops() {
+        check(2, 20, |rng| {
+            for (u, v) in random_edges(rng, 10, 3) {
+                assert_ne!(u, v);
+                assert!((u as usize) < 10 && (v as usize) < 10);
+            }
+        });
+    }
+
+    #[test]
+    fn sparse_matrix_sparsity_close() {
+        let mut rng = Rng::new(3);
+        let m = random_sparse_matrix(&mut rng, 200, 200, 0.9);
+        let nnz = m.iter().filter(|x| **x != 0.0).count();
+        let s = 1.0 - nnz as f64 / m.len() as f64;
+        assert!((s - 0.9).abs() < 0.02, "s={s}");
+    }
+}

@@ -1,0 +1,138 @@
+//! Wall-clock timing helpers and a phase-labelled breakdown accumulator used
+//! by the trainers and the bench harness.
+
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+/// A simple start/stop wall-clock timer.
+#[derive(Debug)]
+pub struct Timer {
+    start: Instant,
+}
+
+impl Timer {
+    pub fn start() -> Timer {
+        Timer { start: Instant::now() }
+    }
+
+    /// Elapsed seconds since `start()`.
+    pub fn secs(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    /// Elapsed milliseconds since `start()`.
+    pub fn ms(&self) -> f64 {
+        self.secs() * 1e3
+    }
+}
+
+/// Accumulates time per named phase (e.g. "forward", "backward", "optimizer",
+/// "halo_exchange"); used to report the per-epoch breakdowns in the paper's
+/// Figures 3/5/7.
+#[derive(Debug, Default, Clone)]
+pub struct PhaseTimes {
+    acc: BTreeMap<&'static str, f64>,
+}
+
+impl PhaseTimes {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Time a closure under `phase`, accumulating its wall time.
+    pub fn time<T>(&mut self, phase: &'static str, f: impl FnOnce() -> T) -> T {
+        let t = Instant::now();
+        let out = f();
+        *self.acc.entry(phase).or_insert(0.0) += t.elapsed().as_secs_f64();
+        out
+    }
+
+    /// Add pre-measured seconds to a phase.
+    pub fn add(&mut self, phase: &'static str, secs: f64) {
+        *self.acc.entry(phase).or_insert(0.0) += secs;
+    }
+
+    pub fn get(&self, phase: &str) -> f64 {
+        self.acc.get(phase).copied().unwrap_or(0.0)
+    }
+
+    pub fn total(&self) -> f64 {
+        self.acc.values().sum()
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = (&'static str, f64)> + '_ {
+        self.acc.iter().map(|(k, v)| (*k, *v))
+    }
+
+    pub fn merge(&mut self, other: &PhaseTimes) {
+        for (k, v) in other.iter() {
+            self.add(k, v);
+        }
+    }
+
+    /// Render as `fwd=1.2ms bwd=3.4ms ...`.
+    pub fn summary(&self) -> String {
+        self.acc
+            .iter()
+            .map(|(k, v)| format!("{}={:.2}ms", k, v * 1e3))
+            .collect::<Vec<_>>()
+            .join(" ")
+    }
+}
+
+/// Run `f` `iters` times after `warmup` unmeasured runs; return the mean
+/// per-iteration seconds and the per-iteration samples. The core primitive
+/// of the offline bench harness (criterion is not vendored).
+pub fn bench_fn<T>(warmup: usize, iters: usize, mut f: impl FnMut() -> T) -> (f64, Vec<f64>) {
+    for _ in 0..warmup {
+        std::hint::black_box(f());
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t = Instant::now();
+        std::hint::black_box(f());
+        samples.push(t.elapsed().as_secs_f64());
+    }
+    let mean = samples.iter().sum::<f64>() / samples.len().max(1) as f64;
+    (mean, samples)
+}
+
+/// Median of a sample vector (consumes a copy; fine at bench scale).
+pub fn median(samples: &[f64]) -> f64 {
+    if samples.is_empty() {
+        return 0.0;
+    }
+    let mut v = samples.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    v[v.len() / 2]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn phase_accumulation() {
+        let mut p = PhaseTimes::new();
+        p.add("fwd", 0.5);
+        p.add("fwd", 0.25);
+        p.add("bwd", 1.0);
+        assert!((p.get("fwd") - 0.75).abs() < 1e-12);
+        assert!((p.total() - 1.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn bench_fn_runs_expected_count() {
+        let mut n = 0;
+        let (mean, samples) = bench_fn(2, 5, || n += 1);
+        assert_eq!(n, 7);
+        assert_eq!(samples.len(), 5);
+        assert!(mean >= 0.0);
+    }
+
+    #[test]
+    fn median_odd_even() {
+        assert_eq!(median(&[3.0, 1.0, 2.0]), 2.0);
+        assert_eq!(median(&[]), 0.0);
+    }
+}

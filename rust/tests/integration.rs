@@ -1,0 +1,146 @@
+//! Cross-module integration tests: engine-vs-engine numeric equivalence,
+//! distributed-vs-serial equivalence, coordinator flows, and partitioner
+//! → local-view → training consistency on real (scaled) datasets.
+
+use morphling::baselines::{GatherScatterEngine, NonFusedEngine};
+use morphling::coordinator::{run, TrainSpec};
+use morphling::dist::runtime::{train_distributed, DistConfig, PartitionerKind};
+use morphling::dist::NetworkModel;
+use morphling::engine::native::NativeEngine;
+use morphling::engine::sparsity::SparsityPolicy;
+use morphling::engine::{Engine, Mask};
+use morphling::graph::datasets;
+use morphling::kernels::update::AdamParams;
+use morphling::model::{Arch, ModelConfig};
+use morphling::optim::OptKind;
+
+/// All three native-path engines implement the same GCN: given one seed,
+/// their per-epoch losses must agree to float tolerance on a real dataset.
+#[test]
+fn engines_numerically_equivalent_on_corafull() {
+    let ds = datasets::load_by_name("corafull").unwrap();
+    let config = ModelConfig::paper_default(Arch::Gcn, ds.spec.features, ds.spec.classes);
+    let mut native = NativeEngine::new(
+        &ds,
+        &config,
+        OptKind::Adam,
+        AdamParams::default(),
+        SparsityPolicy::paper_default(), // sparse path (s=0.95)
+        7,
+    );
+    let mut gs = GatherScatterEngine::paper_default(&ds, 7);
+    let mut nf = NonFusedEngine::paper_default(&ds, 7);
+    for e in 0..2 {
+        let a = native.train_epoch(&ds).loss;
+        let b = gs.train_epoch(&ds).loss;
+        let c = nf.train_epoch(&ds).loss;
+        assert!((a - b).abs() < 5e-3, "epoch {e}: native {a} vs gs {b}");
+        assert!((a - c).abs() < 5e-3, "epoch {e}: native {a} vs nf {c}");
+    }
+}
+
+/// Distributed (2 ranks) and serial training produce the same loss curve.
+#[test]
+fn distributed_equals_serial_on_ogbn_arxiv() {
+    let ds = datasets::load_by_name("ogbn-arxiv").unwrap();
+    let cfg = DistConfig {
+        world: 2,
+        epochs: 3,
+        network: NetworkModel::ideal(),
+        seed: 11,
+        ..Default::default()
+    };
+    let dist = train_distributed(&ds, &cfg);
+    let config = ModelConfig::paper_default(Arch::Gcn, ds.spec.features, ds.spec.classes);
+    let mut serial = NativeEngine::new(
+        &ds,
+        &config,
+        OptKind::Adam,
+        AdamParams::default(),
+        SparsityPolicy::from_tau(1.01), // dist runtime is dense-path
+        11,
+    );
+    for e in 0..3 {
+        let s = serial.train_epoch(&ds).loss;
+        assert!(
+            (dist.losses[e] - s).abs() < 5e-3,
+            "epoch {e}: dist {} vs serial {s}",
+            dist.losses[e]
+        );
+    }
+}
+
+/// The coordinator picks the sparse path for NELL (99.2% sparse) and the
+/// dense path for Reddit (dense features) — the paper's §V-C dispatch.
+#[test]
+fn coordinator_dispatch_matches_paper() {
+    for (name, expect) in [("nell", "sparse"), ("ogbn-arxiv", "dense")] {
+        let out = run(&TrainSpec {
+            dataset: name.to_string(),
+            epochs: 1,
+            ..Default::default()
+        })
+        .unwrap();
+        assert_eq!(out.mode, expect, "{name}");
+    }
+}
+
+/// Hierarchical partitioner → LocalView construction over every dataset
+/// (structure invariants at dataset scale).
+#[test]
+fn partition_views_consistent_on_flickr() {
+    let ds = datasets::load_by_name("flickr").unwrap();
+    let r = morphling::partition::hierarchical_partition(&ds.raw_graph, 4, 3);
+    r.partitioning.validate(ds.spec.nodes).unwrap();
+    let views = morphling::dist::g2l::build_views(&ds.graph, &r.partitioning);
+    let total_local: usize = views.iter().map(|v| v.n_local()).sum();
+    assert_eq!(total_local, ds.spec.nodes);
+    let total_edges: usize = views.iter().map(|v| v.graph.num_edges()).sum();
+    assert_eq!(total_edges, ds.graph.num_edges());
+}
+
+/// Training for real epochs on a mid-size dataset reaches useful accuracy
+/// (the labels are graph-smoothed projections — learnable by design).
+#[test]
+fn native_reaches_signal_on_flickr() {
+    let ds = datasets::load_by_name("flickr").unwrap();
+    let mut eng = NativeEngine::paper_default(&ds, Arch::Gcn, 5);
+    let first = eng.train_epoch(&ds).loss;
+    for _ in 0..40 {
+        eng.train_epoch(&ds);
+    }
+    let (_, acc) = eng.evaluate(&ds, Mask::Test);
+    let last = eng.train_epoch(&ds).loss;
+    assert!(last < first * 0.8, "{first} -> {last}");
+    assert!(acc > 1.5 / ds.spec.classes as f64, "test acc {acc}");
+}
+
+/// SAGE-max (Listing 1's configuration) trains end to end via the
+/// coordinator.
+#[test]
+fn sage_max_listing1_flow() {
+    let out = run(&TrainSpec {
+        dataset: "ppi".to_string(),
+        arch: Arch::SageMax,
+        epochs: 5,
+        ..Default::default()
+    })
+    .unwrap();
+    assert!(out.report.final_loss() < out.report.epochs[0].loss);
+}
+
+/// Memory ordering across engines holds on a dense mid-size dataset:
+/// gather-scatter > nonfused > native (Table III's structural claim).
+#[test]
+fn memory_ordering_on_ogbn_arxiv() {
+    let ds = datasets::load_by_name("ogbn-arxiv").unwrap();
+    let mut native = NativeEngine::paper_default(&ds, Arch::Gcn, 1);
+    let mut gs = GatherScatterEngine::paper_default(&ds, 1);
+    let mut nf = NonFusedEngine::paper_default(&ds, 1);
+    native.train_epoch(&ds);
+    gs.train_epoch(&ds);
+    nf.train_epoch(&ds);
+    let (a, b, c) = (native.peak_bytes(), gs.peak_bytes(), nf.peak_bytes());
+    assert!(b > c, "gs {b} should exceed nonfused {c}");
+    assert!(b > 2 * a, "gs {b} should dwarf native {a}");
+}
