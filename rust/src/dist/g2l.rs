@@ -1,0 +1,218 @@
+//! Global-to-local view construction (the paper's partition-centric
+//! execution model, §IV-E): every rank sees its owned vertices re-indexed
+//! to a dense local prefix `0..n_local`, with every remote neighbor
+//! appended once as a **ghost** slot after the prefix.
+//!
+//! The local CSR keeps the owned rows' full adjacency — each global edge
+//! `u → v` appears in exactly one view (the owner of `u`), with `v` mapped
+//! to its local or ghost slot — so local node counts and local edge counts
+//! sum exactly to the global graph. Ghost rows are structurally empty:
+//! ghosts are *read* during aggregation (their features arrive via the halo
+//! exchange), never aggregated into.
+
+use crate::graph::Graph;
+use crate::partition::Partitioning;
+
+/// One rank's local window onto the global graph.
+#[derive(Clone, Debug)]
+pub struct LocalView {
+    /// Which rank this view belongs to.
+    pub rank: usize,
+    /// Local-index CSR over `[owned | ghost]` slots; rows `n_local..` are
+    /// empty (ghosts have no local out-edges).
+    pub graph: Graph,
+    /// Global node id for every local slot: owned prefix first (ascending
+    /// global order), then ghosts in discovery order.
+    pub global_ids: Vec<u32>,
+    /// Owning rank of each ghost slot (parallel to the ghost tail of
+    /// `global_ids`).
+    pub ghost_owner: Vec<u32>,
+    n_local: usize,
+}
+
+impl LocalView {
+    /// Number of owned (non-ghost) nodes.
+    pub fn n_local(&self) -> usize {
+        self.n_local
+    }
+
+    /// Number of ghost slots (distinct remote neighbors).
+    pub fn n_ghost(&self) -> usize {
+        self.global_ids.len() - self.n_local
+    }
+
+    /// Global ids of the owned nodes (ascending).
+    pub fn owned_global_ids(&self) -> &[u32] {
+        &self.global_ids[..self.n_local]
+    }
+
+    /// Global ids of the ghost slots (parallel to [`LocalView::ghost_owner`]).
+    pub fn ghost_global_ids(&self) -> &[u32] {
+        &self.global_ids[self.n_local..]
+    }
+
+    /// Edges stored locally (= Σ global out-degree of owned nodes).
+    pub fn local_edges(&self) -> usize {
+        self.graph.num_edges()
+    }
+}
+
+/// Build one [`LocalView`] per rank of `p` over the global graph `g`.
+///
+/// Guarantees (checked by the property tests below):
+/// - `Σ_r n_local(r) == g.num_nodes` — every node owned exactly once;
+/// - `Σ_r local_edges(r) == g.num_edges()` — every edge stored exactly once;
+/// - per-row neighbor order matches the global CSR row order, so local
+///   aggregation reproduces the global aggregation's exact f32 op sequence.
+pub fn build_views(g: &Graph, p: &Partitioning) -> Vec<LocalView> {
+    assert_eq!(
+        p.assign.len(),
+        g.num_nodes,
+        "partitioning covers a different node count"
+    );
+    let mut views = Vec::with_capacity(p.k);
+    // Scratch global→local map for the rank being built (reset after each).
+    let mut local_of = vec![u32::MAX; g.num_nodes];
+    for rank in 0..p.k {
+        let owned: Vec<u32> = (0..g.num_nodes as u32)
+            .filter(|&v| p.assign[v as usize] == rank as u32)
+            .collect();
+        let n_local = owned.len();
+        for (i, &v) in owned.iter().enumerate() {
+            local_of[v as usize] = i as u32;
+        }
+        let mut global_ids = owned;
+        let mut ghost_owner: Vec<u32> = Vec::new();
+        let mut edges: Vec<(u32, u32, f32)> = Vec::new();
+        for lu in 0..n_local {
+            let u = global_ids[lu] as usize;
+            for (&v, &w) in g.neighbors(u).iter().zip(g.neighbor_weights(u)) {
+                let lv = if local_of[v as usize] == u32::MAX {
+                    // first sighting of a remote neighbor → new ghost slot
+                    let lv = global_ids.len() as u32;
+                    local_of[v as usize] = lv;
+                    global_ids.push(v);
+                    ghost_owner.push(p.assign[v as usize]);
+                    lv
+                } else {
+                    local_of[v as usize]
+                };
+                edges.push((lu as u32, lv, w));
+            }
+        }
+        let graph = Graph::from_weighted_edges(global_ids.len(), edges);
+        for &v in &global_ids {
+            local_of[v as usize] = u32::MAX;
+        }
+        views.push(LocalView {
+            rank,
+            graph,
+            global_ids,
+            ghost_owner,
+            n_local,
+        });
+    }
+    views
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generator::{power_law_graph, GraphConfig};
+    use crate::partition::{chunk_partition, hierarchical_partition};
+    use crate::util::proptest::{check, random_edges};
+
+    /// The tentpole invariant: nodes and edges partition exactly, on random
+    /// graphs × random k × random assignments.
+    #[test]
+    fn prop_views_partition_nodes_and_edges_exactly() {
+        check(0xd157, 25, |rng| {
+            let n = 2 + rng.below(60);
+            let edges = random_edges(rng, n, 4);
+            let g = Graph::from_edges(n, &edges);
+            let k = 1 + rng.below(6);
+            let assign: Vec<u32> = (0..n).map(|_| rng.below(k) as u32).collect();
+            let p = Partitioning { k, assign };
+            let views = build_views(&g, &p);
+            assert_eq!(views.len(), k);
+            assert_eq!(views.iter().map(|v| v.n_local()).sum::<usize>(), n);
+            assert_eq!(
+                views.iter().map(|v| v.graph.num_edges()).sum::<usize>(),
+                g.num_edges()
+            );
+            for v in &views {
+                v.graph.validate().unwrap();
+                assert_eq!(v.n_ghost(), v.ghost_owner.len());
+                // owned rows keep their full global adjacency
+                for (lu, &gid) in v.owned_global_ids().iter().enumerate() {
+                    assert_eq!(v.graph.degree(lu), g.degree(gid as usize));
+                }
+                // ghost bookkeeping is consistent and ghost rows are empty
+                for (gi, (&gid, &owner)) in v
+                    .ghost_global_ids()
+                    .iter()
+                    .zip(&v.ghost_owner)
+                    .enumerate()
+                {
+                    assert_eq!(p.assign[gid as usize], owner);
+                    assert_ne!(owner as usize, v.rank, "ghost owned by its own rank");
+                    assert_eq!(v.graph.degree(v.n_local() + gi), 0);
+                }
+            }
+        });
+    }
+
+    /// Local rows preserve the global CSR's per-row neighbor order (via
+    /// global ids), which is what makes distributed aggregation bit-match
+    /// the serial kernel per row.
+    #[test]
+    fn local_rows_preserve_global_neighbor_order() {
+        let mut rng = crate::util::Rng::new(9);
+        let g = power_law_graph(
+            &GraphConfig {
+                num_nodes: 300,
+                num_edges: 2400,
+                power_law_gamma: 2.4,
+                components: 1,
+            },
+            &mut rng,
+        );
+        let p = hierarchical_partition(&g, 3, 7).partitioning;
+        for v in build_views(&g, &p) {
+            for (lu, &gid) in v.owned_global_ids().iter().enumerate() {
+                let local_as_global: Vec<u32> = v
+                    .graph
+                    .neighbors(lu)
+                    .iter()
+                    .map(|&lv| v.global_ids[lv as usize])
+                    .collect();
+                assert_eq!(local_as_global, g.neighbors(gid as usize));
+                assert_eq!(
+                    v.graph.neighbor_weights(lu),
+                    g.neighbor_weights(gid as usize)
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn chunk_views_cover_disconnected_graph() {
+        let mut rng = crate::util::Rng::new(4);
+        let g = power_law_graph(
+            &GraphConfig {
+                num_nodes: 200,
+                num_edges: 1200,
+                power_law_gamma: 2.5,
+                components: 4,
+            },
+            &mut rng,
+        );
+        let p = chunk_partition(g.num_nodes, 4);
+        let views = build_views(&g, &p);
+        assert_eq!(views.iter().map(|v| v.n_local()).sum::<usize>(), 200);
+        assert_eq!(
+            views.iter().map(|v| v.local_edges()).sum::<usize>(),
+            g.num_edges()
+        );
+    }
+}

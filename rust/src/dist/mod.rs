@@ -1,0 +1,152 @@
+//! The simulated distributed backend — the paper's §IV-E runtime behind the
+//! 6× distributed speedups of Figs. 6–7.
+//!
+//! Three pieces:
+//! - [`NetworkModel`] — an α–β (latency + bytes/bandwidth) fabric cost model
+//!   with presets for an ideal fabric, 10 GbE, and 100 Gb InfiniBand; it
+//!   prices the two collective patterns the runtime uses, ring gradient
+//!   all-reduce and neighbor halo exchange.
+//! - [`g2l`] — global-to-local view construction: given a
+//!   [`crate::partition::Partitioning`], build one [`g2l::LocalView`] per
+//!   rank (owned nodes re-indexed to a local prefix, remote neighbors
+//!   appended as ghost slots) such that local node and edge counts sum
+//!   exactly to the global graph.
+//! - [`runtime`] — the multi-rank full-batch GCN trainer: per-rank fused
+//!   aggregation over local views, halo feature exchange at every layer,
+//!   and pipelined (or blocking) ring gradient reduction. Ranks execute
+//!   sequentially in one process; compute time is measured per rank and
+//!   communication time comes from the [`NetworkModel`], which is how the
+//!   single-core testbed reproduces the paper's scaling shapes (DESIGN.md
+//!   §2). The loss curve is numerically equivalent to serial
+//!   [`crate::engine::native::NativeEngine`] training — the halo exchange
+//!   and rank-ordered deterministic reductions make the distributed epoch
+//!   compute the same numbers the serial epoch does.
+
+pub mod g2l;
+pub mod runtime;
+
+/// α–β fabric cost model: a message of `b` bytes costs `α + b/β` seconds.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct NetworkModel {
+    /// Per-message fixed latency α, in seconds.
+    pub latency_secs: f64,
+    /// Link bandwidth β, in bytes per second (`f64::INFINITY` = ideal).
+    pub bytes_per_sec: f64,
+}
+
+impl NetworkModel {
+    /// Ideal fabric: zero latency, infinite bandwidth. Communication is
+    /// free, so distributed loss curves can be checked against serial runs
+    /// without timing noise in the model.
+    pub fn ideal() -> NetworkModel {
+        NetworkModel {
+            latency_secs: 0.0,
+            bytes_per_sec: f64::INFINITY,
+        }
+    }
+
+    /// Datacenter 10 GbE: 50 µs latency, 1.25 GB/s. Slow enough that
+    /// communication is visible at this testbed's graph scale.
+    pub fn ethernet() -> NetworkModel {
+        NetworkModel {
+            latency_secs: 50e-6,
+            bytes_per_sec: 1.25e9,
+        }
+    }
+
+    /// 100 Gb InfiniBand-class fabric: 2 µs latency, 12.5 GB/s.
+    pub fn infiniband() -> NetworkModel {
+        NetworkModel {
+            latency_secs: 2e-6,
+            bytes_per_sec: 12.5e9,
+        }
+    }
+
+    /// Cost of one point-to-point transfer of `bytes`.
+    pub fn xfer_secs(&self, bytes: usize) -> f64 {
+        if bytes == 0 {
+            return 0.0;
+        }
+        self.latency_secs + bytes as f64 / self.bytes_per_sec
+    }
+
+    /// Cost of one halo exchange round for a rank that receives `bytes` of
+    /// ghost rows from `peers` distinct neighbor ranks. Transfers from
+    /// different peers are serialized on the rank's ingress link (the
+    /// conservative model), so the latency term pays once per peer.
+    pub fn halo_secs(&self, bytes: usize, peers: usize) -> f64 {
+        if bytes == 0 || peers == 0 {
+            return 0.0;
+        }
+        self.latency_secs * peers as f64 + bytes as f64 / self.bytes_per_sec
+    }
+
+    /// Cost of a ring all-reduce of a `bytes` buffer across `world` ranks:
+    /// `2(k−1)` pipeline steps, each moving a `bytes/k` chunk.
+    pub fn ring_allreduce_secs(&self, bytes: usize, world: usize) -> f64 {
+        if world <= 1 || bytes == 0 {
+            return 0.0;
+        }
+        let k = world as f64;
+        2.0 * (k - 1.0) * (self.latency_secs + (bytes as f64 / k) / self.bytes_per_sec)
+    }
+
+    /// Bytes one rank puts on the wire during a ring all-reduce of `bytes`.
+    pub fn ring_bytes_sent(bytes: usize, world: usize) -> usize {
+        if world <= 1 {
+            return 0;
+        }
+        2 * (world - 1) * bytes / world
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ideal_network_costs_zero() {
+        let net = NetworkModel::ideal();
+        for bytes in [0usize, 1, 1 << 10, 1 << 30] {
+            assert_eq!(net.xfer_secs(bytes), 0.0);
+            assert_eq!(net.halo_secs(bytes, 3), 0.0);
+            assert_eq!(net.ring_allreduce_secs(bytes, 4), 0.0);
+        }
+    }
+
+    #[test]
+    fn costs_monotone_in_message_size() {
+        for net in [NetworkModel::ethernet(), NetworkModel::infiniband()] {
+            let mut prev_x = 0.0;
+            let mut prev_h = 0.0;
+            let mut prev_r = 0.0;
+            for bytes in [0usize, 1, 64, 4096, 1 << 20, 1 << 28] {
+                let x = net.xfer_secs(bytes);
+                let h = net.halo_secs(bytes, 3);
+                let r = net.ring_allreduce_secs(bytes, 4);
+                assert!(x >= prev_x, "xfer not monotone at {bytes}");
+                assert!(h >= prev_h, "halo not monotone at {bytes}");
+                assert!(r >= prev_r, "ring not monotone at {bytes}");
+                prev_x = x;
+                prev_h = h;
+                prev_r = r;
+            }
+        }
+    }
+
+    #[test]
+    fn ethernet_slower_than_infiniband() {
+        let b = 1 << 20;
+        assert!(
+            NetworkModel::ethernet().xfer_secs(b) > NetworkModel::infiniband().xfer_secs(b)
+        );
+    }
+
+    #[test]
+    fn single_rank_collectives_are_free() {
+        let net = NetworkModel::ethernet();
+        assert_eq!(net.ring_allreduce_secs(1 << 20, 1), 0.0);
+        assert_eq!(NetworkModel::ring_bytes_sent(1 << 20, 1), 0);
+        assert!(NetworkModel::ring_bytes_sent(1 << 20, 4) > 0);
+    }
+}

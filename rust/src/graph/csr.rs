@@ -110,11 +110,31 @@ impl Graph {
     }
 
     /// Replace edge weights with GCN symmetric normalization
-    /// `w_uv = 1/√(deg(u)·deg(v))` computed over the current structure.
+    /// `w_uv = 1/√(d̂(u)·d̂(v))`, where `d̂` is the node's degree in the
+    /// **symmetrized** structure: the number of distinct nodes adjacent via
+    /// an in- OR out-edge (a self-loop counts once).
+    ///
+    /// For undirected graphs (both directions stored, no duplicate edges) —
+    /// every graph `generator` produces — `d̂` equals the CSR out-degree, so
+    /// this is numerically identical to the historical behavior. For
+    /// directed inputs the out-degree alone is wrong: a neighbor `v` with
+    /// only in-edges would get `deg(v) = 0` and the weight `w_uv ≠ w_vu`
+    /// would not be symmetric (see `gcn_norm_directed_*` tests).
     pub fn gcn_normalized(&self) -> Graph {
-        let deg: Vec<f32> = (0..self.num_nodes)
-            .map(|u| self.degree(u).max(1) as f32)
-            .collect();
+        let t = self.transpose();
+        let mut deg = vec![0f32; self.num_nodes];
+        // stamp[v] = last node whose adjacency counted v (dedup scratch)
+        let mut stamp = vec![u32::MAX; self.num_nodes];
+        for u in 0..self.num_nodes {
+            let mut d = 0usize;
+            for &v in self.neighbors(u).iter().chain(t.neighbors(u)) {
+                if stamp[v as usize] != u as u32 {
+                    stamp[v as usize] = u as u32;
+                    d += 1;
+                }
+            }
+            deg[u] = d.max(1) as f32;
+        }
         let mut g = self.clone();
         for u in 0..self.num_nodes {
             let du = deg[u];
@@ -209,12 +229,53 @@ mod tests {
 
     #[test]
     fn gcn_norm_weights_symmetric_formula() {
+        // The triangle is a *directed* input (0→1, 1→2, 2→0, 0→2): with
+        // self-loops every node's symmetrized neighborhood is {0,1,2}, so
+        // every d̂ = 3 and every weight is 1/3.
         let g = triangle().with_self_loops().gcn_normalized();
         g.validate().unwrap();
-        // node 0 has degree 3 (1,2,self); node 1 has degree 2.
         let idx = g.neighbors(0).iter().position(|&v| v == 1).unwrap();
         let w = g.neighbor_weights(0)[idx];
-        assert!((w - 1.0 / (3.0f32 * 2.0).sqrt()).abs() < 1e-6);
+        assert!((w - 1.0 / 3.0f32).abs() < 1e-6, "w={w}");
+    }
+
+    #[test]
+    fn gcn_norm_undirected_matches_out_degree_formula() {
+        // Undirected storage (both directions, no duplicates): d̂ equals the
+        // CSR out-degree, preserving the historical normalization exactly.
+        let mut e = vec![(0u32, 1u32), (1, 2), (0, 2)];
+        let rev: Vec<_> = e.iter().map(|&(a, b)| (b, a)).collect();
+        e.extend(rev);
+        e.push((3, 0));
+        e.push((0, 3)); // degree-1 leaf
+        let g = Graph::from_edges(4, &e).with_self_loops().gcn_normalized();
+        // out-degrees with self loops: d(0)=4 {1,2,3,0}, d(3)=2 {0,3}
+        let idx = g.neighbors(0).iter().position(|&v| v == 3).unwrap();
+        let w = g.neighbor_weights(0)[idx];
+        assert!((w - 1.0 / (4.0f32 * 2.0).sqrt()).abs() < 1e-6, "w={w}");
+    }
+
+    #[test]
+    fn gcn_norm_directed_regression_uses_symmetrized_degrees() {
+        // Regression for the out-degree bug: in the directed chain 0→1→2,
+        // node 1 has in- and out-edges; its symmetrized degree (with self-
+        // loops) is |{0,1,2}| = 3, not its out-degree 2.
+        let directed = Graph::from_edges(3, &[(0, 1), (1, 2)])
+            .with_self_loops()
+            .gcn_normalized();
+        let idx = directed.neighbors(0).iter().position(|&v| v == 1).unwrap();
+        let w01 = directed.neighbor_weights(0)[idx];
+        // d̂(0) = |{0,1}| = 2, d̂(1) = |{0,1,2}| = 3
+        assert!((w01 - 1.0 / (2.0f32 * 3.0).sqrt()).abs() < 1e-6, "w01={w01}");
+
+        // The same edge must carry the same weight as in the explicitly
+        // symmetrized graph — the invariant the old code broke.
+        let symmetrized = Graph::from_edges(3, &[(0, 1), (1, 0), (1, 2), (2, 1)])
+            .with_self_loops()
+            .gcn_normalized();
+        let idx = symmetrized.neighbors(0).iter().position(|&v| v == 1).unwrap();
+        let w01_sym = symmetrized.neighbor_weights(0)[idx];
+        assert!((w01 - w01_sym).abs() < 1e-6, "{w01} vs {w01_sym}");
     }
 
     #[test]

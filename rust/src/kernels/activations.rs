@@ -26,6 +26,44 @@ pub fn relu_backward_inplace(y: &Matrix, dy: &mut Matrix) {
     }
 }
 
+/// One row of fused log-softmax cross-entropy: returns `(loss, argmax)`
+/// and, when `grad_row` is given, writes `(p − onehot(y)) · inv_n` into it.
+///
+/// Shared by [`softmax_xent`] and the distributed runtime's local loss
+/// (`dist::runtime`), so the serial and distributed paths stay numerically
+/// identical op-for-op — the `distributed_equals_serial_*` equivalence
+/// tests depend on both going through this exact sequence.
+#[inline]
+pub fn softmax_xent_row(
+    row: &[f32],
+    y: usize,
+    inv_n: f32,
+    grad_row: Option<&mut [f32]>,
+) -> (f64, usize) {
+    debug_assert!(y < row.len());
+    // stable log-softmax
+    let mx = row.iter().fold(f32::MIN, |a, &b| a.max(b));
+    let mut sum = 0.0f32;
+    for &v in row {
+        sum += (v - mx).exp();
+    }
+    let log_z = mx + sum.ln();
+    let loss = (log_z - row[y]) as f64;
+    let argmax = row
+        .iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .map(|(k, _)| k)
+        .unwrap();
+    if let Some(grow) = grad_row {
+        for (k, g) in grow.iter_mut().enumerate() {
+            let p = (row[k] - log_z).exp();
+            *g = (p - if k == y { 1.0 } else { 0.0 }) * inv_n;
+        }
+    }
+    (loss, argmax)
+}
+
 /// Masked softmax cross-entropy, fused forward + backward.
 ///
 /// For every row `i` with `mask[i]`, computes `softmax(logits[i])`, adds
@@ -42,7 +80,6 @@ pub fn softmax_xent(
 ) -> (f64, f64, usize) {
     assert_eq!(logits.rows, labels.len());
     assert_eq!(logits.rows, mask.len());
-    let c = logits.cols;
     if let Some(g) = grad.as_deref_mut() {
         assert_eq!((g.rows, g.cols), (logits.rows, logits.cols));
         g.fill_zero();
@@ -58,32 +95,16 @@ pub fn softmax_xent(
         if !mask[i] {
             continue;
         }
-        let row = logits.row(i);
         let y = labels[i] as usize;
-        debug_assert!(y < c);
-        // stable log-softmax
-        let mx = row.iter().fold(f32::MIN, |a, &b| a.max(b));
-        let mut sum = 0.0f32;
-        for &v in row {
-            sum += (v - mx).exp();
-        }
-        let log_z = mx + sum.ln();
-        loss += (log_z - row[y]) as f64;
-        let argmax = row
-            .iter()
-            .enumerate()
-            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-            .map(|(k, _)| k)
-            .unwrap();
+        let (l, argmax) = softmax_xent_row(
+            logits.row(i),
+            y,
+            inv_n,
+            grad.as_deref_mut().map(|g| g.row_mut(i)),
+        );
+        loss += l;
         if argmax == y {
             correct += 1;
-        }
-        if let Some(g) = grad.as_deref_mut() {
-            let grow = g.row_mut(i);
-            for k in 0..c {
-                let p = (row[k] - log_z).exp();
-                grow[k] = (p - if k == y { 1.0 } else { 0.0 }) * inv_n;
-            }
         }
     }
     (

@@ -28,11 +28,16 @@ use crate::tensor::Matrix;
 fn prefetch_row(x: &Matrix, row: usize) {
     #[cfg(target_arch = "x86_64")]
     unsafe {
-        let ptr = x.data.as_ptr().add(row * x.cols) as *const i8;
+        let off = row * x.cols;
+        let ptr = x.data.as_ptr().add(off) as *const i8;
         std::arch::x86_64::_mm_prefetch(ptr, std::arch::x86_64::_MM_HINT_T0);
-        // feature rows span multiple cache lines; touch one line per 64 B
-        // up to the first tile — enough to cover the next FMA burst.
-        if x.cols >= 16 {
+        // Feature rows span multiple cache lines; touch one line per 64 B
+        // up to the first tile — enough to cover the next FMA burst. Two
+        // guards: the row must actually span a second cache line (narrow
+        // rows would prefetch unrelated nodes' data), AND a full 64 B must
+        // remain in `x.data` — for the LAST row of a 16-column matrix the
+        // row is exactly 64 bytes and `ptr + 64` would point past the end.
+        if x.cols >= 16 && off + 16 < x.data.len() {
             std::arch::x86_64::_mm_prefetch(ptr.add(64), std::arch::x86_64::_MM_HINT_T0);
         }
     }
@@ -257,6 +262,25 @@ mod tests {
         let mut y = Matrix::zeros(2, 1);
         spmm_tiled(&g, &x, &mut y);
         assert_eq!(y.get(0, 0), 4.0);
+    }
+
+    #[test]
+    fn prefetch_lookahead_guard_on_last_row_exactly_64_bytes() {
+        // Regression: a prefetched neighbor that is the LAST row of a
+        // 16-column (64-byte-row) matrix used to make `prefetch_row`
+        // construct an out-of-bounds pointer. Node 0's neighbor list is
+        // long enough to enable prefetching and ends at the last row.
+        use crate::kernels::PREFETCH_DIST;
+        let n = PREFETCH_DIST + 4;
+        let edges: Vec<(u32, u32)> = (1..n as u32).map(|v| (0, v)).collect();
+        let g = Graph::from_edges(n, &edges);
+        let mut rng = Rng::new(21);
+        let x = Matrix::from_vec(n, 16, random_matrix(&mut rng, n, 16));
+        let mut y1 = Matrix::zeros(n, 16);
+        let mut y2 = Matrix::zeros(n, 16);
+        spmm_tiled(&g, &x, &mut y1);
+        spmm_naive(&g, &x, &mut y2);
+        assert!(y1.max_abs_diff(&y2) < 1e-5);
     }
 
     #[test]

@@ -1,0 +1,155 @@
+//! Offline stand-in for the `anyhow` crate, covering the API subset this
+//! repository uses: [`Error`], [`Result`], the [`anyhow!`] / [`ensure!`] /
+//! [`bail!`] macros, and the [`Context`] extension trait.
+//!
+//! The build is fully offline (no crates.io access), so this crate is
+//! vendored as a path dependency. Semantics match real `anyhow` for
+//! everything exercised here, with one simplification: the error carries a
+//! single flattened message string instead of a source chain, so `{e}` and
+//! `{e:#}` both render the full `context: cause` message.
+
+use std::fmt;
+
+/// A flattened, type-erased error message.
+pub struct Error {
+    msg: String,
+}
+
+/// `Result<T, anyhow::Error>` alias, as in real `anyhow`.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+impl Error {
+    /// Build an error from any displayable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error {
+            msg: message.to_string(),
+        }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+// The same blanket conversion real `anyhow` provides; coherent because
+// `Error` itself deliberately does NOT implement `std::error::Error`.
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        Error::msg(e)
+    }
+}
+
+/// Extension trait adding `.context(..)` / `.with_context(..)` to results.
+pub trait Context<T> {
+    /// Wrap the error with a static context message.
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error>;
+
+    /// Wrap the error with a lazily evaluated context message.
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error>;
+}
+
+impl<T, E: Into<Error>> Context<T> for Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.map_err(|e| {
+            let e: Error = e.into();
+            Error::msg(format!("{context}: {e}"))
+        })
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.map_err(|e| {
+            let e: Error = e.into();
+            Error::msg(format!("{}: {e}", f()))
+        })
+    }
+}
+
+/// Construct an [`Error`] from a format string or displayable expression.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(::std::format!($msg))
+    };
+    ($fmt:literal, $($arg:tt)*) => {
+        $crate::Error::msg(::std::format!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+}
+
+/// Return early with an error if a condition is false.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return ::std::result::Result::Err($crate::anyhow!(concat!(
+                "condition failed: `",
+                stringify!($cond),
+                "`"
+            )));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return ::std::result::Result::Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+/// Return early with a formatted error.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fails(flag: bool) -> Result<u32> {
+        ensure!(flag, "flag was {}", flag);
+        Ok(7)
+    }
+
+    #[test]
+    fn macro_formats() {
+        let name = "x";
+        let e = anyhow!("bad {name}");
+        assert_eq!(format!("{e}"), "bad x");
+        let e = anyhow!("got {}: {:?}", 3, "y");
+        assert_eq!(format!("{e:#}"), "got 3: \"y\"");
+    }
+
+    #[test]
+    fn ensure_returns_err() {
+        assert_eq!(fails(true).unwrap(), 7);
+        assert!(fails(false).is_err());
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn read() -> Result<String> {
+            let s = std::fs::read_to_string("/definitely/not/a/file")?;
+            Ok(s)
+        }
+        assert!(read().is_err());
+    }
+
+    #[test]
+    fn context_wraps_message() {
+        let r: Result<(), Error> = Err(anyhow!("inner"));
+        let e = r.with_context(|| "outer").unwrap_err();
+        assert_eq!(format!("{e}"), "outer: inner");
+    }
+}

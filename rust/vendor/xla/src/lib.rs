@@ -1,0 +1,154 @@
+//! Offline stub of the `xla` PJRT binding crate.
+//!
+//! This testbed has no XLA/PJRT shared library, so the real binding cannot
+//! link. This stub exposes the exact API surface `morphling::runtime` uses
+//! and fails at the earliest runtime entry point ([`PjRtClient::cpu`]) with
+//! a clear message. Everything downstream of the coordinator handles that
+//! `Err` gracefully (the PJRT engine reports "run `make artifacts`" /
+//! "PJRT unavailable" instead of training).
+//!
+//! To run the real accelerator path, point the `xla` path dependency in
+//! `rust/Cargo.toml` at an actual PJRT binding build with this same API
+//! (`PjRtClient`, `PjRtLoadedExecutable`, `Literal`, `HloModuleProto`,
+//! `XlaComputation`); no `morphling` source changes are needed.
+
+use std::borrow::Borrow;
+
+/// Error type; call sites format it with `{:?}`.
+pub struct XlaError(pub String);
+
+impl std::fmt::Debug for XlaError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::fmt::Display for XlaError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+fn unavailable() -> XlaError {
+    XlaError(
+        "XLA/PJRT runtime unavailable: morphling was built against the offline \
+         stub (rust/vendor/xla). Point the `xla` dependency at a real PJRT \
+         binding to enable the accelerator path."
+            .to_string(),
+    )
+}
+
+/// Element types a [`Literal`] can hold.
+pub trait NativeType: Copy {}
+impl NativeType for f32 {}
+impl NativeType for f64 {}
+impl NativeType for i32 {}
+impl NativeType for i64 {}
+
+/// Host literal (stub: shape/contents are not retained).
+pub struct Literal;
+
+impl Literal {
+    /// Build a rank-1 literal from a host slice.
+    pub fn vec1<T: NativeType>(_data: &[T]) -> Literal {
+        Literal
+    }
+
+    /// Build a rank-0 (scalar) f32 literal.
+    pub fn scalar(_v: f32) -> Literal {
+        Literal
+    }
+
+    /// Reshape to the given dimensions.
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal, XlaError> {
+        Ok(Literal)
+    }
+
+    /// Destructure a tuple literal into its elements.
+    pub fn to_tuple(self) -> Result<Vec<Literal>, XlaError> {
+        Err(unavailable())
+    }
+
+    /// Read the first element of the literal.
+    pub fn get_first_element<T: NativeType>(&self) -> Result<T, XlaError> {
+        Err(unavailable())
+    }
+}
+
+/// Parsed HLO module (stub).
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    /// Parse an HLO-text artifact from disk.
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto, XlaError> {
+        Err(unavailable())
+    }
+}
+
+/// An XLA computation wrapping an HLO module (stub).
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+/// Device buffer returned by an execution (stub).
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    /// Copy the buffer back to a host literal.
+    pub fn to_literal_sync(&self) -> Result<Literal, XlaError> {
+        Err(unavailable())
+    }
+}
+
+/// A compiled, loaded executable (stub).
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    /// Execute with the given argument literals. Returns per-device,
+    /// per-output buffers in the real binding.
+    pub fn execute<T: Borrow<Literal>>(
+        &self,
+        _args: &[T],
+    ) -> Result<Vec<Vec<PjRtBuffer>>, XlaError> {
+        Err(unavailable())
+    }
+}
+
+/// PJRT client handle (stub: creation always fails).
+pub struct PjRtClient;
+
+impl PjRtClient {
+    /// Create a CPU PJRT client. Always errors in the stub; the runtime
+    /// layer surfaces this as "PJRT unavailable" and callers fall back.
+    pub fn cpu() -> Result<PjRtClient, XlaError> {
+        Err(unavailable())
+    }
+
+    /// Compile a computation for this client.
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable, XlaError> {
+        Err(unavailable())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn client_creation_fails_with_clear_message() {
+        let err = PjRtClient::cpu().err().expect("stub must fail");
+        assert!(format!("{err:?}").contains("stub"));
+    }
+
+    #[test]
+    fn literal_construction_is_usable() {
+        let l = Literal::vec1(&[1.0f32, 2.0]);
+        assert!(l.reshape(&[2]).is_ok());
+        let _ = Literal::vec1(&[1i32]);
+        let _ = Literal::scalar(0.0);
+    }
+}
