@@ -9,7 +9,7 @@
 //! 3. **distributed runtime** — 4 simulated ranks with the hierarchical
 //!    partitioner and the pipelined gradient reduction.
 //!
-//!     cargo run --release --example train_e2e [-- --skip-pjrt]
+//!     cargo run --release --example train_e2e [-- --skip-pjrt] [--threads N]
 //!
 //! The run is recorded in EXPERIMENTS.md §End-to-end.
 
@@ -22,15 +22,24 @@ use morphling::util::table::fmt_secs;
 
 fn main() -> anyhow::Result<()> {
     let args = Args::from_env();
+    // Kernel worker count for the native engine (row-blocked fan-out);
+    // unset = MORPHLING_THREADS env, else serial.
+    let threads = args.get("threads").and_then(|v| v.parse::<usize>().ok());
     println!("=== Morphling end-to-end validation ===\n");
 
     // --- 1. native engine, 300 epochs, loss curve ---
     let spec = TrainSpec {
         dataset: "ogbn-arxiv".to_string(),
         epochs: 300,
+        threads,
         ..Default::default()
     };
-    println!("[1/3] native engine: GCN on {} for {} epochs", spec.dataset, spec.epochs);
+    println!(
+        "[1/3] native engine: GCN on {} for {} epochs ({} kernel thread(s))",
+        spec.dataset,
+        spec.epochs,
+        threads.unwrap_or_else(|| morphling::kernels::parallel::ExecPolicy::from_env().threads)
+    );
     let out = run(&spec)?;
     for (e, s) in out.report.epochs.iter().enumerate() {
         if e % 30 == 0 || e + 1 == out.report.epochs.len() {

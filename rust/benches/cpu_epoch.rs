@@ -1,20 +1,29 @@
 //! Figures 2 & 3: CPU per-epoch training time and speedups —
 //! Morphling-native vs the gather-scatter (PyG) and nonfused (DGL)
-//! baseline engines, across all eleven scaled datasets.
+//! baseline engines, across all eleven scaled datasets, with a thread
+//! scaling sweep for the row-blocked kernels (the paper's OpenMP axis).
 //!
-//!     cargo bench --bench cpu_epoch            # full sweep
+//!     cargo bench --bench cpu_epoch            # full sweep, threads 1,2,4,8
 //!     cargo bench --bench cpu_epoch -- --datasets corafull,nell
+//!     cargo bench --bench cpu_epoch -- --threads 1,4 --reps 1 \
+//!                                      --json bench.json      # CI smoke
+//!
+//! `--threads` sets the sweep points (all engines are compared at the max,
+//! so the speedup columns stay apples-to-apples); `--reps N` pins the
+//! measured epoch count (default: adaptive); `--json PATH` writes every
+//! (dataset, engine, threads) → epoch-seconds record for the perf
+//! trajectory artifact.
 //!
 //! Expected shape vs the paper (§V-C): Morphling wins everywhere except
 //! dense-feature Reddit-like workloads where the DGL analogue is close;
-//! the largest wins are on sparse/high-dimensional features (NELL-like).
+//! the largest wins are on sparse/high-dimensional features (NELL-like);
+//! native scaling flattens once the SpMM goes memory-bound.
 
 mod common;
 
 use common::{epoch_time, probe, reps_for};
 use morphling::baselines::{GatherScatterEngine, NonFusedEngine};
 use morphling::engine::native::NativeEngine;
-use morphling::engine::Engine;
 use morphling::graph::datasets;
 use morphling::model::Arch;
 use morphling::util::argparse::Args;
@@ -26,56 +35,96 @@ fn main() {
         .get("datasets")
         .map(|d| d.split(',').map(str::to_string).collect())
         .unwrap_or_default();
+    let mut threads: Vec<usize> = args
+        .get_or("threads", "1,2,4,8")
+        .split(',')
+        .filter_map(|t| t.trim().parse().ok())
+        .filter(|&t| t >= 1)
+        .collect();
+    // Ascending + unique: the scaling/speedup columns divide by the first
+    // (slowest-config) and last (tmax) entries.
+    threads.sort_unstable();
+    threads.dedup();
+    let threads = if threads.is_empty() { vec![1] } else { threads };
+    let tmax = *threads.iter().max().unwrap();
+    let reps_override = args.get("reps").and_then(|v| v.parse::<usize>().ok());
+    let budget = |probe_secs: f64| match reps_override {
+        Some(r) => (0, r.max(1)),
+        None => reps_for(probe_secs),
+    };
 
-    println!("=== Fig 2/3: CPU per-epoch time (native vs PyG/DGL analogues) ===\n");
-    let mut lat = Table::new(vec!["dataset", "morphling", "pyg(gs)", "dgl(nonfused)"]);
-    let mut spd = Table::new(vec!["dataset", "vs pyg", "vs dgl", "sparsity-path"]);
+    println!(
+        "=== Fig 2/3: CPU per-epoch time (native vs PyG/DGL analogues), threads {threads:?} ===\n"
+    );
+    let scale_headers: Vec<String> = std::iter::once("dataset".to_string())
+        .chain(threads.iter().map(|t| format!("native t={t}")))
+        .chain(["pyg(gs)".to_string(), "dgl(nonfused)".to_string()])
+        .collect();
+    let mut lat = Table::new(scale_headers);
+    let mut spd = Table::new(vec![
+        "dataset".to_string(),
+        format!("scaling t={tmax}/t={}", threads[0]),
+        "vs pyg".to_string(),
+        "vs dgl".to_string(),
+        "sparsity-path".to_string(),
+    ]);
     let (mut geo_pyg, mut geo_dgl, mut n_geo) = (0.0f64, 0.0f64, 0usize);
+    // JSON records: (dataset, engine, threads, epoch_secs)
+    let mut records: Vec<(String, &'static str, usize, f64)> = Vec::new();
 
     for spec in datasets::all_specs() {
         if !only.is_empty() && !only.contains(&spec.name.to_string()) {
             continue;
         }
         let ds = datasets::load(&spec);
-        let mut native = NativeEngine::paper_default(&ds, Arch::Gcn, 42);
-        let mode = format!("{:?}", native.mode());
-        let p = probe(&mut native, &ds);
-        let (w, r) = reps_for(p);
-        let t_native = epoch_time(&mut native, &ds, w, r);
-        drop(native);
+        let mut mode = String::new();
+        let mut t_native = Vec::with_capacity(threads.len());
+        for &t in &threads {
+            let mut native = NativeEngine::paper_default(&ds, Arch::Gcn, 42).with_threads(t);
+            mode = format!("{:?}", native.mode());
+            let p = probe(&mut native, &ds);
+            let (w, r) = budget(p);
+            let secs = epoch_time(&mut native, &ds, w, r);
+            records.push((spec.name.to_string(), "morphling-native", t, secs));
+            t_native.push(secs);
+            drop(native);
+        }
 
-        let mut gs = GatherScatterEngine::paper_default(&ds, 42);
+        let mut gs = GatherScatterEngine::paper_default(&ds, 42).with_threads(tmax);
         let p = probe(&mut gs, &ds);
-        let (w, r) = reps_for(p);
+        let (w, r) = budget(p);
         let t_gs = epoch_time(&mut gs, &ds, w, r);
+        records.push((spec.name.to_string(), "gather-scatter(pyg)", tmax, t_gs));
         drop(gs);
 
-        let mut nf = NonFusedEngine::paper_default(&ds, 42);
+        let mut nf = NonFusedEngine::paper_default(&ds, 42).with_threads(tmax);
         let p = probe(&mut nf, &ds);
-        let (w, r) = reps_for(p);
+        let (w, r) = budget(p);
         let t_nf = epoch_time(&mut nf, &ds, w, r);
+        records.push((spec.name.to_string(), "nonfused(dgl)", tmax, t_nf));
         drop(nf);
 
-        lat.row(vec![
-            spec.name.to_string(),
-            fmt_secs(t_native),
-            fmt_secs(t_gs),
-            fmt_secs(t_nf),
-        ]);
+        let t_best = *t_native.last().unwrap();
+        let mut row: Vec<String> = vec![spec.name.to_string()];
+        row.extend(t_native.iter().map(|s| fmt_secs(*s)));
+        row.push(fmt_secs(t_gs));
+        row.push(fmt_secs(t_nf));
+        lat.row(row);
         spd.row(vec![
             spec.name.to_string(),
-            format!("{:.2}x", t_gs / t_native),
-            format!("{:.2}x", t_nf / t_native),
+            format!("{:.2}x", t_native[0] / t_best),
+            format!("{:.2}x", t_gs / t_best),
+            format!("{:.2}x", t_nf / t_best),
             mode,
         ]);
-        geo_pyg += (t_gs / t_native).ln();
-        geo_dgl += (t_nf / t_native).ln();
+        geo_pyg += (t_gs / t_best).ln();
+        geo_dgl += (t_nf / t_best).ln();
         n_geo += 1;
         eprintln!("  [{}] done", spec.name);
     }
     println!("Per-epoch latency (Fig 3):");
     print!("{}", lat.render());
-    println!("\nSpeedup over baselines (Fig 2):");
+    println!("\nSpeedup over baselines at t={tmax}, plus native thread scaling (Fig 2):");
     print!("{}", spd.render());
     if n_geo > 0 {
         println!(
@@ -83,5 +132,24 @@ fn main() {
             (geo_pyg / n_geo as f64).exp(),
             (geo_dgl / n_geo as f64).exp()
         );
+    }
+
+    if let Some(path) = args.get("json") {
+        let body: Vec<String> = records
+            .iter()
+            .map(|(ds, eng, t, secs)| {
+                format!(
+                    "{{\"dataset\":\"{ds}\",\"engine\":\"{eng}\",\"threads\":{t},\"epoch_secs\":{secs:.9}}}"
+                )
+            })
+            .collect();
+        let json = format!("[\n  {}\n]\n", body.join(",\n  "));
+        match std::fs::write(path, json) {
+            Ok(()) => println!("\nwrote {} records to {path}", records.len()),
+            Err(e) => {
+                eprintln!("failed to write {path}: {e}");
+                std::process::exit(1);
+            }
+        }
     }
 }

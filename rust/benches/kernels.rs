@@ -10,9 +10,10 @@
 //!     cargo bench --bench kernels
 
 use morphling::graph::generator::{power_law_graph, GraphConfig};
-use morphling::kernels::gemm::gemm;
+use morphling::kernels::gemm::{gemm, gemm_ex};
+use morphling::kernels::parallel::ExecPolicy;
 use morphling::kernels::sparse_feat::spmm_csr_dense;
-use morphling::kernels::spmm::{spmm_implicit_transpose, spmm_naive, spmm_tiled};
+use morphling::kernels::spmm::{spmm_implicit_transpose, spmm_naive, spmm_tiled, spmm_tiled_ex};
 use morphling::kernels::update::{adam_step, AdamParams};
 use morphling::tensor::{CsrMatrix, Matrix};
 use morphling::util::proptest::{random_matrix, random_sparse_matrix};
@@ -51,6 +52,42 @@ fn main() {
     }
     println!("SpMM aggregation (Algorithm 2 ablation):");
     print!("{}", t.render());
+
+    // --- thread scaling: row-blocked fan-out (the OpenMP-target axis) ---
+    let fs = 64usize;
+    let xs_feat = Matrix::from_vec(n, fs, random_matrix(&mut rng, n, fs));
+    let mut ys = Matrix::zeros(n, fs);
+    let (gm, gk, gn) = (4_000usize, 256usize, 128usize);
+    let ga = Matrix::from_vec(gm, gk, random_matrix(&mut rng, gm, gk));
+    let gb = Matrix::from_vec(gk, gn, random_matrix(&mut rng, gk, gn));
+    let mut gc = Matrix::zeros(gm, gn);
+    let mut ts = Table::new(vec![
+        "threads",
+        "spmm_tiled F=64",
+        "spmm speedup",
+        "gemm 4000x256x128",
+        "gemm speedup",
+    ]);
+    let (mut spmm_t1, mut gemm_t1) = (0.0f64, 0.0f64);
+    for th in [1usize, 2, 4, 8] {
+        let pol = ExecPolicy::with_threads(th);
+        let (_, s_spmm) = bench_fn(1, 5, || spmm_tiled_ex(&g, &xs_feat, &mut ys, pol));
+        let (_, s_gemm) = bench_fn(1, 5, || gemm_ex(&ga, &gb, &mut gc, pol));
+        let (t_spmm, t_gemm) = (median(&s_spmm), median(&s_gemm));
+        if th == 1 {
+            spmm_t1 = t_spmm;
+            gemm_t1 = t_gemm;
+        }
+        ts.row(vec![
+            th.to_string(),
+            fmt_secs(t_spmm),
+            format!("{:.2}x", spmm_t1 / t_spmm),
+            fmt_secs(t_gemm),
+            format!("{:.2}x", gemm_t1 / t_gemm),
+        ]);
+    }
+    println!("\nThread scaling (edge-balanced row blocks, no atomics):");
+    print!("{}", ts.render());
 
     // --- backward strategies ---
     let f = 64;

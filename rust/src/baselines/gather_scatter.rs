@@ -10,13 +10,24 @@
 //!    intermediates alive for the backward), so the live set during the
 //!    backward holds the edge tensors of *all* layers simultaneously —
 //!    exactly the `O(|E|·F)` peak the paper measures for PyG;
-//! 4. kernels are generic: no feature tiling, no prefetch, no fusion.
+//! 4. kernels are generic: no feature tiling, no prefetch, no fusion —
+//!    but they honor the same `threads` knob as the native engine (real
+//!    PyG's torch ops are multi-threaded too), so speedup comparisons at
+//!    any thread count stay apples-to-apples. The message rows of
+//!    `gather`/`scatter_add` are CSR-edge-ordered, so the same
+//!    edge-balanced node blocks give every worker exclusive ownership of
+//!    its message and output rows; only the backward `dz[v] +=` gather
+//!    stays serial (its scatter targets are arbitrary — the spot PyG pays
+//!    atomics for).
 
 use crate::baselines::MemCounter;
 use crate::engine::{Engine, Mask};
 use crate::graph::{Dataset, Graph};
 use crate::kernels::activations::softmax_xent;
-use crate::kernels::gemm::{add_bias, col_sum, gemm, gemm_a_bt, gemm_at_b};
+use crate::kernels::gemm::{add_bias_ex, col_sum, gemm_a_bt_ex, gemm_at_b_ex, gemm_ex};
+use crate::kernels::parallel::{
+    par_edge_blocks, par_row_blocks, partition_rows_balanced, ExecPolicy,
+};
 use crate::kernels::update::AdamParams;
 use crate::model::{Arch, GnnParams, ModelConfig};
 use crate::optim::{OptKind, Optimizer};
@@ -42,6 +53,8 @@ struct TapeLayer {
 pub struct GatherScatterEngine {
     pub params: GnnParams,
     pub opt: Optimizer,
+    /// Threading knob (matches the native engine's for fair comparisons).
+    pub policy: ExecPolicy,
     agg: Graph,
     mem: MemCounter,
     tape: Vec<TapeLayer>,
@@ -63,10 +76,22 @@ impl GatherScatterEngine {
         GatherScatterEngine {
             params,
             opt,
+            policy: ExecPolicy::from_env(),
             agg,
             mem: MemCounter::new(resident),
             tape: Vec::new(),
         }
+    }
+
+    /// Builder-style thread-count override (`threads = 1` = serial).
+    pub fn with_threads(mut self, threads: usize) -> GatherScatterEngine {
+        self.policy = ExecPolicy::with_threads(threads);
+        self
+    }
+
+    /// Override the kernel execution policy for all subsequent epochs.
+    pub fn set_threads(&mut self, threads: usize) {
+        self.policy = ExecPolicy::with_threads(threads);
     }
 
     /// One GCN layer forward, materializing the per-edge message tensor.
@@ -74,44 +99,62 @@ impl GatherScatterEngine {
         let n = self.agg.num_nodes;
         let e = self.agg.num_edges();
         let h_dim = self.params.layers[l].w.cols;
+        let pol = self.policy;
 
         // transform: fresh output buffer (torch.mm allocates)
         let mut z = Matrix::zeros(n, h_dim);
         self.mem.alloc(z.nbytes());
-        gemm(x, &self.params.layers[l].w, &mut z);
+        gemm_ex(x, &self.params.layers[l].w, &mut z, pol);
 
-        // gather + edge multiply: |E| × H messages
+        // gather + edge multiply: |E| × H messages. Message rows follow CSR
+        // edge order, so edge-balanced node blocks own disjoint message
+        // spans and the fan-out needs no synchronization.
         let mut msg = Matrix::zeros(e, h_dim);
         self.mem.alloc(msg.nbytes());
-        let mut ei = 0usize;
-        for u in 0..n {
-            for k in self.agg.row_ptr[u] as usize..self.agg.row_ptr[u + 1] as usize {
-                let v = self.agg.col_idx[k] as usize;
-                let w = self.agg.weights[k];
-                let src = &z.data[v * h_dim..(v + 1) * h_dim];
-                let dst = &mut msg.data[ei * h_dim..(ei + 1) * h_dim];
-                for j in 0..h_dim {
-                    dst[j] = w * src[j];
+        let agg = &self.agg;
+        let gather = |u_range: std::ops::Range<usize>, out: &mut [f32]| {
+            let base = agg.row_ptr[u_range.start] as usize;
+            for u in u_range {
+                for k in agg.row_ptr[u] as usize..agg.row_ptr[u + 1] as usize {
+                    let v = agg.col_idx[k] as usize;
+                    let w = agg.weights[k];
+                    let src = &z.data[v * h_dim..(v + 1) * h_dim];
+                    let dst = &mut out[(k - base) * h_dim..(k - base + 1) * h_dim];
+                    for j in 0..h_dim {
+                        dst[j] = w * src[j];
+                    }
                 }
-                ei += 1;
             }
+        };
+        if pol.is_serial() {
+            gather(0..n, &mut msg.data);
+        } else {
+            let blocks = partition_rows_balanced(&agg.row_ptr, pol.threads);
+            par_edge_blocks(&agg.row_ptr, &blocks, h_dim, &mut msg.data, gather);
         }
 
-        // scatter_add into a fresh output
+        // scatter_add into a fresh output (destination rows are node-owned)
         let mut out = Matrix::zeros(n, h_dim);
         self.mem.alloc(out.nbytes());
-        let mut ei = 0usize;
-        for u in 0..n {
-            let orow_off = u * h_dim;
-            for _ in self.agg.row_ptr[u] as usize..self.agg.row_ptr[u + 1] as usize {
-                let m = &msg.data[ei * h_dim..(ei + 1) * h_dim];
-                for j in 0..h_dim {
-                    out.data[orow_off + j] += m[j];
+        let scatter = |u_range: std::ops::Range<usize>, slice: &mut [f32]| {
+            let base = u_range.start;
+            for u in u_range {
+                let orow = &mut slice[(u - base) * h_dim..(u - base + 1) * h_dim];
+                for k in agg.row_ptr[u] as usize..agg.row_ptr[u + 1] as usize {
+                    let m = &msg.data[k * h_dim..(k + 1) * h_dim];
+                    for j in 0..h_dim {
+                        orow[j] += m[j];
+                    }
                 }
-                ei += 1;
             }
+        };
+        if pol.is_serial() {
+            scatter(0..n, &mut out.data);
+        } else {
+            let blocks = partition_rows_balanced(&agg.row_ptr, pol.threads);
+            par_row_blocks(&blocks, h_dim, &mut out.data, scatter);
         }
-        add_bias(&mut out, &self.params.layers[l].b);
+        add_bias_ex(&mut out, &self.params.layers[l].b, pol);
         if relu {
             // relu allocates a fresh tensor in define-by-run frameworks
             let mut h = out.clone();
@@ -169,20 +212,32 @@ impl GatherScatterEngine {
             }
             col_sum(&g, &mut self.params.layers[l].db);
 
-            // scatter backward = broadcast dOut to messages (|E| × H alloc)
+            // scatter backward = broadcast dOut to messages (|E| × H alloc);
+            // message rows are edge-owned, same fan-out as the forward
             let e = self.agg.num_edges();
             let mut dmsg = Matrix::zeros(e, h_dim);
             self.mem.alloc(dmsg.nbytes());
-            let mut ei = 0usize;
-            for u in 0..n {
-                let grow = &g.data[u * h_dim..(u + 1) * h_dim];
-                for _ in self.agg.row_ptr[u] as usize..self.agg.row_ptr[u + 1] as usize {
-                    dmsg.data[ei * h_dim..(ei + 1) * h_dim].copy_from_slice(grow);
-                    ei += 1;
+            let agg = &self.agg;
+            let pol = self.policy;
+            let broadcast = |u_range: std::ops::Range<usize>, out: &mut [f32]| {
+                let base = agg.row_ptr[u_range.start] as usize;
+                for u in u_range {
+                    let grow = &g.data[u * h_dim..(u + 1) * h_dim];
+                    for k in agg.row_ptr[u] as usize..agg.row_ptr[u + 1] as usize {
+                        out[(k - base) * h_dim..(k - base + 1) * h_dim].copy_from_slice(grow);
+                    }
                 }
+            };
+            if pol.is_serial() {
+                broadcast(0..n, &mut dmsg.data);
+            } else {
+                let blocks = partition_rows_balanced(&agg.row_ptr, pol.threads);
+                par_edge_blocks(&agg.row_ptr, &blocks, h_dim, &mut dmsg.data, broadcast);
             }
 
-            // gather backward: dz[v] += w_e * dmsg[e]
+            // gather backward: dz[v] += w_e * dmsg[e] — scatter targets are
+            // arbitrary source nodes (not row-owned), so this stays serial:
+            // it is the contention point real PyG resolves with atomics.
             let mut dz = Matrix::zeros(n, h_dim);
             self.mem.alloc(dz.nbytes());
             let mut ei = 0usize;
@@ -200,11 +255,11 @@ impl GatherScatterEngine {
             }
             let _ = &t.z; // z retained by autograd though unused by GCN's grad
 
-            gemm_at_b(&t.x, &dz, &mut self.params.layers[l].dw);
+            gemm_at_b_ex(&t.x, &dz, &mut self.params.layers[l].dw, pol);
             if l > 0 {
                 let mut gx = Matrix::zeros(n, self.params.layers[l].w.rows);
                 self.mem.alloc(gx.nbytes());
-                gemm_a_bt(&dz, &self.params.layers[l].w, &mut gx);
+                gemm_a_bt_ex(&dz, &self.params.layers[l].w, &mut gx, pol);
                 g = gx;
             }
             self.mem.free(dmsg.nbytes());

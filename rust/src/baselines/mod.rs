@@ -17,7 +17,10 @@
 //!   freshly allocated intermediate (no fusion, no buffer reuse).
 //!
 //! Both train the same 3-layer GCN over the same [`GnnParams`] as the
-//! native engine, so numeric equivalence is testable.
+//! native engine, so numeric equivalence is testable. Both also honor the
+//! same `threads` execution knob ([`crate::kernels::parallel::ExecPolicy`])
+//! as the native engine — their real counterparts are multi-threaded, so
+//! speedup comparisons at any thread count stay apples-to-apples.
 
 pub mod gather_scatter;
 pub mod nonfused;

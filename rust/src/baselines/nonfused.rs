@@ -12,14 +12,18 @@
 //! 4. stages are not fused: transform, aggregate, bias+activation each
 //!    allocate a fresh `N × H` intermediate per layer per epoch, retained
 //!    for the backward (framework autograd semantics);
-//! 5. the SpMM kernel is the generic (untiled, unprefetched) variant.
+//! 5. the SpMM kernel is the generic (untiled, unprefetched) variant —
+//!    but it honors the same `threads` knob as the native engine (real
+//!    DGL's g-SpMM and its BLAS calls are multi-threaded too), so speedup
+//!    comparisons at any thread count stay apples-to-apples.
 
 use crate::baselines::MemCounter;
 use crate::engine::{Engine, Mask};
 use crate::graph::{Dataset, Graph};
 use crate::kernels::activations::softmax_xent;
-use crate::kernels::gemm::{add_bias, col_sum, gemm, gemm_a_bt, gemm_at_b};
-use crate::kernels::spmm::spmm_naive;
+use crate::kernels::gemm::{add_bias_ex, col_sum, gemm_a_bt_ex, gemm_at_b_ex, gemm_ex};
+use crate::kernels::parallel::ExecPolicy;
+use crate::kernels::spmm::spmm_naive_ex;
 use crate::kernels::update::AdamParams;
 use crate::model::{Arch, GnnParams, ModelConfig};
 use crate::optim::{OptKind, Optimizer};
@@ -37,6 +41,8 @@ struct TapeLayer {
 pub struct NonFusedEngine {
     pub params: GnnParams,
     pub opt: Optimizer,
+    /// Threading knob (matches the native engine's for fair comparisons).
+    pub policy: ExecPolicy,
     /// CSR adjacency (forward aggregation).
     agg: Graph,
     /// CSC (transposed) adjacency kept resident (format duplication).
@@ -61,11 +67,23 @@ impl NonFusedEngine {
         NonFusedEngine {
             params,
             opt,
+            policy: ExecPolicy::from_env(),
             agg,
             agg_t,
             mem: MemCounter::new(resident),
             tape: Vec::new(),
         }
+    }
+
+    /// Builder-style thread-count override (`threads = 1` = serial).
+    pub fn with_threads(mut self, threads: usize) -> NonFusedEngine {
+        self.policy = ExecPolicy::with_threads(threads);
+        self
+    }
+
+    /// Override the kernel execution policy for all subsequent epochs.
+    pub fn set_threads(&mut self, threads: usize) {
+        self.policy = ExecPolicy::with_threads(threads);
     }
 
     fn forward(&mut self, ds: &Dataset) -> Matrix {
@@ -80,15 +98,15 @@ impl NonFusedEngine {
             // stage 1: dense transform (fresh buffer)
             let mut z = Matrix::zeros(n, h_dim);
             self.mem.alloc(z.nbytes());
-            gemm(&cur, &self.params.layers[l].w, &mut z);
+            gemm_ex(&cur, &self.params.layers[l].w, &mut z, self.policy);
             // stage 2: generic SpMM (fresh buffer)
             let mut aggd = Matrix::zeros(n, h_dim);
             self.mem.alloc(aggd.nbytes());
-            spmm_naive(&self.agg, &z, &mut aggd);
+            spmm_naive_ex(&self.agg, &z, &mut aggd, self.policy);
             // stage 3: bias + activation (fresh buffer)
             let mut h = aggd.clone();
             self.mem.alloc(h.nbytes());
-            add_bias(&mut h, &self.params.layers[l].b);
+            add_bias_ex(&mut h, &self.params.layers[l].b, self.policy);
             if l + 1 != nl {
                 h.data.iter_mut().for_each(|v| {
                     if *v < 0.0 {
@@ -116,16 +134,17 @@ impl NonFusedEngine {
                 }
             }
             col_sum(&g, &mut self.params.layers[l].db);
-            // backward aggregation via the resident CSC copy (fresh buffer)
+            // backward aggregation via the resident CSC copy (fresh buffer;
+            // row-owned under threading, so no atomics here either)
             let mut gz = Matrix::zeros(n, h_dim);
             self.mem.alloc(gz.nbytes());
-            spmm_naive(&self.agg_t, &g, &mut gz);
+            spmm_naive_ex(&self.agg_t, &g, &mut gz, self.policy);
             let x = &self.tape[l].x;
-            gemm_at_b(x, &gz, &mut self.params.layers[l].dw);
+            gemm_at_b_ex(x, &gz, &mut self.params.layers[l].dw, self.policy);
             if l > 0 {
                 let mut gx = Matrix::zeros(n, self.params.layers[l].w.rows);
                 self.mem.alloc(gx.nbytes());
-                gemm_a_bt(&gz, &self.params.layers[l].w, &mut gx);
+                gemm_a_bt_ex(&gz, &self.params.layers[l].w, &mut gx, self.policy);
                 g = gx;
             }
         }

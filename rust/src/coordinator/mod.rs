@@ -6,9 +6,10 @@
 
 use crate::baselines::{GatherScatterEngine, NonFusedEngine};
 use crate::engine::native::NativeEngine;
-use crate::engine::sparsity::{calibrate_gamma, decide, SparsityPolicy};
+use crate::engine::sparsity::{calibrate_gamma_ex, decide, SparsityPolicy};
 use crate::engine::{Engine, EngineKind};
 use crate::graph::{datasets, Dataset};
+use crate::kernels::parallel::ExecPolicy;
 use crate::kernels::update::AdamParams;
 use crate::model::{Arch, ModelConfig};
 use crate::optim::OptKind;
@@ -31,6 +32,10 @@ pub struct TrainSpec {
     pub tau: Option<f64>,
     /// Measure γ with the offline microbenchmark instead of the default.
     pub calibrate: bool,
+    /// Kernel worker count; `None` = `MORPHLING_THREADS` env (else serial).
+    /// Applies to the native and baseline engines (PJRT delegates threading
+    /// to the XLA runtime).
+    pub threads: Option<usize>,
     pub seed: u64,
     pub artifacts_dir: PathBuf,
     pub log: bool,
@@ -47,6 +52,7 @@ impl Default for TrainSpec {
             lr: 0.01,
             tau: None,
             calibrate: false,
+            threads: None,
             seed: 42,
             artifacts_dir: PathBuf::from("artifacts"),
             log: false,
@@ -56,12 +62,18 @@ impl Default for TrainSpec {
 
 impl TrainSpec {
     /// Resolve the sparsity policy: pinned τ, calibrated γ, or the paper
-    /// default.
+    /// default. Calibration runs under the same thread count the engine
+    /// will train with — γ is configuration-dependent (see
+    /// [`crate::engine::sparsity`]).
     pub fn policy(&self) -> SparsityPolicy {
         if let Some(tau) = self.tau {
             SparsityPolicy::from_tau(tau)
         } else if self.calibrate {
-            SparsityPolicy::from_gamma(calibrate_gamma(self.seed))
+            let pol = self
+                .threads
+                .map(ExecPolicy::with_threads)
+                .unwrap_or_default();
+            SparsityPolicy::from_gamma(calibrate_gamma_ex(self.seed, pol))
         } else {
             SparsityPolicy::paper_default()
         }
@@ -76,16 +88,30 @@ pub fn build_engine(spec: &TrainSpec, ds: &Dataset) -> Result<Box<dyn Engine>> {
         ..Default::default()
     };
     Ok(match spec.engine {
-        EngineKind::Native => Box::new(NativeEngine::new(
-            ds,
-            &config,
-            spec.optimizer,
-            hp,
-            spec.policy(),
-            spec.seed,
-        )),
-        EngineKind::GatherScatter => Box::new(GatherScatterEngine::paper_default(ds, spec.seed)),
-        EngineKind::NonFused => Box::new(NonFusedEngine::paper_default(ds, spec.seed)),
+        EngineKind::Native => {
+            let mut e =
+                NativeEngine::new(ds, &config, spec.optimizer, hp, spec.policy(), spec.seed);
+            if let Some(t) = spec.threads {
+                e.set_threads(t);
+            }
+            Box::new(e)
+        }
+        EngineKind::GatherScatter => {
+            let mut e = GatherScatterEngine::paper_default(ds, spec.seed);
+            if let Some(t) = spec.threads {
+                e.set_threads(t);
+            }
+            Box::new(e)
+        }
+        EngineKind::NonFused => {
+            let mut e = NonFusedEngine::paper_default(ds, spec.seed);
+            if let Some(t) = spec.threads {
+                e.set_threads(t);
+            }
+            Box::new(e)
+        }
+        // PJRT owns its own intra-op threading via the XLA runtime; the
+        // `threads` knob does not apply.
         EngineKind::Pjrt => Box::new(PjrtEngine::from_artifacts(
             &spec.artifacts_dir,
             ds,

@@ -1,9 +1,15 @@
 //! Morphling's native CPU backend — the fused, sparsity-aware engine the
-//! paper synthesizes for OpenMP targets (§IV-C), single-threaded on this
-//! testbed but structurally identical:
+//! paper synthesizes for OpenMP targets (§IV-C):
 //!
 //! - aggregation via the cache-tiled, software-prefetched SpMM
 //!   ([`crate::kernels::spmm::spmm_tiled`], paper Algorithm 2);
+//! - row-blocked multi-threading behind the `threads` knob
+//!   ([`crate::kernels::parallel::ExecPolicy`], set per engine or via
+//!   `MORPHLING_THREADS`): the hot kernels fan out over edge-balanced row
+//!   blocks, and the backward pass runs the forward kernels on the
+//!   transposed-CSR / CSC views so every worker owns its output rows —
+//!   **no atomics**, and results are bitwise-identical at any thread count
+//!   (`threads = 1` is the serial seed behavior);
 //! - **no** per-edge message tensors: messages accumulate directly into node
 //!   embeddings, bounding activations at `O(|V|·F)` (paper Eq. 13);
 //! - sparsity-aware first layer: when the load-time decision selected the
@@ -16,10 +22,13 @@
 use crate::engine::sparsity::{decide, ExecutionMode, SparsityDecision, SparsityPolicy};
 use crate::engine::{Engine, Mask};
 use crate::graph::{Dataset, Graph};
-use crate::kernels::activations::{relu_backward_inplace, relu_inplace, softmax_xent};
-use crate::kernels::gemm::{add_bias, col_sum, gemm, gemm_a_bt, gemm_a_bt_acc, gemm_at_b};
-use crate::kernels::sparse_feat::{spmm_csc_t_dense, spmm_csr_dense};
-use crate::kernels::spmm::{spmm_max, spmm_max_backward, spmm_tiled};
+use crate::kernels::activations::{relu_backward_inplace_ex, relu_inplace_ex, softmax_xent};
+use crate::kernels::gemm::{
+    add_bias_ex, col_sum, gemm_a_bt_acc_ex, gemm_a_bt_ex, gemm_at_b_ex, gemm_ex,
+};
+use crate::kernels::parallel::ExecPolicy;
+use crate::kernels::sparse_feat::{spmm_csc_t_dense_ex, spmm_csr_dense_ex};
+use crate::kernels::spmm::{spmm_max_backward, spmm_max_ex, spmm_tiled_ex};
 use crate::kernels::update::AdamParams;
 use crate::model::{Arch, GnnParams, ModelConfig};
 use crate::optim::{OptKind, Optimizer};
@@ -36,6 +45,9 @@ pub struct NativeEngine {
     pub params: GnnParams,
     pub opt: Optimizer,
     pub decision: SparsityDecision,
+    /// Row-blocked threading knob for all kernel dispatch; defaults to
+    /// `MORPHLING_THREADS` (else serial).
+    pub policy: ExecPolicy,
     arch: Arch,
     dims: Vec<usize>,
     n: usize,
@@ -161,6 +173,7 @@ impl NativeEngine {
             params,
             opt: optimizer,
             decision,
+            policy: ExecPolicy::from_env(),
             arch: config.arch,
             dims,
             n,
@@ -182,6 +195,17 @@ impl NativeEngine {
         self.decision.mode
     }
 
+    /// Builder-style thread-count override (`threads = 1` = serial).
+    pub fn with_threads(mut self, threads: usize) -> NativeEngine {
+        self.set_threads(threads);
+        self
+    }
+
+    /// Override the kernel execution policy for all subsequent epochs.
+    pub fn set_threads(&mut self, threads: usize) {
+        self.policy = ExecPolicy::with_threads(threads);
+    }
+
     fn num_layers(&self) -> usize {
         self.dims.len() - 1
     }
@@ -191,11 +215,11 @@ impl NativeEngine {
     fn transform(&self, layer: usize, ds: &Dataset, w: &Matrix, out: &mut Matrix) {
         if layer == 0 {
             match (&self.x_csr, self.decision.mode) {
-                (Some(csr), ExecutionMode::Sparse) => spmm_csr_dense(csr, w, out),
-                _ => gemm(&ds.features, w, out),
+                (Some(csr), ExecutionMode::Sparse) => spmm_csr_dense_ex(csr, w, out, self.policy),
+                _ => gemm_ex(&ds.features, w, out, self.policy),
             }
         } else {
-            gemm(&self.h[layer - 1], w, out);
+            gemm_ex(&self.h[layer - 1], w, out, self.policy);
         }
     }
 
@@ -203,11 +227,11 @@ impl NativeEngine {
     fn weight_grad(&self, layer: usize, ds: &Dataset, g: &Matrix, dw: &mut Matrix) {
         if layer == 0 {
             match (&self.x_csc, self.decision.mode) {
-                (Some(csc), ExecutionMode::Sparse) => spmm_csc_t_dense(csc, g, dw),
-                _ => gemm_at_b(&ds.features, g, dw),
+                (Some(csc), ExecutionMode::Sparse) => spmm_csc_t_dense_ex(csc, g, dw, self.policy),
+                _ => gemm_at_b_ex(&ds.features, g, dw, self.policy),
             }
         } else {
-            gemm_at_b(&self.h[layer - 1], g, dw);
+            gemm_at_b_ex(&self.h[layer - 1], g, dw, self.policy);
         }
     }
 
@@ -222,10 +246,10 @@ impl NativeEngine {
                     let mut z = std::mem::replace(&mut self.z[l], Matrix::zeros(0, 0));
                     self.transform(l, ds, &self.params.layers[l].w, &mut z);
                     let mut h = std::mem::replace(&mut self.h[l], Matrix::zeros(0, 0));
-                    spmm_tiled(&self.agg, &z, &mut h);
-                    add_bias(&mut h, &self.params.layers[l].b);
+                    spmm_tiled_ex(&self.agg, &z, &mut h, self.policy);
+                    add_bias_ex(&mut h, &self.params.layers[l].b, self.policy);
                     if !is_last {
-                        relu_inplace(&mut h);
+                        relu_inplace_ex(&mut h, self.policy);
                     }
                     self.z[l] = z;
                     self.h[l] = h;
@@ -235,7 +259,7 @@ impl NativeEngine {
                     let mut z = std::mem::replace(&mut self.z[l], Matrix::zeros(0, 0));
                     self.transform(l, ds, &self.params.layers[l].w, &mut z);
                     let mut h = std::mem::replace(&mut self.h[l], Matrix::zeros(0, 0));
-                    spmm_tiled(&self.agg, &z, &mut h);
+                    spmm_tiled_ex(&self.agg, &z, &mut h, self.policy);
                     let w_self = self.params.layers[l].w_self.as_ref().unwrap();
                     // reuse z as the self-path buffer (its aggregation is done)
                     let w_self = w_self.clone();
@@ -243,9 +267,9 @@ impl NativeEngine {
                     for (hv, zv) in h.data.iter_mut().zip(&z.data) {
                         *hv += zv;
                     }
-                    add_bias(&mut h, &self.params.layers[l].b);
+                    add_bias_ex(&mut h, &self.params.layers[l].b, self.policy);
                     if !is_last {
-                        relu_inplace(&mut h);
+                        relu_inplace_ex(&mut h, self.policy);
                     }
                     self.z[l] = z;
                     self.h[l] = h;
@@ -256,19 +280,19 @@ impl NativeEngine {
                     let mut am = std::mem::take(&mut self.argmax[l]);
                     {
                         let input: &Matrix = if l == 0 { &ds.features } else { &self.h[l - 1] };
-                        spmm_max(&self.agg, input, &mut m, &mut am);
+                        spmm_max_ex(&self.agg, input, &mut m, &mut am, self.policy);
                     }
                     let mut z = std::mem::replace(&mut self.z[l], Matrix::zeros(0, 0));
-                    gemm(&m, &self.params.layers[l].w, &mut z);
+                    gemm_ex(&m, &self.params.layers[l].w, &mut z, self.policy);
                     let mut h = std::mem::replace(&mut self.h[l], Matrix::zeros(0, 0));
                     let w_self = self.params.layers[l].w_self.as_ref().unwrap().clone();
                     self.transform(l, ds, &w_self, &mut h);
                     for (hv, zv) in h.data.iter_mut().zip(&z.data) {
                         *hv += zv;
                     }
-                    add_bias(&mut h, &self.params.layers[l].b);
+                    add_bias_ex(&mut h, &self.params.layers[l].b, self.policy);
                     if !is_last {
-                        relu_inplace(&mut h);
+                        relu_inplace_ex(&mut h, self.policy);
                     }
                     self.m[l] = m;
                     self.argmax[l] = am;
@@ -280,17 +304,17 @@ impl NativeEngine {
                     let mut m = std::mem::replace(&mut self.m[l], Matrix::zeros(0, 0));
                     {
                         let input: &Matrix = if l == 0 { &ds.features } else { &self.h[l - 1] };
-                        spmm_tiled(&self.agg, input, &mut m);
+                        spmm_tiled_ex(&self.agg, input, &mut m, self.policy);
                         let scale = 1.0 + GIN_EPS;
                         for (mv, xv) in m.data.iter_mut().zip(&input.data) {
                             *mv += scale * xv;
                         }
                     }
                     let mut h = std::mem::replace(&mut self.h[l], Matrix::zeros(0, 0));
-                    gemm(&m, &self.params.layers[l].w, &mut h);
-                    add_bias(&mut h, &self.params.layers[l].b);
+                    gemm_ex(&m, &self.params.layers[l].w, &mut h, self.policy);
+                    add_bias_ex(&mut h, &self.params.layers[l].b, self.policy);
                     if !is_last {
-                        relu_inplace(&mut h);
+                        relu_inplace_ex(&mut h, self.policy);
                     }
                     self.m[l] = m;
                     self.h[l] = h;
@@ -300,13 +324,20 @@ impl NativeEngine {
     }
 
     /// Backward pass from the loss gradient already in `gh[L-1]`.
+    ///
+    /// Aggregation gradients run the forward SpMM on the pre-transposed
+    /// graph (`agg_t`), so under threading every worker still owns a
+    /// disjoint block of output rows — the conflict-free, atomics-free
+    /// backward the paper uses on CPU. `col_sum` (bias gradient) stays
+    /// serial: it is a cross-row reduction whose split would change
+    /// accumulation order.
     fn backward(&mut self, ds: &Dataset) {
         let nl = self.num_layers();
         for l in (0..nl).rev() {
             if l + 1 != nl {
                 // ReLU mask (post-activation output saved in h[l])
                 let h = std::mem::replace(&mut self.h[l], Matrix::zeros(0, 0));
-                relu_backward_inplace(&h, &mut self.gh[l]);
+                relu_backward_inplace_ex(&h, &mut self.gh[l], self.policy);
                 self.h[l] = h;
             }
             let g = std::mem::replace(&mut self.gh[l], Matrix::zeros(0, 0));
@@ -315,12 +346,17 @@ impl NativeEngine {
                 Arch::Gcn => {
                     // gz = Âᵀ·g ; dW = Xᵀ·gz ; g_prev = gz·Wᵀ
                     let mut gz = std::mem::replace(&mut self.gz[l], Matrix::zeros(0, 0));
-                    spmm_tiled(&self.agg_t, &g, &mut gz);
+                    spmm_tiled_ex(&self.agg_t, &g, &mut gz, self.policy);
                     let mut dw = std::mem::replace(&mut self.params.layers[l].dw, Matrix::zeros(0, 0));
                     self.weight_grad(l, ds, &gz, &mut dw);
                     self.params.layers[l].dw = dw;
                     if l > 0 {
-                        gemm_a_bt(&gz, &self.params.layers[l].w, &mut self.gh[l - 1]);
+                        gemm_a_bt_ex(
+                            &gz,
+                            &self.params.layers[l].w,
+                            &mut self.gh[l - 1],
+                            self.policy,
+                        );
                     }
                     self.gz[l] = gz;
                 }
@@ -332,16 +368,22 @@ impl NativeEngine {
                     self.weight_grad(l, ds, &g, &mut dws);
                     self.params.layers[l].dw_self = Some(dws);
                     let mut gz = std::mem::replace(&mut self.gz[l], Matrix::zeros(0, 0));
-                    spmm_tiled(&self.agg_t, &g, &mut gz);
+                    spmm_tiled_ex(&self.agg_t, &g, &mut gz, self.policy);
                     let mut dw = std::mem::replace(&mut self.params.layers[l].dw, Matrix::zeros(0, 0));
                     self.weight_grad(l, ds, &gz, &mut dw);
                     self.params.layers[l].dw = dw;
                     if l > 0 {
-                        gemm_a_bt(&gz, &self.params.layers[l].w, &mut self.gh[l - 1]);
-                        gemm_a_bt_acc(
+                        gemm_a_bt_ex(
+                            &gz,
+                            &self.params.layers[l].w,
+                            &mut self.gh[l - 1],
+                            self.policy,
+                        );
+                        gemm_a_bt_acc_ex(
                             &g,
                             self.params.layers[l].w_self.as_ref().unwrap(),
                             &mut self.gh[l - 1],
+                            self.policy,
                         );
                     }
                     self.gz[l] = gz;
@@ -349,30 +391,31 @@ impl NativeEngine {
                 Arch::SageMax => {
                     // dW = mᵀ·g ; dW_self = Xᵀ·g ;
                     // g_prev = max_bwd(g·Wᵀ) + g·W_selfᵀ
-                    gemm_at_b(&self.m[l], &g, &mut self.params.layers[l].dw);
+                    gemm_at_b_ex(&self.m[l], &g, &mut self.params.layers[l].dw, self.policy);
                     let mut dws =
                         std::mem::replace(self.params.layers[l].dw_self.as_mut().unwrap(), Matrix::zeros(0, 0));
                     self.weight_grad(l, ds, &g, &mut dws);
                     self.params.layers[l].dw_self = Some(dws);
                     if l > 0 {
                         let mut gm = std::mem::replace(&mut self.gm[l - 1], Matrix::zeros(0, 0));
-                        gemm_a_bt(&g, &self.params.layers[l].w, &mut gm);
+                        gemm_a_bt_ex(&g, &self.params.layers[l].w, &mut gm, self.policy);
                         spmm_max_backward(&gm, &self.argmax[l], &mut self.gh[l - 1]);
-                        gemm_a_bt_acc(
+                        gemm_a_bt_acc_ex(
                             &g,
                             self.params.layers[l].w_self.as_ref().unwrap(),
                             &mut self.gh[l - 1],
+                            self.policy,
                         );
                         self.gm[l - 1] = gm;
                     }
                 }
                 Arch::Gin => {
                     // dW = mᵀ·g ; g_prev = Âᵀ·(g·Wᵀ) + (1+ε)(g·Wᵀ)
-                    gemm_at_b(&self.m[l], &g, &mut self.params.layers[l].dw);
+                    gemm_at_b_ex(&self.m[l], &g, &mut self.params.layers[l].dw, self.policy);
                     if l > 0 {
                         let mut gm = std::mem::replace(&mut self.gm[l - 1], Matrix::zeros(0, 0));
-                        gemm_a_bt(&g, &self.params.layers[l].w, &mut gm);
-                        spmm_tiled(&self.agg_t, &gm, &mut self.gh[l - 1]);
+                        gemm_a_bt_ex(&g, &self.params.layers[l].w, &mut gm, self.policy);
+                        spmm_tiled_ex(&self.agg_t, &gm, &mut self.gh[l - 1], self.policy);
                         let scale = 1.0 + GIN_EPS;
                         for (gp, gv) in self.gh[l - 1].data.iter_mut().zip(&gm.data) {
                             *gp += scale * gv;

@@ -7,8 +7,15 @@
 //! GEMM kernel. γ can be taken from the paper's default (≈0.20 → τ≈0.80) or
 //! measured once per machine by [`calibrate_gamma`]'s microbenchmark, which
 //! is what the paper calls "offline profiling on our testbed".
+//!
+//! γ is a property of the *executing configuration*, not just the machine:
+//! the sparse and dense kernels scale differently with the row-blocked
+//! `threads` knob, so [`calibrate_gamma_ex`] measures both under the same
+//! [`ExecPolicy`] the engine will train with ([`calibrate_gamma`] uses the
+//! process default from `MORPHLING_THREADS`).
 
-use crate::kernels::{gemm::gemm, sparse_feat::spmm_csr_dense};
+use crate::kernels::parallel::ExecPolicy;
+use crate::kernels::{gemm::gemm_ex, sparse_feat::spmm_csr_dense_ex};
 use crate::tensor::{sparsity, CsrMatrix, Matrix};
 use crate::util::proptest::{random_matrix, random_sparse_matrix};
 use crate::util::{timer::bench_fn, Rng};
@@ -92,8 +99,15 @@ pub fn decide(features: &Matrix, policy: SparsityPolicy) -> SparsityDecision {
 /// vs a CSR SpMM **of equal algorithmic work** (the sparse operand has
 /// `1−s = 1/8` density, and its time is scaled to per-FLOP throughput).
 ///
-/// Returns the measured efficiency ratio γ = η_sparse/η_dense.
+/// Returns the measured efficiency ratio γ = η_sparse/η_dense, under the
+/// process-default [`ExecPolicy`].
 pub fn calibrate_gamma(seed: u64) -> f64 {
+    calibrate_gamma_ex(seed, ExecPolicy::from_env())
+}
+
+/// [`calibrate_gamma`] under an explicit execution policy: both kernels are
+/// timed at the same thread count the engine will train with.
+pub fn calibrate_gamma_ex(seed: u64, pol: ExecPolicy) -> f64 {
     let (n, f, h) = (256, 256, 64);
     let density = 0.125f64;
     let mut rng = Rng::new(seed);
@@ -103,8 +117,8 @@ pub fn calibrate_gamma(seed: u64) -> f64 {
     let w = Matrix::from_vec(f, h, random_matrix(&mut rng, f, h));
     let mut y = Matrix::zeros(n, h);
 
-    let (t_dense, _) = bench_fn(2, 5, || gemm(&xd, &w, &mut y));
-    let (t_sparse, _) = bench_fn(2, 5, || spmm_csr_dense(&xs, &w, &mut y));
+    let (t_dense, _) = bench_fn(2, 5, || gemm_ex(&xd, &w, &mut y, pol));
+    let (t_sparse, _) = bench_fn(2, 5, || spmm_csr_dense_ex(&xs, &w, &mut y, pol));
 
     // throughput = work / time; dense work = 2·n·f·h, sparse = 2·nnz·h
     let dense_flops = 2.0 * n as f64 * f as f64 * h as f64;
@@ -159,6 +173,12 @@ mod tests {
     fn calibration_produces_plausible_gamma() {
         let g = calibrate_gamma(7);
         // sparse kernels are slower per FLOP than dense GEMM but not by >100×
+        assert!((0.01..=1.0).contains(&g), "gamma={g}");
+    }
+
+    #[test]
+    fn calibration_threaded_produces_plausible_gamma() {
+        let g = calibrate_gamma_ex(7, ExecPolicy::with_threads(4));
         assert!((0.01..=1.0).contains(&g), "gamma={g}");
     }
 }

@@ -1,29 +1,63 @@
 //! Activation and loss kernels: ReLU and masked softmax cross-entropy,
 //! forward and backward, fused where the paper fuses them (softmax + CE
 //! produce the combined `p − y` gradient directly).
+//!
+//! The elementwise ReLU sweeps fan out over even chunks under an
+//! [`ExecPolicy`] (`_ex` variants) — purely elementwise, so any split is
+//! conflict-free and bitwise-identical. The masked softmax/cross-entropy
+//! stays serial: its loss/accuracy accumulation is a cross-row reduction
+//! whose order a row split would change.
 
+use super::parallel::{par_row_blocks, partition_even, ExecPolicy};
 use crate::tensor::Matrix;
 
 /// In-place ReLU. Returns nothing; the pre-activation sign is recoverable
 /// from the output (`out > 0`), which the backward uses.
 pub fn relu_inplace(m: &mut Matrix) {
-    for v in m.data.iter_mut() {
-        if *v < 0.0 {
-            *v = 0.0;
+    relu_inplace_ex(m, ExecPolicy::from_env());
+}
+
+/// [`relu_inplace`] with an explicit execution policy (even element chunks).
+pub fn relu_inplace_ex(m: &mut Matrix, pol: ExecPolicy) {
+    let body = |_rows: std::ops::Range<usize>, out: &mut [f32]| {
+        for v in out.iter_mut() {
+            if *v < 0.0 {
+                *v = 0.0;
+            }
         }
+    };
+    if pol.is_serial() {
+        body(0..m.data.len(), &mut m.data);
+        return;
     }
+    let blocks = partition_even(m.data.len(), pol.threads);
+    par_row_blocks(&blocks, 1, &mut m.data, body);
 }
 
 /// ReLU backward: `dX = dY ⊙ 1[Y > 0]` where `y` is the *post*-activation
 /// output saved from the forward. Writes into `dy` in place to avoid a
 /// gradient buffer copy (the fusion the paper applies in generated code).
 pub fn relu_backward_inplace(y: &Matrix, dy: &mut Matrix) {
+    relu_backward_inplace_ex(y, dy, ExecPolicy::from_env());
+}
+
+/// [`relu_backward_inplace`] with an explicit execution policy: `dy` splits
+/// into even chunks and each worker reads the matching span of `y`.
+pub fn relu_backward_inplace_ex(y: &Matrix, dy: &mut Matrix, pol: ExecPolicy) {
     assert_eq!(y.data.len(), dy.data.len());
-    for (g, &o) in dy.data.iter_mut().zip(&y.data) {
-        if o <= 0.0 {
-            *g = 0.0;
+    let body = |span: std::ops::Range<usize>, out: &mut [f32]| {
+        for (g, &o) in out.iter_mut().zip(&y.data[span]) {
+            if o <= 0.0 {
+                *g = 0.0;
+            }
         }
+    };
+    if pol.is_serial() {
+        body(0..dy.data.len(), &mut dy.data);
+        return;
     }
+    let blocks = partition_even(dy.data.len(), pol.threads);
+    par_row_blocks(&blocks, 1, &mut dy.data, body);
 }
 
 /// One row of fused log-softmax cross-entropy: returns `(loss, argmax)`
@@ -127,6 +161,27 @@ mod tests {
         let mut dy = Matrix::from_vec(1, 4, vec![10., 10., 10., 10.]);
         relu_backward_inplace(&m, &mut dy);
         assert_eq!(dy.data, vec![0., 10., 0., 10.]);
+    }
+
+    #[test]
+    fn relu_threaded_bitwise_equals_serial() {
+        // 80 × 56 > PAR_MIN_ELEMS: the elementwise fan-out spawns.
+        let (r, c) = (80usize, 56usize);
+        let mut rng = crate::util::Rng::new(13);
+        let data = random_matrix(&mut rng, r, c);
+        for t in [2usize, 3, 8, 64] {
+            let pol = ExecPolicy::with_threads(t);
+            let mut m1 = Matrix::from_vec(r, c, data.clone());
+            let mut m2 = Matrix::from_vec(r, c, data.clone());
+            relu_inplace_ex(&mut m1, ExecPolicy::serial());
+            relu_inplace_ex(&mut m2, pol);
+            assert_eq!(m1.data, m2.data, "relu threads={t}");
+            let mut d1 = Matrix::from_vec(r, c, data.clone());
+            let mut d2 = Matrix::from_vec(r, c, data.clone());
+            relu_backward_inplace_ex(&m1, &mut d1, ExecPolicy::serial());
+            relu_backward_inplace_ex(&m2, &mut d2, pol);
+            assert_eq!(d1.data, d2.data, "relu-bwd threads={t}");
+        }
     }
 
     #[test]

@@ -9,23 +9,31 @@
 //! All use an i-k-j loop order over row-major buffers so the innermost loop
 //! is a contiguous AXPY the compiler vectorizes, with k-blocking for L1/L2
 //! reuse of the `B` panel (the paper's "W loaded into L1 in tiles").
+//!
+//! Multi-threading (the `_ex` variants) partitions **output rows** into
+//! equal contiguous blocks — rows of `C` for `gemm`/`gemm_a_bt`, rows of
+//! `dW = Aᵀ·B` (i.e. columns of `A`) for `gemm_at_b` — so every worker
+//! owns a disjoint slice of the output and per-element accumulation order
+//! is unchanged: results are bitwise-identical for any thread count, and
+//! no atomics are needed (paper §IV-B-c's conflict-free argument).
 
+use super::parallel::{par_row_blocks, partition_even, ExecPolicy};
 use crate::tensor::Matrix;
 
 /// k-panel height: 64 rows of B (64·cols·4 B) targets L2 residency.
 const KBLOCK: usize = 64;
 
-/// `C = A·B`, shapes `(m×k)·(k×n) = m×n`. `c` is overwritten.
-pub fn gemm(a: &Matrix, b: &Matrix, c: &mut Matrix) {
-    assert_eq!(a.cols, b.rows, "inner dim");
-    assert_eq!((c.rows, c.cols), (a.rows, b.cols), "out shape");
-    let (m, k, n) = (a.rows, a.cols, b.cols);
-    c.fill_zero();
+/// Serial body of `C = A·B` over one block of C/A rows; `out` is that
+/// block's slice of `c.data`.
+fn gemm_rows(a: &Matrix, b: &Matrix, rows: std::ops::Range<usize>, out: &mut [f32]) {
+    let (k, n) = (a.cols, b.cols);
+    out.iter_mut().for_each(|v| *v = 0.0);
+    let base = rows.start;
     for k0 in (0..k).step_by(KBLOCK) {
         let k1 = (k0 + KBLOCK).min(k);
-        for i in 0..m {
+        for i in rows.clone() {
             let arow = &a.data[i * k..(i + 1) * k];
-            let crow = &mut c.data[i * n..(i + 1) * n];
+            let crow = &mut out[(i - base) * n..(i - base + 1) * n];
             for kk in k0..k1 {
                 // NOTE: deliberately NO zero-skip branch — this kernel
                 // plays the vendor-BLAS role (§IV-B), which is oblivious
@@ -41,24 +49,97 @@ pub fn gemm(a: &Matrix, b: &Matrix, c: &mut Matrix) {
     }
 }
 
-/// `C = Aᵀ·B`, shapes `(m×k)ᵀ·(m×n) = k×n`. `c` is overwritten.
-///
-/// Streams rows of A and B together, accumulating rank-1 updates into C —
-/// each C row is owned by one k index, so (in the parallel analogue) the
-/// accumulation is conflict-free (paper §IV-B-c backward).
-pub fn gemm_at_b(a: &Matrix, b: &Matrix, c: &mut Matrix) {
-    assert_eq!(a.rows, b.rows, "outer dim");
-    assert_eq!((c.rows, c.cols), (a.cols, b.cols), "out shape");
+/// `C = A·B`, shapes `(m×k)·(k×n) = m×n`. `c` is overwritten. Runs under
+/// the process-default [`ExecPolicy`] (`MORPHLING_THREADS`).
+pub fn gemm(a: &Matrix, b: &Matrix, c: &mut Matrix) {
+    gemm_ex(a, b, c, ExecPolicy::from_env());
+}
+
+/// [`gemm`] with an explicit execution policy (row-blocked over `m`).
+pub fn gemm_ex(a: &Matrix, b: &Matrix, c: &mut Matrix, pol: ExecPolicy) {
+    assert_eq!(a.cols, b.rows, "inner dim");
+    assert_eq!((c.rows, c.cols), (a.rows, b.cols), "out shape");
+    let m = a.rows;
+    if pol.is_serial() {
+        gemm_rows(a, b, 0..m, &mut c.data);
+        return;
+    }
+    let blocks = partition_even(m, pol.threads);
+    par_row_blocks(&blocks, b.cols, &mut c.data, |rows, out| {
+        gemm_rows(a, b, rows, out)
+    });
+}
+
+/// Serial body of `C = Aᵀ·B` over one block of C rows (= columns of A);
+/// `out` is that block's slice of `c.data`. Streams all m rows of A/B but
+/// touches only columns `ks` of A, so accumulation per output element
+/// follows the same i-ascending order as the full serial kernel.
+fn gemm_at_b_cols(a: &Matrix, b: &Matrix, ks: std::ops::Range<usize>, out: &mut [f32]) {
     let (m, k, n) = (a.rows, a.cols, b.cols);
-    c.fill_zero();
+    out.iter_mut().for_each(|v| *v = 0.0);
+    let base = ks.start;
     for i in 0..m {
         let arow = &a.data[i * k..(i + 1) * k];
         let brow = &b.data[i * n..(i + 1) * n];
-        for kk in 0..k {
+        for kk in ks.clone() {
             let av = arow[kk];
-            let crow = &mut c.data[kk * n..(kk + 1) * n];
+            let crow = &mut out[(kk - base) * n..(kk - base + 1) * n];
             for j in 0..n {
                 crow[j] += av * brow[j];
+            }
+        }
+    }
+}
+
+/// `C = Aᵀ·B`, shapes `(m×k)ᵀ·(m×n) = k×n`. `c` is overwritten.
+///
+/// Streams rows of A and B together, accumulating rank-1 updates into C —
+/// each C row is owned by one k index, so the parallel variant partitions
+/// over k and the accumulation is conflict-free (paper §IV-B-c backward).
+pub fn gemm_at_b(a: &Matrix, b: &Matrix, c: &mut Matrix) {
+    gemm_at_b_ex(a, b, c, ExecPolicy::from_env());
+}
+
+/// [`gemm_at_b`] with an explicit execution policy (row-blocked over the
+/// `k` output rows — the conflict-free choice; partitioning over `m` would
+/// need atomics).
+pub fn gemm_at_b_ex(a: &Matrix, b: &Matrix, c: &mut Matrix, pol: ExecPolicy) {
+    assert_eq!(a.rows, b.rows, "outer dim");
+    assert_eq!((c.rows, c.cols), (a.cols, b.cols), "out shape");
+    let k = a.cols;
+    if pol.is_serial() {
+        gemm_at_b_cols(a, b, 0..k, &mut c.data);
+        return;
+    }
+    let blocks = partition_even(k, pol.threads);
+    par_row_blocks(&blocks, b.cols, &mut c.data, |ks, out| {
+        gemm_at_b_cols(a, b, ks, out)
+    });
+}
+
+/// Serial body of `C (+)= A·Bᵀ` over one block of C/A rows.
+fn gemm_a_bt_rows(
+    a: &Matrix,
+    b: &Matrix,
+    rows: std::ops::Range<usize>,
+    out: &mut [f32],
+    accumulate: bool,
+) {
+    let (k, n) = (a.cols, b.rows);
+    let base = rows.start;
+    for i in rows {
+        let arow = &a.data[i * k..(i + 1) * k];
+        let crow = &mut out[(i - base) * n..(i - base + 1) * n];
+        for j in 0..n {
+            let brow = &b.data[j * k..(j + 1) * k];
+            let mut acc = 0.0f32;
+            for kk in 0..k {
+                acc += arow[kk] * brow[kk];
+            }
+            if accumulate {
+                crow[j] += acc;
+            } else {
+                crow[j] = acc;
             }
         }
     }
@@ -68,55 +149,73 @@ pub fn gemm_at_b(a: &Matrix, b: &Matrix, c: &mut Matrix) {
 ///
 /// Inner loop is a dot product over contiguous rows of both operands.
 pub fn gemm_a_bt(a: &Matrix, b: &Matrix, c: &mut Matrix) {
+    gemm_a_bt_ex(a, b, c, ExecPolicy::from_env());
+}
+
+/// [`gemm_a_bt`] with an explicit execution policy (row-blocked over `m`).
+pub fn gemm_a_bt_ex(a: &Matrix, b: &Matrix, c: &mut Matrix, pol: ExecPolicy) {
     assert_eq!(a.cols, b.cols, "inner dim");
     assert_eq!((c.rows, c.cols), (a.rows, b.rows), "out shape");
-    let (m, k, n) = (a.rows, a.cols, b.rows);
-    for i in 0..m {
-        let arow = &a.data[i * k..(i + 1) * k];
-        let crow = &mut c.data[i * n..(i + 1) * n];
-        for j in 0..n {
-            let brow = &b.data[j * k..(j + 1) * k];
-            let mut acc = 0.0f32;
-            for kk in 0..k {
-                acc += arow[kk] * brow[kk];
-            }
-            crow[j] = acc;
-        }
+    let m = a.rows;
+    if pol.is_serial() {
+        gemm_a_bt_rows(a, b, 0..m, &mut c.data, false);
+        return;
     }
+    let blocks = partition_even(m, pol.threads);
+    par_row_blocks(&blocks, b.rows, &mut c.data, |rows, out| {
+        gemm_a_bt_rows(a, b, rows, out, false)
+    });
 }
 
 /// `C += A·Bᵀ` — accumulating variant of [`gemm_a_bt`], used where two
 /// gradient paths sum into one buffer (e.g. SAGE's `gz·Wᵀ + g·W_selfᵀ`).
 pub fn gemm_a_bt_acc(a: &Matrix, b: &Matrix, c: &mut Matrix) {
+    gemm_a_bt_acc_ex(a, b, c, ExecPolicy::from_env());
+}
+
+/// [`gemm_a_bt_acc`] with an explicit execution policy.
+pub fn gemm_a_bt_acc_ex(a: &Matrix, b: &Matrix, c: &mut Matrix, pol: ExecPolicy) {
     assert_eq!(a.cols, b.cols, "inner dim");
     assert_eq!((c.rows, c.cols), (a.rows, b.rows), "out shape");
-    let (m, k, n) = (a.rows, a.cols, b.rows);
-    for i in 0..m {
-        let arow = &a.data[i * k..(i + 1) * k];
-        let crow = &mut c.data[i * n..(i + 1) * n];
-        for j in 0..n {
-            let brow = &b.data[j * k..(j + 1) * k];
-            let mut acc = 0.0f32;
-            for kk in 0..k {
-                acc += arow[kk] * brow[kk];
-            }
-            crow[j] += acc;
-        }
+    let m = a.rows;
+    if pol.is_serial() {
+        gemm_a_bt_rows(a, b, 0..m, &mut c.data, true);
+        return;
     }
+    let blocks = partition_even(m, pol.threads);
+    par_row_blocks(&blocks, b.rows, &mut c.data, |rows, out| {
+        gemm_a_bt_rows(a, b, rows, out, true)
+    });
 }
 
 /// Add a broadcast row bias in place: `M[i,:] += bias`.
 pub fn add_bias(m: &mut Matrix, bias: &[f32]) {
-    assert_eq!(m.cols, bias.len());
-    for i in 0..m.rows {
-        let row = &mut m.data[i * bias.len()..(i + 1) * bias.len()];
-        for (r, b) in row.iter_mut().zip(bias) {
-            *r += b;
-        }
-    }
+    add_bias_ex(m, bias, ExecPolicy::from_env());
 }
 
-/// Column-sum of a matrix (bias gradient).
+/// [`add_bias`] with an explicit execution policy (row-blocked).
+pub fn add_bias_ex(m: &mut Matrix, bias: &[f32], pol: ExecPolicy) {
+    assert_eq!(m.cols, bias.len());
+    let rows = m.rows;
+    let apply = |_rows: std::ops::Range<usize>, out: &mut [f32]| {
+        for chunk in out.chunks_mut(bias.len()) {
+            for (r, b) in chunk.iter_mut().zip(bias) {
+                *r += b;
+            }
+        }
+    };
+    if pol.is_serial() {
+        apply(0..rows, &mut m.data);
+        return;
+    }
+    let blocks = partition_even(rows, pol.threads);
+    par_row_blocks(&blocks, bias.len(), &mut m.data, apply);
+}
+
+/// Column-sum of a matrix (bias gradient). Stays serial: it is a reduction
+/// into one `cols`-length vector, and splitting rows across workers would
+/// change the accumulation order (breaking bitwise determinism) for a
+/// kernel that is a vanishing fraction of epoch time.
 pub fn col_sum(m: &Matrix, out: &mut [f32]) {
     assert_eq!(m.cols, out.len());
     out.iter_mut().for_each(|v| *v = 0.0);
@@ -171,6 +270,39 @@ mod tests {
     }
 
     #[test]
+    fn prop_threaded_gemm_bitwise_equals_serial() {
+        check(0x9c, 12, |rng| {
+            // m·n and k·n ≥ PAR_MIN_ELEMS so both row- and k-partitioned
+            // fan-outs actually spawn workers.
+            let m = 100 + rng.below(60);
+            let k = 96 + rng.below(40);
+            let n = 44 + rng.below(24);
+            let a = Matrix::from_vec(m, k, random_matrix(rng, m, k));
+            let b = Matrix::from_vec(k, n, random_matrix(rng, k, n));
+            let bt = b.transpose(); // n×k operand for a_bt
+            let g = Matrix::from_vec(m, n, random_matrix(rng, m, n));
+            let mut c1 = Matrix::zeros(m, n);
+            let mut w1 = Matrix::zeros(k, n);
+            let mut d1 = Matrix::zeros(m, n);
+            gemm_ex(&a, &b, &mut c1, ExecPolicy::serial());
+            gemm_at_b_ex(&a, &g, &mut w1, ExecPolicy::serial());
+            gemm_a_bt_ex(&a, &bt, &mut d1, ExecPolicy::serial());
+            for t in [2usize, 3, 8, m + 7] {
+                let pol = ExecPolicy::with_threads(t);
+                let mut c2 = Matrix::zeros(m, n);
+                let mut w2 = Matrix::zeros(k, n);
+                let mut d2 = Matrix::zeros(m, n);
+                gemm_ex(&a, &b, &mut c2, pol);
+                gemm_at_b_ex(&a, &g, &mut w2, pol);
+                gemm_a_bt_ex(&a, &bt, &mut d2, pol);
+                assert_eq!(c1.data, c2.data, "gemm threads={t}");
+                assert_eq!(w1.data, w2.data, "gemm_at_b threads={t}");
+                assert_eq!(d1.data, d2.data, "gemm_a_bt threads={t}");
+            }
+        });
+    }
+
+    #[test]
     fn prop_at_b_matches_transpose_then_gemm() {
         check(0x7f, 20, |rng| {
             let m = 1 + rng.below(30);
@@ -199,6 +331,20 @@ mod tests {
     }
 
     #[test]
+    fn accumulating_a_bt_threaded_matches_serial() {
+        // 110 × 48 output > PAR_MIN_ELEMS: the accumulate path spawns.
+        let mut rng = crate::util::Rng::new(77);
+        let a = Matrix::from_vec(110, 20, random_matrix(&mut rng, 110, 20));
+        let b = Matrix::from_vec(48, 20, random_matrix(&mut rng, 48, 20));
+        let seed = random_matrix(&mut rng, 110, 48);
+        let mut c1 = Matrix::from_vec(110, 48, seed.clone());
+        let mut c2 = Matrix::from_vec(110, 48, seed);
+        gemm_a_bt_acc_ex(&a, &b, &mut c1, ExecPolicy::serial());
+        gemm_a_bt_acc_ex(&a, &b, &mut c2, ExecPolicy::with_threads(4));
+        assert_eq!(c1.data, c2.data);
+    }
+
+    #[test]
     fn bias_and_colsum() {
         let mut m = Matrix::from_vec(2, 3, vec![1., 2., 3., 4., 5., 6.]);
         add_bias(&mut m, &[10., 20., 30.]);
@@ -206,6 +352,19 @@ mod tests {
         let mut s = vec![0.0; 3];
         col_sum(&m, &mut s);
         assert_eq!(s, vec![25., 47., 69.]);
+    }
+
+    #[test]
+    fn bias_threaded_matches_serial() {
+        // 80 × 64 > PAR_MIN_ELEMS: the row-chunked bias fan-out spawns.
+        let mut rng = crate::util::Rng::new(55);
+        let data = random_matrix(&mut rng, 80, 64);
+        let bias: Vec<f32> = (0..64).map(|i| i as f32 * 0.5).collect();
+        let mut m1 = Matrix::from_vec(80, 64, data.clone());
+        let mut m2 = Matrix::from_vec(80, 64, data);
+        add_bias_ex(&mut m1, &bias, ExecPolicy::serial());
+        add_bias_ex(&mut m2, &bias, ExecPolicy::with_threads(5));
+        assert_eq!(m1.data, m2.data);
     }
 
     #[test]

@@ -12,11 +12,24 @@
 //!   backward.
 //! - [`update`] — fused vectorized SGD/Adam/AdamW parameter updates (paper
 //!   §IV-E2.4 "Vectorized Optimizer").
+//! - [`parallel`] — the `threads` execution knob ([`parallel::ExecPolicy`])
+//!   and the row-blocked `std::thread` fan-out behind the kernels' `_ex`
+//!   entry points — the native analogue of the OpenMP `parallel for` the
+//!   paper synthesizes for CPU targets (§IV-C).
 //!
-//! All kernels are single-threaded on this testbed (1 core); the tiling /
-//! prefetch / conflict-freedom structure is what the paper's claims are
-//! about and is preserved (DESIGN.md §2).
+//! Threading invariants (pinned by tests/threads.rs):
+//! - every parallel kernel partitions its **output rows** into contiguous
+//!   blocks each owned by one worker — no atomics, including the backward
+//!   pass, which runs the forward kernels on the transposed CSR / CSC
+//!   views (the paper's conflict-free CPU strategy);
+//! - per-row accumulation order is unchanged, so results are
+//!   **bitwise-identical** across all thread counts;
+//! - `threads = 1` (the default without `MORPHLING_THREADS`) takes the
+//!   serial code path, preserving the seed behavior exactly; outputs below
+//!   [`parallel::PAR_MIN_ELEMS`] skip the spawn even at higher thread
+//!   counts (spawn/join would dwarf the work).
 
+pub mod parallel;
 pub mod spmm;
 pub mod gemm;
 pub mod sparse_feat;

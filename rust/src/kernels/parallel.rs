@@ -1,0 +1,324 @@
+//! Row-blocked multi-thread execution — the native backend's analogue of the
+//! OpenMP `parallel for` the paper's synthesizer emits for CPU targets
+//! (§IV-C).
+//!
+//! The design mirrors the paper's threading strategy exactly:
+//!
+//! - **Ownership, not atomics.** Every parallel kernel partitions its
+//!   *output rows* into contiguous blocks and gives each worker exclusive
+//!   ownership of one block. The backward pass runs the forward kernel on
+//!   the transposed CSR, so gradients are also produced row-owned — no
+//!   atomics anywhere, matching the paper's conflict-free CPU backward.
+//! - **Edge-balanced blocks.** Power-law graphs put most edges on a few
+//!   hub rows, so splitting rows evenly would leave the hub's worker as a
+//!   straggler. [`partition_rows_balanced`] splits by *edge count* (plus a
+//!   per-row constant), the paper's degree-aware work partitioning.
+//! - **Bitwise determinism.** A block's output is a pure function of the
+//!   kernel inputs and per-row accumulation order is unchanged, so results
+//!   are bitwise-identical for every thread count (tests/threads.rs pins
+//!   this property).
+//!
+//! The knob is [`ExecPolicy`]: `threads = 1` routes through the serial code
+//! path (no scope, no spawn), higher counts fan out over
+//! [`std::thread::scope`] workers. The process-wide default comes from the
+//! `MORPHLING_THREADS` environment variable (read once, cached).
+
+use std::ops::Range;
+use std::sync::OnceLock;
+
+/// Parse `MORPHLING_THREADS` once per process.
+fn env_threads() -> usize {
+    static CACHE: OnceLock<usize> = OnceLock::new();
+    *CACHE.get_or_init(|| {
+        std::env::var("MORPHLING_THREADS")
+            .ok()
+            .and_then(|v| v.trim().parse::<usize>().ok())
+            .filter(|&t| t >= 1)
+            .unwrap_or(1)
+    })
+}
+
+/// Execution knob threaded through the engines, baselines, and kernels.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ExecPolicy {
+    /// Worker count for row-blocked kernels; `1` = the serial code path.
+    pub threads: usize,
+}
+
+impl ExecPolicy {
+    /// Single-threaded execution (the seed behavior).
+    pub fn serial() -> ExecPolicy {
+        ExecPolicy { threads: 1 }
+    }
+
+    /// Explicit worker count (clamped to at least 1).
+    pub fn with_threads(threads: usize) -> ExecPolicy {
+        ExecPolicy {
+            threads: threads.max(1),
+        }
+    }
+
+    /// Process default: `MORPHLING_THREADS` env var, else serial.
+    pub fn from_env() -> ExecPolicy {
+        ExecPolicy {
+            threads: env_threads(),
+        }
+    }
+
+    /// True when the kernel should take the serial code path.
+    pub fn is_serial(&self) -> bool {
+        self.threads <= 1
+    }
+}
+
+impl Default for ExecPolicy {
+    fn default() -> Self {
+        ExecPolicy::from_env()
+    }
+}
+
+/// Split `0..rows` into at most `threads` equal-size contiguous blocks
+/// (uniform-cost work: dense GEMM rows, elementwise sweeps). Returns fewer
+/// blocks than `threads` only when `rows < threads`; no block is empty.
+pub fn partition_even(rows: usize, threads: usize) -> Vec<Range<usize>> {
+    if rows == 0 {
+        return Vec::new();
+    }
+    let nb = threads.max(1).min(rows);
+    let base = rows / nb;
+    let rem = rows % nb;
+    let mut blocks = Vec::with_capacity(nb);
+    let mut start = 0usize;
+    for i in 0..nb {
+        let len = base + usize::from(i < rem);
+        blocks.push(start..start + len);
+        start += len;
+    }
+    blocks
+}
+
+/// Split CSR target rows into at most `threads` contiguous blocks balanced
+/// by **edge count** (cost model: `deg(u) + 1` per row, so empty rows still
+/// carry weight and skewed degree distributions don't starve workers).
+///
+/// Invariants: blocks are contiguous, cover `0..rows`, and are never empty;
+/// the block count is `min(threads, rows)`. The greedy cut recomputes the
+/// per-block target from the *remaining* work, so an early hub block does
+/// not unbalance the tail.
+pub fn partition_rows_balanced(row_ptr: &[u32], threads: usize) -> Vec<Range<usize>> {
+    let rows = row_ptr.len().saturating_sub(1);
+    if rows == 0 {
+        return Vec::new();
+    }
+    let nb = threads.max(1).min(rows);
+    if nb == 1 {
+        return vec![0..rows];
+    }
+    let total = (row_ptr[rows] - row_ptr[0]) as u64 + rows as u64;
+    let mut blocks = Vec::with_capacity(nb);
+    let mut start = 0usize;
+    let mut acc = 0u64;
+    let mut assigned = 0u64;
+    for u in 0..rows {
+        acc += (row_ptr[u + 1] - row_ptr[u]) as u64 + 1;
+        let blocks_left = nb - blocks.len();
+        let rows_left = rows - (u + 1);
+        if blocks_left > 1 {
+            // Adaptive target over the remaining work; force a cut when the
+            // remaining blocks need every remaining row to stay non-empty.
+            let target = ((total - assigned) / blocks_left as u64).max(1);
+            if acc >= target || rows_left == blocks_left - 1 {
+                blocks.push(start..u + 1);
+                assigned += acc;
+                acc = 0;
+                start = u + 1;
+            }
+        }
+    }
+    blocks.push(start..rows);
+    blocks
+}
+
+/// Minimum output elements before a fan-out actually spawns workers.
+/// Spawn + join of scoped threads costs tens of microseconds; below this
+/// floor (16 KB of f32) the kernel runs its blocks sequentially instead —
+/// same blocks, same output, zero thread overhead. Bitwise results are
+/// unaffected (block outputs are independent of where they execute).
+pub const PAR_MIN_ELEMS: usize = 4096;
+
+/// Split `out` at element offsets `bounds` (`bounds.len() == nblocks + 1`,
+/// ascending, first 0, last `out.len()`) and run `body(block_idx, slice)`
+/// for every block: block 0 on the calling thread, the rest on scoped
+/// workers. Each slice is exclusively owned, so no synchronization is
+/// needed beyond the scope join. Outputs smaller than [`PAR_MIN_ELEMS`]
+/// run all blocks on the calling thread.
+pub fn scoped_block_apply<F>(out: &mut [f32], bounds: &[usize], body: F)
+where
+    F: Fn(usize, &mut [f32]) + Sync,
+{
+    let nb = bounds.len().saturating_sub(1);
+    if nb == 0 {
+        return;
+    }
+    debug_assert_eq!(bounds[0], 0);
+    debug_assert_eq!(bounds[nb], out.len());
+    if nb == 1 {
+        body(0, out);
+        return;
+    }
+    let mut slices = Vec::with_capacity(nb);
+    let mut rest: &mut [f32] = out;
+    for i in 0..nb {
+        let (head, tail) = std::mem::take(&mut rest).split_at_mut(bounds[i + 1] - bounds[i]);
+        slices.push(head);
+        rest = tail;
+    }
+    if bounds[nb] < PAR_MIN_ELEMS {
+        for (i, slice) in slices.into_iter().enumerate() {
+            body(i, slice);
+        }
+        return;
+    }
+    let body = &body;
+    std::thread::scope(|s| {
+        let mut iter = slices.into_iter().enumerate();
+        let (i0, s0) = iter.next().unwrap();
+        for (i, slice) in iter {
+            s.spawn(move || body(i, slice));
+        }
+        body(i0, s0);
+    });
+}
+
+/// Row-major fan-out: give each block of `blocks` (contiguous from row 0)
+/// its `rows × stride` slice of `out` and run `body(rows, slice)` per block
+/// — block 0 on the calling thread, the rest on scoped workers.
+pub fn par_row_blocks<F>(blocks: &[Range<usize>], stride: usize, out: &mut [f32], body: F)
+where
+    F: Fn(Range<usize>, &mut [f32]) + Sync,
+{
+    let mut bounds = Vec::with_capacity(blocks.len() + 1);
+    bounds.push(0usize);
+    for b in blocks {
+        bounds.push(b.end * stride);
+    }
+    scoped_block_apply(out, &bounds, |i, slice| body(blocks[i].clone(), slice));
+}
+
+/// Edge-indexed fan-out: for output rows stored in CSR **edge** order
+/// (per-edge message tensors), block `b` of node rows owns the span
+/// `row_ptr[b.start]..row_ptr[b.end]` (× `stride`) of `out`. Same
+/// ownership discipline as [`par_row_blocks`], different prefix geometry.
+pub fn par_edge_blocks<F>(
+    row_ptr: &[u32],
+    blocks: &[Range<usize>],
+    stride: usize,
+    out: &mut [f32],
+    body: F,
+) where
+    F: Fn(Range<usize>, &mut [f32]) + Sync,
+{
+    let mut bounds = Vec::with_capacity(blocks.len() + 1);
+    bounds.push(0usize);
+    for b in blocks {
+        bounds.push(row_ptr[b.end] as usize * stride);
+    }
+    scoped_block_apply(out, &bounds, |i, slice| body(blocks[i].clone(), slice));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn check_cover(blocks: &[Range<usize>], rows: usize) {
+        if rows == 0 {
+            assert!(blocks.is_empty());
+            return;
+        }
+        assert_eq!(blocks[0].start, 0);
+        assert_eq!(blocks.last().unwrap().end, rows);
+        for w in blocks.windows(2) {
+            assert_eq!(w[0].end, w[1].start, "blocks must be contiguous");
+        }
+        for b in blocks {
+            assert!(b.start < b.end, "empty block {b:?}");
+        }
+    }
+
+    #[test]
+    fn even_partition_shapes() {
+        check_cover(&partition_even(10, 3), 10);
+        check_cover(&partition_even(3, 8), 3);
+        assert_eq!(partition_even(3, 8).len(), 3);
+        assert_eq!(partition_even(0, 4), Vec::<Range<usize>>::new());
+        let b = partition_even(10, 3);
+        let sizes: Vec<usize> = b.iter().map(|r| r.end - r.start).collect();
+        assert_eq!(sizes, vec![4, 3, 3]);
+    }
+
+    #[test]
+    fn balanced_partition_covers_and_fills() {
+        // uniform 2-edge rows
+        let rows = 9usize;
+        let row_ptr: Vec<u32> = (0..=rows as u32).map(|u| u * 2).collect();
+        for t in [1, 2, 3, 4, 8, 16] {
+            let blocks = partition_rows_balanced(&row_ptr, t);
+            check_cover(&blocks, rows);
+            assert_eq!(blocks.len(), t.min(rows));
+        }
+        assert!(partition_rows_balanced(&[0], 4).is_empty());
+    }
+
+    #[test]
+    fn balanced_partition_isolates_hub() {
+        // row 0 carries 90 of 99 edges: it should get a block of its own.
+        let mut row_ptr = vec![0u32, 90];
+        for u in 0..9u32 {
+            row_ptr.push(91 + u);
+        }
+        let blocks = partition_rows_balanced(&row_ptr, 4);
+        check_cover(&blocks, 10);
+        assert_eq!(blocks.len(), 4);
+        assert_eq!(blocks[0], 0..1, "hub row should form its own block");
+    }
+
+    #[test]
+    fn scoped_apply_writes_every_block() {
+        // Below PAR_MIN_ELEMS: the sequential fallback path.
+        let mut out = vec![0.0f32; 12];
+        let blocks = partition_even(4, 3);
+        par_row_blocks(&blocks, 3, &mut out, |rows, slice| {
+            for (i, v) in slice.iter_mut().enumerate() {
+                *v = (rows.start * 3 + i) as f32;
+            }
+        });
+        let expect: Vec<f32> = (0..12).map(|i| i as f32).collect();
+        assert_eq!(out, expect);
+    }
+
+    #[test]
+    fn scoped_apply_spawns_above_threshold() {
+        // Above PAR_MIN_ELEMS: real scoped workers, same contract.
+        let rows = 100usize;
+        let stride = PAR_MIN_ELEMS / 16; // 100 × 256 = 25 600 elements
+        let mut out = vec![0.0f32; rows * stride];
+        let blocks = partition_even(rows, 5);
+        par_row_blocks(&blocks, stride, &mut out, |range, slice| {
+            for (i, v) in slice.iter_mut().enumerate() {
+                *v = (range.start * stride + i) as f32;
+            }
+        });
+        for (i, v) in out.iter().enumerate() {
+            assert_eq!(*v, i as f32);
+        }
+    }
+
+    #[test]
+    fn env_policy_defaults_to_serial() {
+        // The env var is not set under `cargo test` unless the caller
+        // exported it; either way the policy must be at least 1 thread.
+        assert!(ExecPolicy::from_env().threads >= 1);
+        assert!(ExecPolicy::serial().is_serial());
+        assert_eq!(ExecPolicy::with_threads(0).threads, 1);
+    }
+}

@@ -11,18 +11,23 @@
 //! - backward `dW = X_cscᵀ · G` — iterates feature **columns** of the CSC
 //!   view so each `dW[c,:]` row has a single owner: conflict-free by
 //!   construction, no atomics (paper's thread-local accumulation argument).
+//!
+//! Both fan out row-blocked under an [`ExecPolicy`]: the forward partitions
+//! sparse rows by nnz (so bag-of-words skew doesn't starve workers), the
+//! backward partitions CSC columns by nnz — in each case the worker owns
+//! its output rows exclusively and results stay bitwise-identical to the
+//! serial kernel.
 
+use super::parallel::{par_row_blocks, partition_rows_balanced, ExecPolicy};
 use crate::tensor::{CscMatrix, CsrMatrix, Matrix};
 
-/// `Y = X_csr · W` where `X` is `n×f` sparse and `W` is `f×h` dense.
-/// Work is `O(nnz(X) · h)` instead of the dense `O(n·f·h)`.
-pub fn spmm_csr_dense(x: &CsrMatrix, w: &Matrix, y: &mut Matrix) {
-    assert_eq!(x.cols, w.rows, "inner dim");
-    assert_eq!((y.rows, y.cols), (x.rows, w.cols), "out shape");
+/// Serial body of the CSR forward over one block of sparse rows.
+fn csr_dense_rows(x: &CsrMatrix, w: &Matrix, rows: std::ops::Range<usize>, out: &mut [f32]) {
     let h = w.cols;
-    y.fill_zero();
-    for r in 0..x.rows {
-        let yrow = &mut y.data[r * h..(r + 1) * h];
+    out.iter_mut().for_each(|v| *v = 0.0);
+    let base = rows.start;
+    for r in rows {
+        let yrow = &mut out[(r - base) * h..(r - base + 1) * h];
         for e in x.row_ptr[r] as usize..x.row_ptr[r + 1] as usize {
             let c = x.col_idx[e] as usize;
             let v = x.vals[e];
@@ -34,16 +39,34 @@ pub fn spmm_csr_dense(x: &CsrMatrix, w: &Matrix, y: &mut Matrix) {
     }
 }
 
-/// `dW = Xᵀ · G` using the CSC view of `X`: `X` is `n×f`, `G` is `n×h`,
-/// `dw` is `f×h`. Each output row `dw[c,:]` is owned by exactly one column
-/// iteration — conflict-free accumulation.
-pub fn spmm_csc_t_dense(x: &CscMatrix, g: &Matrix, dw: &mut Matrix) {
-    assert_eq!(x.rows, g.rows, "outer dim");
-    assert_eq!((dw.rows, dw.cols), (x.cols, g.cols), "out shape");
+/// `Y = X_csr · W` where `X` is `n×f` sparse and `W` is `f×h` dense.
+/// Work is `O(nnz(X) · h)` instead of the dense `O(n·f·h)`.
+pub fn spmm_csr_dense(x: &CsrMatrix, w: &Matrix, y: &mut Matrix) {
+    spmm_csr_dense_ex(x, w, y, ExecPolicy::from_env());
+}
+
+/// [`spmm_csr_dense`] with an explicit execution policy (rows partitioned
+/// by nnz; each worker owns its slice of `y`).
+pub fn spmm_csr_dense_ex(x: &CsrMatrix, w: &Matrix, y: &mut Matrix, pol: ExecPolicy) {
+    assert_eq!(x.cols, w.rows, "inner dim");
+    assert_eq!((y.rows, y.cols), (x.rows, w.cols), "out shape");
+    if pol.is_serial() {
+        csr_dense_rows(x, w, 0..x.rows, &mut y.data);
+        return;
+    }
+    let blocks = partition_rows_balanced(&x.row_ptr, pol.threads);
+    par_row_blocks(&blocks, w.cols, &mut y.data, |rows, out| {
+        csr_dense_rows(x, w, rows, out)
+    });
+}
+
+/// Serial body of the CSC backward over one block of feature columns.
+fn csc_t_dense_cols(x: &CscMatrix, g: &Matrix, cols: std::ops::Range<usize>, out: &mut [f32]) {
     let h = g.cols;
-    dw.fill_zero();
-    for c in 0..x.cols {
-        let dwrow = &mut dw.data[c * h..(c + 1) * h];
+    out.iter_mut().for_each(|v| *v = 0.0);
+    let base = cols.start;
+    for c in cols {
+        let dwrow = &mut out[(c - base) * h..(c - base + 1) * h];
         for e in x.col_ptr[c] as usize..x.col_ptr[c + 1] as usize {
             let r = x.row_idx[e] as usize;
             let v = x.vals[e];
@@ -53,6 +76,29 @@ pub fn spmm_csc_t_dense(x: &CscMatrix, g: &Matrix, dw: &mut Matrix) {
             }
         }
     }
+}
+
+/// `dW = Xᵀ · G` using the CSC view of `X`: `X` is `n×f`, `G` is `n×h`,
+/// `dw` is `f×h`. Each output row `dw[c,:]` is owned by exactly one column
+/// iteration — conflict-free accumulation, which is exactly what makes the
+/// column-blocked fan-out atomics-free.
+pub fn spmm_csc_t_dense(x: &CscMatrix, g: &Matrix, dw: &mut Matrix) {
+    spmm_csc_t_dense_ex(x, g, dw, ExecPolicy::from_env());
+}
+
+/// [`spmm_csc_t_dense`] with an explicit execution policy (columns
+/// partitioned by nnz; each worker owns its slice of `dw`).
+pub fn spmm_csc_t_dense_ex(x: &CscMatrix, g: &Matrix, dw: &mut Matrix, pol: ExecPolicy) {
+    assert_eq!(x.rows, g.rows, "outer dim");
+    assert_eq!((dw.rows, dw.cols), (x.cols, g.cols), "out shape");
+    if pol.is_serial() {
+        csc_t_dense_cols(x, g, 0..x.cols, &mut dw.data);
+        return;
+    }
+    let blocks = partition_rows_balanced(&x.col_ptr, pol.threads);
+    par_row_blocks(&blocks, g.cols, &mut dw.data, |cols, out| {
+        csc_t_dense_cols(x, g, cols, out)
+    });
 }
 
 #[cfg(test)]
@@ -92,6 +138,34 @@ mod tests {
             spmm_csc_t_dense(&x, &g, &mut dw_sparse);
             gemm_at_b(&xd, &g, &mut dw_dense);
             assert!(dw_sparse.max_abs_diff(&dw_dense) < 1e-4);
+        });
+    }
+
+    #[test]
+    fn prop_threaded_bitwise_equals_serial() {
+        check(0x6a, 10, |rng| {
+            // n·h and f·h ≥ PAR_MIN_ELEMS so both fan-outs spawn workers.
+            let n = 110 + rng.below(60);
+            let f = 110 + rng.below(60);
+            let h = 40 + rng.below(16);
+            let xd = Matrix::from_vec(n, f, random_sparse_matrix(rng, n, f, 0.9));
+            let w = Matrix::from_vec(f, h, random_matrix(rng, f, h));
+            let g = Matrix::from_vec(n, h, random_matrix(rng, n, h));
+            let csr = CsrMatrix::from_dense(&xd);
+            let csc = CscMatrix::from_dense(&xd);
+            let mut y1 = Matrix::zeros(n, h);
+            let mut dw1 = Matrix::zeros(f, h);
+            spmm_csr_dense_ex(&csr, &w, &mut y1, ExecPolicy::serial());
+            spmm_csc_t_dense_ex(&csc, &g, &mut dw1, ExecPolicy::serial());
+            for t in [2usize, 3, 8, n + f] {
+                let pol = ExecPolicy::with_threads(t);
+                let mut y2 = Matrix::zeros(n, h);
+                let mut dw2 = Matrix::zeros(f, h);
+                spmm_csr_dense_ex(&csr, &w, &mut y2, pol);
+                spmm_csc_t_dense_ex(&csc, &g, &mut dw2, pol);
+                assert_eq!(y1.data, y2.data, "csr threads={t}");
+                assert_eq!(dw1.data, dw2.data, "csc threads={t}");
+            }
         });
     }
 

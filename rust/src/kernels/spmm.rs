@@ -12,14 +12,24 @@
 //!    irregular DRAM latency ([`PREFETCH_DIST`] = 8), degree-guarded to
 //!    avoid cache pollution on low-degree nodes.
 //!
+//! Multi-threading (the paper's OpenMP target, §IV-C): [`spmm_tiled_ex`]
+//! partitions target rows into edge-balanced contiguous blocks
+//! ([`partition_rows_balanced`]) and fans them out over scoped workers.
+//! Each worker owns its output rows exclusively — no atomics — and per-row
+//! accumulation order is unchanged, so every thread count produces
+//! bitwise-identical output. `threads = 1` takes the serial code path.
+//!
 //! The backward pass offers both of the paper's strategies:
 //! - CPU path: run the forward kernel on the **transposed** graph
-//!   (`spmm` with `g.transpose()` — conflict-free, extra index memory);
+//!   (`spmm` with `g.transpose()`) — conflict-free under threading because
+//!   each worker still owns disjoint output rows, at the cost of the extra
+//!   index memory;
 //! - GPU path analogue: [`spmm_implicit_transpose`], which streams the
 //!   original CSR and scatters into `Y[v]` (the paper's `atomicAdd`
-//!   strategy; single-threaded here so plain `+=`), trading contention for
-//!   zero extra structure memory.
+//!   strategy). Scatter targets are not row-owned, so this variant stays
+//!   serial on the CPU backend (plain `+=` in place of the atomics).
 
+use super::parallel::{par_row_blocks, partition_rows_balanced, ExecPolicy, PAR_MIN_ELEMS};
 use super::PREFETCH_DIST;
 use crate::graph::Graph;
 use crate::tensor::Matrix;
@@ -47,22 +57,17 @@ fn prefetch_row(x: &Matrix, row: usize) {
     }
 }
 
-/// `Y = A·X` — cache-tiled, software-prefetched SpMM (Algorithm 2).
-///
-/// `y` must be `N × F`, pre-allocated; it is zeroed by the kernel (Phase 1
-/// bulk zero).
-pub fn spmm_tiled(g: &Graph, x: &Matrix, y: &mut Matrix) {
-    assert_eq!(g.num_nodes, x.rows);
-    assert_eq!(y.rows, g.num_nodes);
-    assert_eq!(y.cols, x.cols);
+/// Serial body of Algorithm 2 over one block of target rows; `out` is that
+/// block's slice of the output (row `u` lands at `(u - rows.start) * F`).
+fn spmm_tiled_rows(g: &Graph, x: &Matrix, rows: std::ops::Range<usize>, out: &mut [f32]) {
     let f = x.cols;
-    y.fill_zero();
-
-    for u in 0..g.num_nodes {
+    out.iter_mut().for_each(|v| *v = 0.0);
+    let base = rows.start;
+    for u in rows {
         let start = g.row_ptr[u] as usize;
         let end = g.row_ptr[u + 1] as usize;
         let deg = end - start;
-        let yrow = &mut y.data[u * f..(u + 1) * f];
+        let yrow = &mut out[(u - base) * f..(u - base + 1) * f];
         // Degree guard: prefetching only pays off when there are enough
         // pending neighbors to hide the request latency (paper §IV-C-b).
         let use_prefetch = deg > PREFETCH_DIST;
@@ -86,26 +91,77 @@ pub fn spmm_tiled(g: &Graph, x: &Matrix, y: &mut Matrix) {
     }
 }
 
-/// Naive row-wise SpMM used as the correctness oracle in tests and as the
-/// un-tiled baseline in the kernel ablation bench.
-pub fn spmm_naive(g: &Graph, x: &Matrix, y: &mut Matrix) {
+/// `Y = A·X` — cache-tiled, software-prefetched SpMM (Algorithm 2) under
+/// the process-default [`ExecPolicy`] (`MORPHLING_THREADS`).
+///
+/// `y` must be `N × F`, pre-allocated; it is zeroed by the kernel.
+pub fn spmm_tiled(g: &Graph, x: &Matrix, y: &mut Matrix) {
+    spmm_tiled_ex(g, x, y, ExecPolicy::from_env());
+}
+
+/// [`spmm_tiled`] with an explicit execution policy: target rows are
+/// partitioned by edge count and fanned out row-blocked, each worker owning
+/// a disjoint slice of `y`. Bitwise-identical to the serial kernel.
+pub fn spmm_tiled_ex(g: &Graph, x: &Matrix, y: &mut Matrix, pol: ExecPolicy) {
     assert_eq!(g.num_nodes, x.rows);
-    y.fill_zero();
+    assert_eq!(y.rows, g.num_nodes);
+    assert_eq!(y.cols, x.cols);
+    if pol.is_serial() {
+        spmm_tiled_rows(g, x, 0..g.num_nodes, &mut y.data);
+        return;
+    }
+    let blocks = partition_rows_balanced(&g.row_ptr, pol.threads);
+    par_row_blocks(&blocks, x.cols, &mut y.data, |rows, out| {
+        spmm_tiled_rows(g, x, rows, out)
+    });
+}
+
+/// Serial body of the naive kernel over one block of target rows.
+fn spmm_naive_rows(g: &Graph, x: &Matrix, rows: std::ops::Range<usize>, out: &mut [f32]) {
     let f = x.cols;
-    for u in 0..g.num_nodes {
+    out.iter_mut().for_each(|v| *v = 0.0);
+    let base = rows.start;
+    for u in rows {
         for ei in g.row_ptr[u] as usize..g.row_ptr[u + 1] as usize {
             let v = g.col_idx[ei] as usize;
             let w = g.weights[ei];
             for k in 0..f {
-                y.data[u * f + k] += w * x.data[v * f + k];
+                out[(u - base) * f + k] += w * x.data[v * f + k];
             }
         }
     }
 }
 
+/// Naive row-wise SpMM used as the correctness oracle in tests, as the
+/// un-tiled baseline in the kernel ablation bench, and as the DGL
+/// analogue's g-SpMM (parallel in the real framework too). Like every
+/// plain kernel wrapper it runs under the process-default [`ExecPolicy`],
+/// so the tiling ablation compares both kernels at the same thread count.
+pub fn spmm_naive(g: &Graph, x: &Matrix, y: &mut Matrix) {
+    spmm_naive_ex(g, x, y, ExecPolicy::from_env());
+}
+
+/// [`spmm_naive`] with an explicit execution policy (row-blocked fan-out).
+pub fn spmm_naive_ex(g: &Graph, x: &Matrix, y: &mut Matrix, pol: ExecPolicy) {
+    assert_eq!(g.num_nodes, x.rows);
+    if pol.is_serial() {
+        spmm_naive_rows(g, x, 0..g.num_nodes, &mut y.data);
+        return;
+    }
+    let blocks = partition_rows_balanced(&g.row_ptr, pol.threads);
+    par_row_blocks(&blocks, x.cols, &mut y.data, |rows, out| {
+        spmm_naive_rows(g, x, rows, out)
+    });
+}
+
 /// `Y += Aᵀ·X` streamed over the **original** CSR — the paper's CUDA
 /// implicit-transpose backward (§IV-D-b): no CSC copy is materialized;
 /// contributions scatter into `Y[v]`. `y` is zeroed first.
+///
+/// Scatter targets are arbitrary rows, so there is no conflict-free row
+/// partition; this variant is the serial stand-in for the GPU `atomicAdd`
+/// strategy and intentionally has no `_ex` fan-out (the CPU backward uses
+/// the transposed-CSR path instead).
 pub fn spmm_implicit_transpose(g: &Graph, x: &Matrix, y: &mut Matrix) {
     assert_eq!(g.num_nodes, x.rows);
     assert_eq!(y.cols, x.cols);
@@ -125,18 +181,22 @@ pub fn spmm_implicit_transpose(g: &Graph, x: &Matrix, y: &mut Matrix) {
     }
 }
 
-/// SpMM with max-aggregation (GraphSAGE "Max" in Listing 1): `Y[u] =
-/// max_{v∈N(u)} X[v]` elementwise, with `argmax` indices recorded for the
-/// backward pass. Nodes with no neighbors get zeros.
-pub fn spmm_max(g: &Graph, x: &Matrix, y: &mut Matrix, argmax: &mut [u32]) {
-    assert_eq!(g.num_nodes, x.rows);
-    assert_eq!(argmax.len(), y.rows * y.cols);
+/// Serial body of max-aggregation over one block of target rows; `out` and
+/// `am` are that block's slices of the output and argmax buffers.
+fn spmm_max_rows(
+    g: &Graph,
+    x: &Matrix,
+    rows: std::ops::Range<usize>,
+    out: &mut [f32],
+    am: &mut [u32],
+) {
     let f = x.cols;
-    for u in 0..g.num_nodes {
+    let base = rows.start;
+    for u in rows {
         let start = g.row_ptr[u] as usize;
         let end = g.row_ptr[u + 1] as usize;
-        let yrow = &mut y.data[u * f..(u + 1) * f];
-        let arow = &mut argmax[u * f..(u + 1) * f];
+        let yrow = &mut out[(u - base) * f..(u - base + 1) * f];
+        let arow = &mut am[(u - base) * f..(u - base + 1) * f];
         if start == end {
             yrow.iter_mut().for_each(|v| *v = 0.0);
             arow.iter_mut().for_each(|a| *a = u32::MAX);
@@ -159,7 +219,55 @@ pub fn spmm_max(g: &Graph, x: &Matrix, y: &mut Matrix, argmax: &mut [u32]) {
     }
 }
 
+/// SpMM with max-aggregation (GraphSAGE "Max" in Listing 1): `Y[u] =
+/// max_{v∈N(u)} X[v]` elementwise, with `argmax` indices recorded for the
+/// backward pass. Nodes with no neighbors get zeros.
+pub fn spmm_max(g: &Graph, x: &Matrix, y: &mut Matrix, argmax: &mut [u32]) {
+    spmm_max_ex(g, x, y, argmax, ExecPolicy::from_env());
+}
+
+/// [`spmm_max`] with an explicit execution policy. Both the output and the
+/// argmax buffer split at the same row boundaries, so each worker owns its
+/// slices of both.
+pub fn spmm_max_ex(g: &Graph, x: &Matrix, y: &mut Matrix, argmax: &mut [u32], pol: ExecPolicy) {
+    assert_eq!(g.num_nodes, x.rows);
+    assert_eq!(argmax.len(), y.rows * y.cols);
+    if pol.is_serial() || y.data.len() < PAR_MIN_ELEMS {
+        spmm_max_rows(g, x, 0..g.num_nodes, &mut y.data, argmax);
+        return;
+    }
+    let f = x.cols;
+    let blocks = partition_rows_balanced(&g.row_ptr, pol.threads);
+    if blocks.len() <= 1 {
+        spmm_max_rows(g, x, 0..g.num_nodes, &mut y.data, argmax);
+        return;
+    }
+    let mut yslices = Vec::with_capacity(blocks.len());
+    let mut aslices = Vec::with_capacity(blocks.len());
+    let mut yrest: &mut [f32] = &mut y.data;
+    let mut arest: &mut [u32] = argmax;
+    for b in &blocks {
+        let len = (b.end - b.start) * f;
+        let (yh, yt) = std::mem::take(&mut yrest).split_at_mut(len);
+        let (ah, at) = std::mem::take(&mut arest).split_at_mut(len);
+        yslices.push(yh);
+        aslices.push(ah);
+        yrest = yt;
+        arest = at;
+    }
+    std::thread::scope(|s| {
+        let mut iter = blocks.iter().cloned().zip(yslices.into_iter().zip(aslices));
+        let (b0, (y0, a0)) = iter.next().unwrap();
+        for (b, (yh, ah)) in iter {
+            s.spawn(move || spmm_max_rows(g, x, b, yh, ah));
+        }
+        spmm_max_rows(g, x, b0, y0, a0);
+    });
+}
+
 /// Backward of [`spmm_max`]: route `dY[u,k]` to `dX[argmax[u,k], k]`.
+/// Scatter targets follow the argmax provenance (not row-owned), so this
+/// stays serial — it is a vanishing fraction of backward time.
 pub fn spmm_max_backward(dy: &Matrix, argmax: &[u32], dx: &mut Matrix) {
     dx.fill_zero();
     let f = dy.cols;
@@ -218,6 +326,25 @@ mod tests {
     }
 
     #[test]
+    fn prop_threaded_bitwise_equals_serial() {
+        check(0x2e, 12, |rng| {
+            // n·f ≥ PAR_MIN_ELEMS so the fan-out actually spawns workers.
+            let n = 120 + rng.below(80);
+            let f = 36 + rng.below(48);
+            let deg = 1 + rng.below(6);
+            let g = random_graph(rng, n, deg);
+            let x = Matrix::from_vec(n, f, random_matrix(rng, n, f));
+            let mut serial = Matrix::zeros(n, f);
+            spmm_tiled_ex(&g, &x, &mut serial, ExecPolicy::serial());
+            for t in [2usize, 3, 8, n + 5] {
+                let mut par = Matrix::zeros(n, f);
+                spmm_tiled_ex(&g, &x, &mut par, ExecPolicy::with_threads(t));
+                assert_eq!(serial.data, par.data, "threads={t}");
+            }
+        });
+    }
+
+    #[test]
     fn prop_implicit_transpose_matches_explicit() {
         check(0x17, 20, |rng| {
             let n = 2 + rng.below(40);
@@ -253,6 +380,25 @@ mod tests {
         assert_eq!(dx.get(2, 1), 2.0);
         // isolated node contributed nothing
         assert_eq!(dx.get(0, 0), 0.0);
+    }
+
+    #[test]
+    fn max_aggregation_threaded_bitwise() {
+        // 130 × 36 > PAR_MIN_ELEMS: exercises the two-buffer scope split.
+        let (n, f) = (130usize, 36usize);
+        let mut rng = Rng::new(31);
+        let g = random_graph(&mut rng, n, 4);
+        let x = Matrix::from_vec(n, f, random_matrix(&mut rng, n, f));
+        let mut y1 = Matrix::zeros(n, f);
+        let mut am1 = vec![0u32; n * f];
+        spmm_max_ex(&g, &x, &mut y1, &mut am1, ExecPolicy::serial());
+        for t in [2usize, 3, 8, 256] {
+            let mut y2 = Matrix::zeros(n, f);
+            let mut am2 = vec![0u32; n * f];
+            spmm_max_ex(&g, &x, &mut y2, &mut am2, ExecPolicy::with_threads(t));
+            assert_eq!(y1.data, y2.data, "threads={t}");
+            assert_eq!(am1, am2, "threads={t}");
+        }
     }
 
     #[test]

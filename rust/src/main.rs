@@ -8,12 +8,16 @@
 //! - `dist`       — simulated multi-rank distributed training
 //! - `calibrate`  — measure the machine's efficiency ratio γ (Eq. 1)
 
+// Same style-lint baseline as lib.rs (see the rationale there).
+#![allow(clippy::needless_range_loop, clippy::too_many_arguments)]
+
 use anyhow::{anyhow, Result};
 use morphling::coordinator::{run, TrainSpec};
 use morphling::dist::runtime::{train_distributed, DistConfig, PartitionerKind};
 use morphling::dist::NetworkModel;
-use morphling::engine::sparsity::calibrate_gamma;
+use morphling::engine::sparsity::calibrate_gamma_ex;
 use morphling::engine::EngineKind;
+use morphling::kernels::parallel::ExecPolicy;
 use morphling::graph::datasets;
 use morphling::model::Arch;
 use morphling::optim::OptKind;
@@ -81,6 +85,7 @@ fn cmd_train(args: &Args) -> Result<()> {
         lr: args.f32_or("lr", 0.01),
         tau: args.get("tau").and_then(|v| v.parse().ok()),
         calibrate: args.flag("calibrate"),
+        threads: args.get("threads").and_then(|v| v.parse().ok()),
         seed: args.u64_or("seed", 42),
         artifacts_dir: args.get_or("artifacts", "artifacts").into(),
         log: !args.flag("quiet"),
@@ -181,10 +186,16 @@ fn main() -> Result<()> {
         Some("partition") => cmd_partition(&args),
         Some("dist") => cmd_dist(&args),
         Some("calibrate") => {
-            let g = calibrate_gamma(args.u64_or("seed", 7));
+            let pol = args
+                .get("threads")
+                .and_then(|v| v.parse().ok())
+                .map(ExecPolicy::with_threads)
+                .unwrap_or_default();
+            let g = calibrate_gamma_ex(args.u64_or("seed", 7), pol);
             println!(
-                "efficiency ratio γ = {:.3} → sparse path when s ≥ τ = {:.3}",
+                "efficiency ratio γ = {:.3} at {} thread(s) → sparse path when s ≥ τ = {:.3}",
                 g,
+                pol.threads,
                 1.0 - g
             );
             Ok(())
@@ -192,10 +203,12 @@ fn main() -> Result<()> {
         _ => {
             eprintln!(
                 "usage: morphling <info|shapes|train|partition|dist|calibrate> [--flags]\n\
-                 train:     --dataset corafull --engine native|pyg|dgl|pjrt --arch gcn|sage|sage-max|gin --epochs 100\n\
+                 train:     --dataset corafull --engine native|pyg|dgl|pjrt --arch gcn|sage|sage-max|gin --epochs 100 [--threads N]\n\
                  partition: --dataset corafull --k 4\n\
                  dist:      --dataset corafull --world 4 [--blocking] [--chunk] [--network infiniband|ethernet|ideal]\n\
-                 shapes:    --out artifacts/shapes.json [--datasets a,b,c]"
+                 calibrate: [--threads N] [--seed 7]\n\
+                 shapes:    --out artifacts/shapes.json [--datasets a,b,c]\n\
+                 (kernel threads default to MORPHLING_THREADS, else 1)"
             );
             Ok(())
         }

@@ -1,0 +1,208 @@
+//! Threading invariants of the row-blocked kernel backend:
+//!
+//! 1. every parallel kernel is **bitwise-identical** to its serial path at
+//!    any thread count (including `threads > rows` and edge-free graphs);
+//! 2. the edge-balanced row partitioner produces contiguous, non-empty,
+//!    balanced blocks on power-law degree distributions;
+//! 3. a full training epoch (forward + backward + optimizer) is
+//!    bit-deterministic across thread counts for every architecture.
+
+use morphling::engine::native::NativeEngine;
+use morphling::engine::Engine;
+use morphling::graph::datasets;
+use morphling::graph::generator::{power_law_graph, star_graph, GraphConfig};
+use morphling::graph::Graph;
+use morphling::kernels::gemm::{gemm_at_b_ex, gemm_ex};
+use morphling::kernels::parallel::{partition_rows_balanced, ExecPolicy};
+use morphling::kernels::spmm::spmm_tiled_ex;
+use morphling::model::Arch;
+use morphling::tensor::Matrix;
+use morphling::util::proptest::{check, random_matrix};
+use morphling::util::Rng;
+
+const SWEEP: [usize; 4] = [1, 2, 3, 8];
+
+fn tiny_spec(name: &'static str, sparsity: f64) -> morphling::graph::DatasetSpec {
+    morphling::graph::DatasetSpec {
+        name,
+        real_nodes: 0,
+        real_edges: 0,
+        real_features: 0,
+        nodes: 180,
+        edges: 1100,
+        features: 40,
+        classes: 4,
+        feat_sparsity: sparsity,
+        gamma: 2.4,
+        components: 1,
+    }
+}
+
+/// SpMM and GEMM outputs are bitwise-equal across the thread sweep on
+/// skewed power-law graphs, including thread counts above the row count.
+#[test]
+fn spmm_gemm_bitwise_identical_across_threads() {
+    check(0xBEEF, 6, |rng| {
+        // n·f ≥ PAR_MIN_ELEMS: the fan-outs really spawn workers here.
+        let n = 120 + rng.below(120);
+        let f = 36 + rng.below(48);
+        let g = power_law_graph(
+            &GraphConfig {
+                num_nodes: n,
+                num_edges: n * 6,
+                power_law_gamma: 2.2,
+                components: 1,
+            },
+            rng,
+        );
+        let x = Matrix::from_vec(n, f, random_matrix(rng, n, f));
+        let mut serial = Matrix::zeros(n, f);
+        spmm_tiled_ex(&g, &x, &mut serial, ExecPolicy::serial());
+        for t in SWEEP.into_iter().chain([n + 3]) {
+            let mut par = Matrix::zeros(n, f);
+            spmm_tiled_ex(&g, &x, &mut par, ExecPolicy::with_threads(t));
+            assert_eq!(serial.data, par.data, "spmm threads={t} n={n} f={f}");
+        }
+
+        let h = 40 + rng.below(16);
+        let w = Matrix::from_vec(f, h, random_matrix(rng, f, h));
+        let mut c_serial = Matrix::zeros(n, h);
+        gemm_ex(&x, &w, &mut c_serial, ExecPolicy::serial());
+        let gr = Matrix::from_vec(n, h, random_matrix(rng, n, h));
+        let mut dw_serial = Matrix::zeros(f, h);
+        gemm_at_b_ex(&x, &gr, &mut dw_serial, ExecPolicy::serial());
+        for t in SWEEP.into_iter().chain([n + f]) {
+            let pol = ExecPolicy::with_threads(t);
+            let mut c = Matrix::zeros(n, h);
+            gemm_ex(&x, &w, &mut c, pol);
+            assert_eq!(c_serial.data, c.data, "gemm threads={t}");
+            let mut dw = Matrix::zeros(f, h);
+            gemm_at_b_ex(&x, &gr, &mut dw, pol);
+            assert_eq!(dw_serial.data, dw.data, "gemm_at_b threads={t}");
+        }
+    });
+}
+
+/// Edge-free graphs (every row empty) and single-row graphs go through the
+/// fan-out without panicking and still produce the zero/serial result.
+#[test]
+fn spmm_edge_cases_empty_graph_and_threads_above_rows() {
+    let g = Graph::from_edges(5, &[]);
+    let x = Matrix::from_vec(5, 3, vec![1.0; 15]);
+    for t in [1usize, 2, 8, 64] {
+        let mut y = Matrix::from_vec(5, 3, vec![9.0; 15]); // must be zeroed
+        spmm_tiled_ex(&g, &x, &mut y, ExecPolicy::with_threads(t));
+        assert!(y.data.iter().all(|v| *v == 0.0), "threads={t}");
+    }
+
+    let g1 = Graph::from_edges(1, &[]);
+    let x1 = Matrix::from_vec(1, 4, vec![1., 2., 3., 4.]);
+    let mut y1 = Matrix::zeros(1, 4);
+    spmm_tiled_ex(&g1, &x1, &mut y1, ExecPolicy::with_threads(16));
+    assert!(y1.data.iter().all(|v| *v == 0.0));
+}
+
+/// Partitioner invariants on power-law graphs: contiguous cover, no empty
+/// block (the block count drops below `threads` only when `rows < threads`),
+/// and per-block edge counts within 2× of the mean.
+#[test]
+fn partitioner_balances_power_law_graphs() {
+    let mut rng = Rng::new(0xD15C);
+    for (n, e, gamma) in [(500usize, 4_000usize, 2.5f64), (2_000, 16_000, 2.2)] {
+        let g = power_law_graph(
+            &GraphConfig {
+                num_nodes: n,
+                num_edges: e,
+                power_law_gamma: gamma,
+                components: 1,
+            },
+            &mut rng,
+        );
+        let total_edges = g.num_edges();
+        for threads in [2usize, 4, 8] {
+            let blocks = partition_rows_balanced(&g.row_ptr, threads);
+            assert_eq!(blocks.len(), threads, "n={n} threads={threads}");
+            assert_eq!(blocks[0].start, 0);
+            assert_eq!(blocks.last().unwrap().end, n);
+            for w in blocks.windows(2) {
+                assert_eq!(w[0].end, w[1].start);
+            }
+            let mean = total_edges as f64 / blocks.len() as f64;
+            for b in &blocks {
+                assert!(b.start < b.end, "empty block {b:?}");
+                let edges = (g.row_ptr[b.end] - g.row_ptr[b.start]) as f64;
+                assert!(
+                    edges <= 2.0 * mean,
+                    "block {b:?} has {edges} edges, mean {mean:.1} (n={n} t={threads})"
+                );
+            }
+        }
+    }
+}
+
+/// `rows < threads` yields exactly `rows` single-row blocks — never an
+/// empty one.
+#[test]
+fn partitioner_rows_below_threads() {
+    let g = star_graph(6);
+    let blocks = partition_rows_balanced(&g.row_ptr, 16);
+    assert_eq!(blocks.len(), 6);
+    for (i, b) in blocks.iter().enumerate() {
+        assert_eq!(*b, i..i + 1);
+    }
+}
+
+/// A hub-dominated star graph: the hub row gets isolated into its own
+/// block instead of dragging half the graph with it.
+#[test]
+fn partitioner_isolates_star_hub() {
+    let g = star_graph(1_000);
+    let blocks = partition_rows_balanced(&g.row_ptr, 4);
+    assert_eq!(blocks.len(), 4);
+    assert_eq!(blocks[0], 0..1, "hub must be alone in block 0");
+}
+
+/// Full-epoch bit-determinism: training under 2/3/8 threads reproduces the
+/// serial loss trajectory and parameters exactly, for every architecture
+/// (GCN and SageMean also exercise the sparse first-layer path).
+#[test]
+fn training_epoch_bitwise_deterministic_across_threads() {
+    for (arch, sparsity) in [
+        (Arch::Gcn, 0.9),
+        (Arch::SageMean, 0.9),
+        (Arch::SageMax, 0.3),
+        (Arch::Gin, 0.3),
+    ] {
+        let ds = datasets::load(&tiny_spec("threads-det", sparsity));
+        let mut serial = NativeEngine::paper_default(&ds, arch, 17).with_threads(1);
+        let serial_losses: Vec<f64> = (0..3).map(|_| serial.train_epoch(&ds).loss).collect();
+        for t in [2usize, 3, 8] {
+            let mut par = NativeEngine::paper_default(&ds, arch, 17).with_threads(t);
+            for (e, &expect) in serial_losses.iter().enumerate() {
+                let got = par.train_epoch(&ds).loss;
+                assert_eq!(
+                    expect.to_bits(),
+                    got.to_bits(),
+                    "{}: epoch {e} loss diverged at threads={t}: {expect} vs {got}",
+                    arch.name()
+                );
+            }
+            assert_eq!(
+                serial.params.layers[0].w.data, par.params.layers[0].w.data,
+                "{}: weights diverged at threads={t}",
+                arch.name()
+            );
+        }
+    }
+}
+
+/// The env knob reaches the engines: `paper_default` adopts
+/// `MORPHLING_THREADS` (already resolved at process start) without
+/// disturbing results — this is what the CI matrix leans on.
+#[test]
+fn env_default_policy_is_applied() {
+    let ds = datasets::load(&tiny_spec("threads-env", 0.5));
+    let eng = NativeEngine::paper_default(&ds, Arch::Gcn, 3);
+    assert_eq!(eng.policy, ExecPolicy::from_env());
+    assert!(eng.policy.threads >= 1);
+}
