@@ -7,7 +7,9 @@
 //!    (JAX/Pallas → HLO text → Rust PJRT), verifying the loss decreases
 //!    through the accelerator path too;
 //! 3. **distributed runtime** — 4 simulated ranks with the hierarchical
-//!    partitioner and the pipelined gradient reduction.
+//!    partitioner and the pipelined gradient reduction;
+//! 4. **mini-batch sampler** — neighbor-sampled SAGE-mean with pipelined
+//!    batch prefetch through the same coordinator front door.
 //!
 //!     cargo run --release --example train_e2e [-- --skip-pjrt] [--threads N]
 //!
@@ -15,8 +17,9 @@
 
 use morphling::coordinator::{run, TrainSpec};
 use morphling::dist::runtime::{train_distributed, DistConfig};
-use morphling::engine::EngineKind;
+use morphling::engine::{EngineKind, RunMode};
 use morphling::graph::datasets;
+use morphling::model::Arch;
 use morphling::util::argparse::Args;
 use morphling::util::table::fmt_secs;
 
@@ -35,7 +38,7 @@ fn main() -> anyhow::Result<()> {
         ..Default::default()
     };
     println!(
-        "[1/3] native engine: GCN on {} for {} epochs ({} kernel thread(s))",
+        "[1/4] native engine: GCN on {} for {} epochs ({} kernel thread(s))",
         spec.dataset,
         spec.epochs,
         threads.unwrap_or_else(|| morphling::kernels::parallel::ExecPolicy::from_env().threads)
@@ -63,7 +66,7 @@ fn main() -> anyhow::Result<()> {
             epochs: 20,
             ..Default::default()
         };
-        println!("[2/3] PJRT engine: AOT fused step on {}", spec.dataset);
+        println!("[2/4] PJRT engine: AOT fused step on {}", spec.dataset);
         match run(&spec) {
             Ok(out) => {
                 let first = out.report.epochs[0].loss;
@@ -88,7 +91,7 @@ fn main() -> anyhow::Result<()> {
         epochs: 20,
         ..Default::default()
     };
-    println!("[3/3] distributed: {} on {} ranks (pipelined, hierarchical)", ds.spec.name, cfg.world);
+    println!("[3/4] distributed: {} on {} ranks (pipelined, hierarchical)", ds.spec.name, cfg.world);
     let r = train_distributed(&ds, &cfg);
     println!(
         "  partitioner chose {}; loss {:.4} → {:.4}; sustained epoch {}",
@@ -105,6 +108,31 @@ fn main() -> anyhow::Result<()> {
     }
     anyhow::ensure!(r.final_loss() < r.losses[0], "distributed loss did not decrease");
 
-    println!("\nall three layers compose: OK");
+    // --- 4. mini-batch sampler ---
+    let spec = TrainSpec {
+        dataset: "ogbn-arxiv".to_string(),
+        arch: Arch::SageMean,
+        mode: RunMode::Minibatch,
+        fanouts: vec![5, 10],
+        batch_size: 512,
+        epochs: 30,
+        threads,
+        ..Default::default()
+    };
+    println!(
+        "\n[4/4] mini-batch sampler: SAGE-mean on {}, batch {}, fanouts {:?}",
+        spec.dataset, spec.batch_size, spec.fanouts
+    );
+    let out = run(&spec)?;
+    let first = out.report.epochs[0].loss;
+    let last = out.report.final_loss();
+    println!(
+        "  loss {first:.4} -> {last:.4}  test acc {:.3}  sustained epoch {}",
+        out.report.test_acc,
+        fmt_secs(out.report.sustained_epoch_secs())
+    );
+    anyhow::ensure!(last < first, "minibatch loss did not decrease");
+
+    println!("\nall layers compose: OK");
     Ok(())
 }

@@ -31,3 +31,17 @@ pub fn probe(engine: &mut dyn Engine, ds: &Dataset) -> f64 {
     engine.train_epoch(ds);
     t.elapsed().as_secs_f64()
 }
+
+/// Write `--json` records (pre-formatted JSON objects, one string each) as
+/// a pretty-printed array — the shared tail of every bench's `--json PATH`
+/// flag. Exits non-zero if the file can't be written, so CI catches it.
+pub fn write_json_records(path: &str, records: &[String]) {
+    let json = format!("[\n  {}\n]\n", records.join(",\n  "));
+    match std::fs::write(path, json) {
+        Ok(()) => println!("\nwrote {} records to {path}", records.len()),
+        Err(e) => {
+            eprintln!("failed to write {path}: {e}");
+            std::process::exit(1);
+        }
+    }
+}

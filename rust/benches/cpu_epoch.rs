@@ -143,13 +143,6 @@ fn main() {
                 )
             })
             .collect();
-        let json = format!("[\n  {}\n]\n", body.join(",\n  "));
-        match std::fs::write(path, json) {
-            Ok(()) => println!("\nwrote {} records to {path}", records.len()),
-            Err(e) => {
-                eprintln!("failed to write {path}: {e}");
-                std::process::exit(1);
-            }
-        }
+        common::write_json_records(path, &body);
     }
 }

@@ -3,6 +3,7 @@
 //!
 //!     cargo bench --bench dist_epoch
 //!     cargo bench --bench dist_epoch -- --world 8 --datasets yelp
+//!     cargo bench --bench dist_epoch -- --json dist.json   # perf trajectory
 //!
 //! Morphling = hierarchical partitioner + pipelined gradient reduction;
 //! the baseline = vertex-chunk partitioning + blocking collectives (the
@@ -55,15 +56,25 @@ fn main() {
         "baseline-comm",
     ]);
     let mut abl = Table::new(vec!["dataset", "hier+pipe", "hier+block", "chunk+pipe", "chunk+block"]);
+    // JSON records: (dataset, config, epoch_secs, mean exposed-comm secs)
+    let mut records: Vec<(String, &'static str, f64, f64)> = Vec::new();
     for name in &names {
         let Some(ds) = datasets::load_by_name(name) else {
             eprintln!("unknown dataset {name}");
             continue;
         };
         let (t_m, c_m) = run_cfg(&ds, world, PartitionerKind::Hierarchical, true, epochs);
-        let (t_hb, _) = run_cfg(&ds, world, PartitionerKind::Hierarchical, false, epochs);
-        let (t_cp, _) = run_cfg(&ds, world, PartitionerKind::VertexChunk, true, epochs);
+        let (t_hb, c_hb) = run_cfg(&ds, world, PartitionerKind::Hierarchical, false, epochs);
+        let (t_cp, c_cp) = run_cfg(&ds, world, PartitionerKind::VertexChunk, true, epochs);
         let (t_b, c_b) = run_cfg(&ds, world, PartitionerKind::VertexChunk, false, epochs);
+        for (cfg, secs, comm) in [
+            ("hier+pipe", t_m, c_m),
+            ("hier+block", t_hb, c_hb),
+            ("chunk+pipe", t_cp, c_cp),
+            ("chunk+block", t_b, c_b),
+        ] {
+            records.push((name.to_string(), cfg, secs, comm));
+        }
         t.row(vec![
             name.to_string(),
             fmt_secs(t_m),
@@ -86,4 +97,16 @@ fn main() {
     println!("\nAttribution ablation (§V-E2): partitioner × pipeline");
     print!("{}", abl.render());
     println!("\nexpected shape: gains grow with graph size; small graphs show parity\n(fixed runtime overhead dominates), matching the paper's PPI/Flickr observation.");
+
+    if let Some(path) = args.get("json") {
+        let body: Vec<String> = records
+            .iter()
+            .map(|(ds, cfg, secs, comm)| {
+                format!(
+                    "{{\"dataset\":\"{ds}\",\"config\":\"{cfg}\",\"world\":{world},\"epoch_secs\":{secs:.9},\"exposed_comm_secs\":{comm:.9}}}"
+                )
+            })
+            .collect();
+        common::write_json_records(path, &body);
+    }
 }

@@ -1,16 +1,23 @@
-//! Table III & Figure 8: peak memory per engine.
+//! Table III & Figure 8: peak memory per engine — now including the
+//! mini-batch live-set comparison.
 //!
 //! Two measurements per (dataset, engine):
 //! - **analytic** — the engine's live-set model (`Engine::peak_bytes`),
 //!   i.e. what its execution model must keep alive;
 //! - **measured** — the actual allocation high-water mark during one
-//!   training epoch, captured by the tracking global allocator.
+//!   training epoch, captured by the tracking global allocator
+//!   (`memtrack::PeakRegion`).
 //!
 //!     cargo bench --bench memory
+//!     cargo bench --bench memory -- --datasets ogbn-arxiv \
+//!                                   --batch-size 256 --fanouts 5,5 \
+//!                                   --json memory.json
 //!
 //! Expected shape (paper §V-F): gather-scatter carries the `O(|E|·F)`
 //! term (8–15× Morphling on dense graphs), nonfused sits in between
-//! (duplicate formats + unfused intermediates), Morphling stays `O(|V|·F)`.
+//! (duplicate formats + unfused intermediates), Morphling stays `O(|V|·F)`
+//! — and the mini-batch path drops below even that, bounding activations
+//! at the batch live-set instead of `O(|V|·F)`.
 
 mod common;
 
@@ -18,9 +25,10 @@ use morphling::baselines::{GatherScatterEngine, NonFusedEngine};
 use morphling::engine::native::NativeEngine;
 use morphling::engine::Engine;
 use morphling::graph::datasets;
-use morphling::memtrack::{self, TrackingAlloc};
+use morphling::memtrack::{PeakRegion, TrackingAlloc};
 use morphling::model::Arch;
-use morphling::util::argparse::Args;
+use morphling::sampler::{MiniBatchConfig, MiniBatchEngine};
+use morphling::util::argparse::{usize_list, Args};
 use morphling::util::table::{fmt_bytes, Table};
 
 #[global_allocator]
@@ -30,31 +38,48 @@ fn main() {
     let args = Args::from_env();
     let default = "reddit,yelp,amazonproducts,ogbn-arxiv,ogbn-products";
     let names: Vec<&str> = args.get_or("datasets", default).split(',').collect();
+    let batch_size = args.usize_or("batch-size", 256);
+    let fanouts = usize_list("fanouts", args.get_or("fanouts", "5,5")).unwrap_or_else(|e| {
+        eprintln!("{e}");
+        std::process::exit(2);
+    });
 
     println!("=== Table III / Fig 8: peak memory (one training epoch) ===\n");
     let mut t = Table::new(vec![
         "dataset",
         "morphling",
+        "minibatch",
         "pyg(gs)",
         "dgl(nonfused)",
+        "full/mb",
         "pyg/morphling",
         "dgl/morphling",
     ]);
+    // JSON records: (dataset, engine, analytic, measured)
+    let mut records: Vec<(String, &'static str, usize, usize)> = Vec::new();
     for name in names {
         let Some(ds) = datasets::load_by_name(name) else {
             eprintln!("unknown dataset {name}");
             continue;
         };
-        let measure = |mk: &mut dyn FnMut() -> Box<dyn Engine>| -> (usize, usize) {
+        let mut measure = |mk: &mut dyn FnMut() -> Box<dyn Engine>| -> (usize, usize) {
             let mut eng = mk();
-            memtrack::reset_peak();
-            let base = memtrack::live_bytes();
+            let region = PeakRegion::start();
             eng.train_epoch(&ds);
-            let measured = memtrack::peak_bytes().saturating_sub(base);
-            (eng.peak_bytes(), measured)
+            let (analytic, measured) = (eng.peak_bytes(), region.bytes());
+            records.push((name.to_string(), eng.name(), analytic, measured));
+            (analytic, measured)
         };
         let (a_nat, m_nat) =
             measure(&mut || Box::new(NativeEngine::paper_default(&ds, Arch::Gcn, 1)));
+        let (a_mb, m_mb) = measure(&mut || {
+            let cfg = MiniBatchConfig {
+                batch_size,
+                fanouts: fanouts.clone(),
+                prefetch: true,
+            };
+            Box::new(MiniBatchEngine::paper_default(&ds, Arch::Gcn, cfg, 1).unwrap())
+        });
         let (a_gs, m_gs) =
             measure(&mut || Box::new(GatherScatterEngine::paper_default(&ds, 1)));
         let (a_nf, m_nf) = measure(&mut || Box::new(NonFusedEngine::paper_default(&ds, 1)));
@@ -63,14 +88,29 @@ fn main() {
         t.row(vec![
             name.to_string(),
             format!("{} ({})", fmt_bytes(a_nat), fmt_bytes(m_nat)),
+            format!("{} ({})", fmt_bytes(a_mb), fmt_bytes(m_mb)),
             format!("{} ({})", fmt_bytes(a_gs), fmt_bytes(m_gs)),
             format!("{} ({})", fmt_bytes(a_nf), fmt_bytes(m_nf)),
+            format!("{:.1}x", a_nat as f64 / a_mb as f64),
             format!("{:.1}x", a_gs as f64 / a_nat as f64),
             format!("{:.1}x", a_nf as f64 / a_nat as f64),
         ]);
         eprintln!("  [{name}] done");
     }
-    println!("format: analytic-live-set (measured-alloc-high-water)\n");
+    println!("format: analytic-live-set (measured-alloc-high-water)");
+    println!("minibatch: batch {batch_size}, fanouts {fanouts:?}\n");
     print!("{}", t.render());
     println!("\npaper Table III ratios for reference: PyG 6–15x, DGL 1.7–3.4x over Morphling");
+
+    if let Some(path) = args.get("json") {
+        let body: Vec<String> = records
+            .iter()
+            .map(|(ds, eng, analytic, measured)| {
+                format!(
+                    "{{\"dataset\":\"{ds}\",\"engine\":\"{eng}\",\"analytic_bytes\":{analytic},\"measured_bytes\":{measured}}}"
+                )
+            })
+            .collect();
+        common::write_json_records(path, &body);
+    }
 }

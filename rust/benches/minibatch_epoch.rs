@@ -1,0 +1,142 @@
+//! Full-batch vs mini-batch: per-epoch time, sampling throughput, and
+//! live-set peak across batch sizes.
+//!
+//!     cargo bench --bench minibatch_epoch
+//!     cargo bench --bench minibatch_epoch -- --datasets ogbn-arxiv,reddit \
+//!         --arch sage --fanouts 5,10 --batches 128,512,2048 \
+//!         --threads 4 --json minibatch.json
+//!
+//! Per (dataset, batch size): sustained epoch seconds, sampled-edges/sec
+//! (total block edges extracted per wall-clock second — the
+//! sampling-dominates-minibatch cost the GNN-accelerator survey calls out),
+//! and the engine's analytic peak bytes next to the full-batch engine's.
+//! Expected shape: small batches trade epoch time (more optimizer steps,
+//! less kernel efficiency) for a much smaller live-set; the prefetch
+//! pipeline hides most sampling cost at moderate batch sizes.
+
+mod common;
+
+use common::{epoch_time, probe, reps_for};
+use morphling::engine::native::NativeEngine;
+use morphling::engine::Engine;
+use morphling::graph::datasets;
+use morphling::model::Arch;
+use morphling::sampler::{MiniBatchConfig, MiniBatchEngine};
+use morphling::util::argparse::{choice, usize_list, Args};
+use morphling::util::table::{fmt_bytes, fmt_secs, Table};
+
+fn main() {
+    let args = Args::from_env();
+    let names: Vec<String> = args
+        .get_or("datasets", "ogbn-arxiv,flickr")
+        .split(',')
+        .map(str::to_string)
+        .collect();
+    let arch = choice("arch", args.get_or("arch", "sage"), Arch::parse, Arch::VALID)
+        .unwrap_or_else(|e| {
+            eprintln!("{e}");
+            std::process::exit(2);
+        });
+    let fanouts = usize_list("fanouts", args.get_or("fanouts", "5,10")).unwrap_or_else(|e| {
+        eprintln!("{e}");
+        std::process::exit(2);
+    });
+    let batches = usize_list("batches", args.get_or("batches", "128,512,2048"))
+        .unwrap_or_else(|e| {
+            eprintln!("{e}");
+            std::process::exit(2);
+        });
+    let threads = args.usize_or("threads", 1);
+    let reps_override = args.get("reps").and_then(|v| v.parse::<usize>().ok());
+    let budget = |probe_secs: f64| match reps_override {
+        Some(r) => (0, r.max(1)),
+        None => reps_for(probe_secs),
+    };
+
+    println!(
+        "=== Mini-batch vs full-batch per-epoch time ({}, fanouts {fanouts:?}, {threads} thread(s)) ===\n",
+        arch.name()
+    );
+    let mut lat = Table::new(
+        std::iter::once("dataset".to_string())
+            .chain(["full-batch".to_string()])
+            .chain(batches.iter().map(|b| format!("mb b={b}")))
+            .collect::<Vec<_>>(),
+    );
+    let mut thr = Table::new(
+        std::iter::once("dataset".to_string())
+            .chain(batches.iter().map(|b| format!("edges/s b={b}")))
+            .chain(["peak full".to_string()])
+            .chain(batches.iter().map(|b| format!("peak b={b}")))
+            .collect::<Vec<_>>(),
+    );
+    // JSON records: (dataset, mode, batch, epoch_secs, sampled eps, peak)
+    let mut records: Vec<(String, &'static str, usize, f64, f64, usize)> = Vec::new();
+
+    for name in &names {
+        let Some(ds) = datasets::load_by_name(name) else {
+            eprintln!("unknown dataset {name}");
+            continue;
+        };
+        let mut full = NativeEngine::paper_default(&ds, arch, 42).with_threads(threads);
+        let p = probe(&mut full, &ds);
+        let (w, r) = budget(p);
+        let t_full = epoch_time(&mut full, &ds, w, r);
+        let peak_full = full.peak_bytes();
+        records.push((name.clone(), "full", 0, t_full, 0.0, peak_full));
+        drop(full);
+
+        let mut t_mb = Vec::with_capacity(batches.len());
+        let mut eps_mb = Vec::with_capacity(batches.len());
+        let mut peak_mb = Vec::with_capacity(batches.len());
+        for &b in &batches {
+            let cfg = MiniBatchConfig {
+                batch_size: b,
+                fanouts: fanouts.clone(),
+                prefetch: true,
+            };
+            let mut eng = MiniBatchEngine::paper_default(&ds, arch, cfg, 42)
+                .unwrap_or_else(|e| {
+                    eprintln!("{e}");
+                    std::process::exit(2);
+                })
+                .with_threads(threads);
+            let p = probe(&mut eng, &ds);
+            let (w, r) = budget(p);
+            let secs = epoch_time(&mut eng, &ds, w, r);
+            let eps = eng.sampled_edges_last_epoch() as f64 / secs.max(1e-12);
+            let peak = eng.peak_bytes();
+            records.push((name.clone(), "minibatch", b, secs, eps, peak));
+            t_mb.push(secs);
+            eps_mb.push(eps);
+            peak_mb.push(peak);
+        }
+
+        let mut row = vec![name.clone(), fmt_secs(t_full)];
+        row.extend(t_mb.iter().map(|s| fmt_secs(*s)));
+        lat.row(row);
+        let mut row = vec![name.clone()];
+        row.extend(eps_mb.iter().map(|e| format!("{:.2}M", e / 1e6)));
+        row.push(fmt_bytes(peak_full));
+        row.extend(peak_mb.iter().map(|p| fmt_bytes(*p)));
+        thr.row(row);
+        eprintln!("  [{name}] done");
+    }
+    println!("Per-epoch latency:");
+    print!("{}", lat.render());
+    println!("\nSampling throughput + analytic peak live-set:");
+    print!("{}", thr.render());
+    println!("\nexpected shape: epoch time grows as batches shrink (more steps, less\nkernel efficiency); peak live-set shrinks toward the batch working set.");
+
+    if let Some(path) = args.get("json") {
+        let body: Vec<String> = records
+            .iter()
+            .map(|(ds, mode, b, secs, eps, peak)| {
+                format!(
+                    "{{\"dataset\":\"{ds}\",\"mode\":\"{mode}\",\"batch_size\":{b},\"threads\":{threads},\"epoch_secs\":{secs:.9},\"sampled_edges_per_sec\":{eps:.1},\"peak_bytes\":{peak}}}"
+                )
+            })
+            .collect();
+        common::write_json_records(path, &body);
+    }
+}

@@ -7,7 +7,7 @@
 use crate::baselines::{GatherScatterEngine, NonFusedEngine};
 use crate::engine::native::NativeEngine;
 use crate::engine::sparsity::{calibrate_gamma_ex, decide, SparsityPolicy};
-use crate::engine::{Engine, EngineKind};
+use crate::engine::{Engine, EngineKind, RunMode};
 use crate::graph::{datasets, Dataset};
 use crate::kernels::parallel::ExecPolicy;
 use crate::kernels::update::AdamParams;
@@ -15,6 +15,7 @@ use crate::model::{Arch, ModelConfig};
 use crate::optim::OptKind;
 use crate::runtime::engine::PjrtVariant;
 use crate::runtime::PjrtEngine;
+use crate::sampler::{MiniBatchConfig, MiniBatchEngine};
 use crate::train::{train, TrainConfig, TrainReport};
 use anyhow::{anyhow, Result};
 use std::path::PathBuf;
@@ -25,6 +26,15 @@ pub struct TrainSpec {
     pub dataset: String,
     pub arch: Arch,
     pub engine: EngineKind,
+    /// Full-batch (default) or neighbor-sampled mini-batch training.
+    pub mode: RunMode,
+    /// Mini-batch fanout schedule (input-side first, 0 = full
+    /// neighborhood); expanded to the layer count.
+    pub fanouts: Vec<usize>,
+    /// Mini-batch seed-node count per optimizer step.
+    pub batch_size: usize,
+    /// Sample batch k+1 on a worker thread while batch k trains.
+    pub prefetch: bool,
     pub epochs: usize,
     pub optimizer: OptKind,
     pub lr: f32,
@@ -47,6 +57,10 @@ impl Default for TrainSpec {
             dataset: "corafull".to_string(),
             arch: Arch::Gcn,
             engine: EngineKind::Native,
+            mode: RunMode::Full,
+            fanouts: vec![10, 25],
+            batch_size: 512,
+            prefetch: true,
             epochs: 100,
             optimizer: OptKind::Adam,
             lr: 0.01,
@@ -87,6 +101,25 @@ pub fn build_engine(spec: &TrainSpec, ds: &Dataset) -> Result<Box<dyn Engine>> {
         lr: spec.lr,
         ..Default::default()
     };
+    if spec.mode == RunMode::Minibatch {
+        if spec.engine != EngineKind::Native {
+            return Err(anyhow!(
+                "--mode minibatch runs on the native kernels only (got --engine {})",
+                spec.engine.name()
+            ));
+        }
+        let mb = MiniBatchConfig {
+            batch_size: spec.batch_size,
+            fanouts: spec.fanouts.clone(),
+            prefetch: spec.prefetch,
+        };
+        let mut e = MiniBatchEngine::new(ds, &config, spec.optimizer, hp, mb, spec.seed)
+            .map_err(|e| anyhow!(e))?;
+        if let Some(t) = spec.threads {
+            e.set_threads(t);
+        }
+        return Ok(Box::new(e));
+    }
     Ok(match spec.engine {
         EngineKind::Native => {
             let mut e =
@@ -160,9 +193,15 @@ pub fn run(spec: &TrainSpec) -> Result<RunOutcome> {
     Ok(RunOutcome {
         engine_name: engine.name(),
         sparsity: decision.s,
-        mode: match decision.mode {
-            crate::engine::sparsity::ExecutionMode::Sparse => "sparse",
-            crate::engine::sparsity::ExecutionMode::Dense => "dense",
+        // The mini-batch path gathers dense feature rows per block; the
+        // sparse/dense split applies to the full-batch engines.
+        mode: if spec.mode == RunMode::Minibatch {
+            "minibatch"
+        } else {
+            match decision.mode {
+                crate::engine::sparsity::ExecutionMode::Sparse => "sparse",
+                crate::engine::sparsity::ExecutionMode::Dense => "dense",
+            }
         },
         peak_bytes: engine.peak_bytes(),
         report,
@@ -193,6 +232,35 @@ mod tests {
     fn unknown_dataset_errors() {
         let spec = TrainSpec {
             dataset: "nope".into(),
+            ..Default::default()
+        };
+        assert!(run(&spec).is_err());
+    }
+
+    #[test]
+    fn run_minibatch_on_small_dataset() {
+        let spec = TrainSpec {
+            dataset: "corafull".to_string(),
+            arch: Arch::SageMean,
+            mode: RunMode::Minibatch,
+            fanouts: vec![4, 4],
+            batch_size: 512,
+            epochs: 2,
+            ..Default::default()
+        };
+        let out = run(&spec).unwrap();
+        assert_eq!(out.engine_name, "morphling-minibatch");
+        assert_eq!(out.mode, "minibatch");
+        assert_eq!(out.report.epochs.len(), 2);
+        assert!(out.report.final_loss().is_finite());
+        assert!(out.peak_bytes > 0);
+    }
+
+    #[test]
+    fn minibatch_rejects_non_native_engines() {
+        let spec = TrainSpec {
+            mode: RunMode::Minibatch,
+            engine: EngineKind::NonFused,
             ..Default::default()
         };
         assert!(run(&spec).is_err());

@@ -71,6 +71,9 @@ pub enum EngineKind {
 }
 
 impl EngineKind {
+    /// Canonical CLI spellings, for `util::argparse::choice` error messages.
+    pub const VALID: &'static [&'static str] = &["native", "pyg", "dgl", "pjrt"];
+
     pub fn parse(s: &str) -> Option<EngineKind> {
         match s.to_ascii_lowercase().as_str() {
             "native" | "morphling" => Some(EngineKind::Native),
@@ -91,9 +94,46 @@ impl EngineKind {
     }
 }
 
+/// Which execution path drives the epoch loop: classic full-batch, or the
+/// neighbor-sampled mini-batch subsystem ([`crate::sampler`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RunMode {
+    /// Full-batch training (every engine).
+    Full,
+    /// Mini-batch neighbor-sampled training (native kernels only).
+    Minibatch,
+}
+
+impl RunMode {
+    /// Canonical CLI spellings, for `util::argparse::choice` error messages.
+    pub const VALID: &'static [&'static str] = &["full", "minibatch"];
+
+    pub fn parse(s: &str) -> Option<RunMode> {
+        match s.to_ascii_lowercase().as_str() {
+            "full" | "fullbatch" | "full-batch" => Some(RunMode::Full),
+            "minibatch" | "mini-batch" | "mb" => Some(RunMode::Minibatch),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            RunMode::Full => "full",
+            RunMode::Minibatch => "minibatch",
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn mode_parse() {
+        assert_eq!(RunMode::parse("full"), Some(RunMode::Full));
+        assert_eq!(RunMode::parse("Mini-Batch"), Some(RunMode::Minibatch));
+        assert_eq!(RunMode::parse("??"), None);
+    }
 
     #[test]
     fn kind_parse() {

@@ -104,6 +104,22 @@ pub fn spmm_tiled(g: &Graph, x: &Matrix, y: &mut Matrix) {
 /// a disjoint slice of `y`. Bitwise-identical to the serial kernel.
 pub fn spmm_tiled_ex(g: &Graph, x: &Matrix, y: &mut Matrix, pol: ExecPolicy) {
     assert_eq!(g.num_nodes, x.rows);
+    spmm_tiled_dispatch(g, x, y, pol);
+}
+
+/// `Y = B·X` for a **rectangular** block CSR `B`: `num_nodes` target rows
+/// whose column indices address rows of `x` (the mini-batch sampler's
+/// relabeled local src ids, `col_idx[e] < x.rows`). Same tiled body, same
+/// edge-balanced row fan-out, same bitwise guarantee as [`spmm_tiled_ex`];
+/// only the square-shape assertion is relaxed. The structural invariant is
+/// upheld by `sampler::extract` (every local id is minted below `n_src`).
+pub fn spmm_block_ex(g: &Graph, x: &Matrix, y: &mut Matrix, pol: ExecPolicy) {
+    debug_assert!(g.col_idx.iter().all(|&v| (v as usize) < x.rows));
+    spmm_tiled_dispatch(g, x, y, pol);
+}
+
+/// Shape-agnostic dispatch shared by the square and block entry points.
+fn spmm_tiled_dispatch(g: &Graph, x: &Matrix, y: &mut Matrix, pol: ExecPolicy) {
     assert_eq!(y.rows, g.num_nodes);
     assert_eq!(y.cols, x.cols);
     if pol.is_serial() {
@@ -231,6 +247,27 @@ pub fn spmm_max(g: &Graph, x: &Matrix, y: &mut Matrix, argmax: &mut [u32]) {
 /// slices of both.
 pub fn spmm_max_ex(g: &Graph, x: &Matrix, y: &mut Matrix, argmax: &mut [u32], pol: ExecPolicy) {
     assert_eq!(g.num_nodes, x.rows);
+    spmm_max_dispatch(g, x, y, argmax, pol);
+}
+
+/// Rectangular-block variant of [`spmm_max_ex`] (see [`spmm_block_ex`] for
+/// the shape contract): `argmax` records **local** src row ids, which the
+/// mini-batch backward scatters through directly.
+pub fn spmm_max_block_ex(
+    g: &Graph,
+    x: &Matrix,
+    y: &mut Matrix,
+    argmax: &mut [u32],
+    pol: ExecPolicy,
+) {
+    debug_assert!(g.col_idx.iter().all(|&v| (v as usize) < x.rows));
+    spmm_max_dispatch(g, x, y, argmax, pol);
+}
+
+/// Shape-agnostic dispatch shared by the square and block max entries.
+fn spmm_max_dispatch(g: &Graph, x: &Matrix, y: &mut Matrix, argmax: &mut [u32], pol: ExecPolicy) {
+    assert_eq!(y.rows, g.num_nodes);
+    assert_eq!(y.cols, x.cols);
     assert_eq!(argmax.len(), y.rows * y.cols);
     if pol.is_serial() || y.data.len() < PAR_MIN_ELEMS {
         spmm_max_rows(g, x, 0..g.num_nodes, &mut y.data, argmax);
@@ -399,6 +436,34 @@ mod tests {
             assert_eq!(y1.data, y2.data, "threads={t}");
             assert_eq!(am1, am2, "threads={t}");
         }
+    }
+
+    #[test]
+    fn rect_block_spmm_matches_dense_reference() {
+        // Rectangular block: 2 dst rows over 3 local src rows (the
+        // mini-batch sampler's shape) — weighted, max, and threaded paths.
+        let g = Graph {
+            num_nodes: 2,
+            row_ptr: vec![0, 2, 3],
+            col_idx: vec![0, 2, 1],
+            weights: vec![0.5, 1.0, 2.0],
+        };
+        let x = Matrix::from_vec(3, 2, vec![1., 2., 3., 4., 5., 6.]);
+        let mut y = Matrix::zeros(2, 2);
+        spmm_block_ex(&g, &x, &mut y, ExecPolicy::serial());
+        // row0 = 0.5·x0 + 1.0·x2 ; row1 = 2·x1
+        assert_eq!(y.row(0), &[5.5, 7.0]);
+        assert_eq!(y.row(1), &[6.0, 8.0]);
+        let mut y2 = Matrix::zeros(2, 2);
+        spmm_block_ex(&g, &x, &mut y2, ExecPolicy::with_threads(4));
+        assert_eq!(y.data, y2.data);
+
+        let mut m = Matrix::zeros(2, 2);
+        let mut am = vec![0u32; 4];
+        spmm_max_block_ex(&g, &x, &mut m, &mut am, ExecPolicy::serial());
+        assert_eq!(m.row(0), &[5.0, 6.0]); // max(x0, x2) elementwise
+        assert_eq!(&am[0..2], &[2, 2]);
+        assert_eq!(m.row(1), &[3.0, 4.0]);
     }
 
     #[test]

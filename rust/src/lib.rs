@@ -34,6 +34,7 @@ pub mod tensor;
 pub mod graph;
 pub mod kernels;
 pub mod engine;
+pub mod sampler;
 pub mod model;
 pub mod optim;
 pub mod train;

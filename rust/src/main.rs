@@ -16,13 +16,13 @@ use morphling::coordinator::{run, TrainSpec};
 use morphling::dist::runtime::{train_distributed, DistConfig, PartitionerKind};
 use morphling::dist::NetworkModel;
 use morphling::engine::sparsity::calibrate_gamma_ex;
-use morphling::engine::EngineKind;
+use morphling::engine::{EngineKind, RunMode};
 use morphling::kernels::parallel::ExecPolicy;
 use morphling::graph::datasets;
 use morphling::model::Arch;
 use morphling::optim::OptKind;
 use morphling::partition::{hierarchical_partition, quality};
-use morphling::util::argparse::Args;
+use morphling::util::argparse::{choice, usize_list, Args};
 use morphling::util::table::{fmt_bytes, fmt_secs, Table};
 
 fn cmd_info() {
@@ -76,12 +76,34 @@ fn cmd_shapes(args: &Args) -> Result<()> {
 fn cmd_train(args: &Args) -> Result<()> {
     let spec = TrainSpec {
         dataset: args.get_or("dataset", "corafull").to_string(),
-        arch: Arch::parse(args.get_or("arch", "gcn")).ok_or_else(|| anyhow!("bad --arch"))?,
-        engine: EngineKind::parse(args.get_or("engine", "native"))
-            .ok_or_else(|| anyhow!("bad --engine (native|pyg|dgl|pjrt)"))?,
+        arch: choice("arch", args.get_or("arch", "gcn"), Arch::parse, Arch::VALID)
+            .map_err(anyhow::Error::msg)?,
+        engine: choice(
+            "engine",
+            args.get_or("engine", "native"),
+            EngineKind::parse,
+            EngineKind::VALID,
+        )
+        .map_err(anyhow::Error::msg)?,
+        mode: choice(
+            "mode",
+            args.get_or("mode", "full"),
+            RunMode::parse,
+            RunMode::VALID,
+        )
+        .map_err(anyhow::Error::msg)?,
+        fanouts: usize_list("fanouts", args.get_or("fanouts", "10,25"))
+            .map_err(anyhow::Error::msg)?,
+        batch_size: args.usize_or("batch-size", 512),
+        prefetch: !args.flag("no-prefetch"),
         epochs: args.usize_or("epochs", 100),
-        optimizer: OptKind::parse(args.get_or("optimizer", "adam"))
-            .ok_or_else(|| anyhow!("bad --optimizer"))?,
+        optimizer: choice(
+            "optimizer",
+            args.get_or("optimizer", "adam"),
+            OptKind::parse,
+            OptKind::VALID,
+        )
+        .map_err(anyhow::Error::msg)?,
         lr: args.f32_or("lr", 0.01),
         tau: args.get("tau").and_then(|v| v.parse().ok()),
         calibrate: args.flag("calibrate"),
@@ -95,6 +117,14 @@ fn cmd_train(args: &Args) -> Result<()> {
         "\n{} on {} [{} path, s={:.3}]",
         out.engine_name, spec.dataset, out.mode, out.sparsity
     );
+    if spec.mode == RunMode::Minibatch {
+        println!(
+            "minibatch: batch size {}, fanouts {:?} (0 = full neighborhood), prefetch {}",
+            spec.batch_size,
+            spec.fanouts,
+            if spec.prefetch { "on" } else { "off" },
+        );
+    }
     println!(
         "epochs {}  final loss {:.4}  test acc {:.3}  sustained epoch {}  peak mem {}",
         spec.epochs,
@@ -204,6 +234,8 @@ fn main() -> Result<()> {
             eprintln!(
                 "usage: morphling <info|shapes|train|partition|dist|calibrate> [--flags]\n\
                  train:     --dataset corafull --engine native|pyg|dgl|pjrt --arch gcn|sage|sage-max|gin --epochs 100 [--threads N]\n\
+                 \u{20}          --mode full|minibatch [--batch-size 512] [--fanouts 10,25] [--no-prefetch]\n\
+                 \u{20}          (minibatch: native engine; fanout 0 = full neighborhood)\n\
                  partition: --dataset corafull --k 4\n\
                  dist:      --dataset corafull --world 4 [--blocking] [--chunk] [--network infiniband|ethernet|ideal]\n\
                  calibrate: [--threads N] [--seed 7]\n\

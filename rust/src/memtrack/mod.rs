@@ -14,6 +14,28 @@ pub mod alloc;
 
 pub use alloc::{live_bytes, peak_bytes, reset_peak, TrackingAlloc};
 
+/// Scoped high-water measurement: resets the peak at construction and
+/// reports allocation growth above the live baseline — the per-engine
+/// region pattern the memory benches use (Table III isolates one engine's
+/// epoch at a time; without the baseline subtraction the shared dataset
+/// buffers would drown the engine deltas).
+pub struct PeakRegion {
+    base: usize,
+}
+
+impl PeakRegion {
+    /// Start a region at the current live level.
+    pub fn start() -> PeakRegion {
+        reset_peak();
+        PeakRegion { base: live_bytes() }
+    }
+
+    /// High-water allocation bytes above the region's baseline so far.
+    pub fn bytes(&self) -> usize {
+        peak_bytes().saturating_sub(self.base)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -30,5 +52,15 @@ mod tests {
         assert!(after_live >= before_live);
         let _ = peak_bytes();
         reset_peak();
+    }
+
+    #[test]
+    fn peak_region_reports_monotone_bytes() {
+        // Without the tracking allocator installed the counters stay 0;
+        // either way the region must be non-panicking and monotone.
+        let r = PeakRegion::start();
+        let first = r.bytes();
+        let _v: Vec<u8> = Vec::with_capacity(1 << 16);
+        assert!(r.bytes() >= first);
     }
 }

@@ -24,6 +24,9 @@ pub enum Arch {
 }
 
 impl Arch {
+    /// Canonical CLI spellings, for `util::argparse::choice` error messages.
+    pub const VALID: &'static [&'static str] = &["gcn", "sage", "sage-max", "gin"];
+
     pub fn parse(s: &str) -> Option<Arch> {
         match s.to_ascii_lowercase().as_str() {
             "gcn" => Some(Arch::Gcn),

@@ -15,6 +15,9 @@ pub enum OptKind {
 }
 
 impl OptKind {
+    /// Canonical CLI spellings, for `util::argparse::choice` error messages.
+    pub const VALID: &'static [&'static str] = &["sgd", "adam", "adamw"];
+
     pub fn parse(s: &str) -> Option<OptKind> {
         match s.to_ascii_lowercase().as_str() {
             "sgd" => Some(OptKind::Sgd),

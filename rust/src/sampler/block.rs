@@ -1,0 +1,78 @@
+//! Sampled-block data structures — the mini-batch analogue of the full
+//! graph's CSR operand.
+//!
+//! A [`Block`] is one layer's message-flow graph: a **rectangular** CSR with
+//! `n_dst` target rows whose column indices are *local* src ids (< `n_src`),
+//! produced by the fused extraction pass in [`super::extract`]. The local id
+//! space is laid out so that `src_nodes[0..n_dst]` **are** the dst nodes in
+//! order — the self-path of SAGE/GIN-style layers is then simply the first
+//! `n_dst` rows of the layer input, a contiguous prefix, no gather needed.
+//!
+//! A [`MiniBatch`] stacks one block per model layer (input-side first, so
+//! `blocks[0]` consumes the gathered features) plus the gathered input
+//! features and the seed labels. By construction the dst set of `blocks[l]`
+//! *is* the src set of `blocks[l+1]`, so layer outputs flow into the next
+//! layer without any re-indexing.
+
+use crate::graph::Graph;
+use crate::tensor::Matrix;
+
+/// One layer's sampled message-flow graph (see module docs).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Block {
+    /// Rectangular CSR: `adj.num_nodes == n_dst` rows, `col_idx[e] < n_src`
+    /// local src ids, weights already normalized per the sampling rule.
+    pub adj: Graph,
+    /// Pre-transposed block (`n_src` rows, cols < `n_dst`) — the backward
+    /// aggregation runs the *forward* kernel on this, so every worker owns
+    /// its gradient rows (the same conflict-free strategy as the full-batch
+    /// engine's `agg_t`).
+    pub adj_t: Graph,
+    pub n_dst: usize,
+    pub n_src: usize,
+    /// Global node id per local src row; the first `n_dst` entries are the
+    /// dst nodes in order.
+    pub src_nodes: Vec<u32>,
+}
+
+impl Block {
+    /// Sampled edges in this block.
+    pub fn num_edges(&self) -> usize {
+        self.adj.num_edges()
+    }
+
+    /// Byte footprint (both CSR copies + the id map).
+    pub fn nbytes(&self) -> usize {
+        self.adj.nbytes() + self.adj_t.nbytes() + self.src_nodes.len() * 4
+    }
+}
+
+/// A fully extracted mini-batch: layered blocks + gathered inputs + labels.
+#[derive(Clone, Debug)]
+pub struct MiniBatch {
+    /// One block per model layer, input-side first.
+    pub blocks: Vec<Block>,
+    /// Gathered input features: `blocks[0].n_src × F`.
+    pub x0: Matrix,
+    /// Seed (output) nodes — global ids, `blocks.last().n_dst` of them.
+    pub seeds: Vec<u32>,
+    /// Labels of the seed nodes, parallel to `seeds`.
+    pub labels: Vec<u32>,
+}
+
+impl MiniBatch {
+    /// Total sampled edges across all layers (the sampling-throughput
+    /// numerator of the minibatch bench).
+    pub fn sampled_edges(&self) -> u64 {
+        self.blocks.iter().map(|b| b.num_edges() as u64).sum()
+    }
+
+    /// Byte footprint of the batch live-set (blocks + gathered features +
+    /// seed/label vectors) — feeds the engine's peak-bytes accounting.
+    pub fn nbytes(&self) -> usize {
+        self.blocks.iter().map(|b| b.nbytes()).sum::<usize>()
+            + self.x0.nbytes()
+            + self.seeds.len() * 4
+            + self.labels.len() * 4
+    }
+}

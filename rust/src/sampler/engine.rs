@@ -1,0 +1,585 @@
+//! The mini-batch training engine: neighbor-sampled SGD over
+//! [`MiniBatch`] blocks, reusing the native backend's `_ex` kernels on the
+//! relabeled block CSR.
+//!
+//! Each batch runs the same fused layer bodies as
+//! [`crate::engine::native::NativeEngine`] — `gemm` transform, rectangular
+//! block SpMM aggregation ([`crate::kernels::spmm::spmm_block_ex`]), fused
+//! bias/ReLU — and the backward aggregation runs the forward kernel on the
+//! pre-transposed block (`adj_t`), so gradients stay row-owned and
+//! atomics-free under threading, exactly like the full-batch path. Because
+//! `src_nodes[0..n_dst]` are the dst nodes, the SAGE self path reads a
+//! contiguous prefix of the layer input.
+//!
+//! Gradients land in the **shared** [`GnnParams`] buffers (the same layout
+//! every engine uses) and the optimizer steps once per batch — standard
+//! mini-batch semantics. With full-neighborhood fanouts and a single batch
+//! covering the train set, one epoch is mathematically identical to one
+//! full-batch epoch (pinned by `tests/minibatch.rs`).
+//!
+//! Peak-bytes accounting: the static live-set (params, optimizer state,
+//! sampling operand, resident features) plus the *high-water* of the
+//! per-**training**-batch live-set (blocks + gathered features + layer
+//! buffers, doubled when the prefetch pipeline holds a second batch in
+//! flight) — the Table-III-style training-loop number the memory bench
+//! compares against full-batch. Exact full-neighborhood evaluation is a
+//! separate graph-scale transient and deliberately excluded (see
+//! `run_batch`).
+
+use super::block::MiniBatch;
+use super::neighbor::{mix64, SampleCtx};
+use super::pipeline::run_batches;
+use crate::engine::{Engine, Mask};
+use crate::graph::Dataset;
+use crate::kernels::activations::{relu_backward_inplace_ex, relu_inplace_ex, softmax_xent};
+use crate::kernels::gemm::{add_bias_ex, col_sum, gemm_a_bt_ex, gemm_at_b_ex, gemm_ex};
+use crate::kernels::parallel::ExecPolicy;
+use crate::kernels::spmm::{spmm_block_ex, spmm_max_backward, spmm_max_block_ex};
+use crate::kernels::update::AdamParams;
+use crate::model::{Arch, GnnParams, ModelConfig};
+use crate::optim::{OptKind, Optimizer};
+use crate::tensor::Matrix;
+use crate::train::EpochStats;
+use crate::util::timer::PhaseTimes;
+use crate::util::Rng;
+use std::time::Instant;
+
+/// Mini-batch knobs (the `--batch-size` / `--fanouts` / prefetch plumbing).
+#[derive(Clone, Debug)]
+pub struct MiniBatchConfig {
+    pub batch_size: usize,
+    /// User fanout list; expanded to the layer count by
+    /// [`super::neighbor::expand_fanouts`] (0 = full neighborhood).
+    pub fanouts: Vec<usize>,
+    /// Sample batch k+1 on a worker thread while batch k trains.
+    pub prefetch: bool,
+}
+
+impl Default for MiniBatchConfig {
+    fn default() -> Self {
+        MiniBatchConfig {
+            batch_size: 512,
+            fanouts: vec![10, 25],
+            prefetch: true,
+        }
+    }
+}
+
+/// Mutable training half of the engine (split from the immutable
+/// [`SampleCtx`] so the epoch loop can borrow both disjointly — the
+/// prefetch worker reads the context while batches mutate this state).
+struct TrainState {
+    params: GnnParams,
+    opt: Optimizer,
+    arch: Arch,
+    dims: Vec<usize>,
+    batch_size: usize,
+    prefetch: bool,
+    seed: u64,
+    epoch: u64,
+    policy: ExecPolicy,
+    /// All-true mask reused for every batch's loss (sized `batch_size`).
+    mask_all: Vec<bool>,
+    /// Sampled edges during the most recent training epoch.
+    sampled_edges: u64,
+    /// High-water of the per-batch live-set (see module docs).
+    ws_peak: usize,
+    /// Params + optimizer + sampling operand + resident features.
+    static_bytes: usize,
+}
+
+/// The mini-batch engine. See module docs.
+pub struct MiniBatchEngine {
+    ctx: SampleCtx,
+    st: TrainState,
+}
+
+impl MiniBatchEngine {
+    /// Construct over a dataset. Errors on unsupported architectures (GIN)
+    /// or malformed fanout lists.
+    pub fn new(
+        ds: &Dataset,
+        config: &ModelConfig,
+        opt: OptKind,
+        hp: AdamParams,
+        mb: MiniBatchConfig,
+        seed: u64,
+    ) -> Result<MiniBatchEngine, String> {
+        let mut rng = Rng::new(seed);
+        let mut params = GnnParams::init(config, &mut rng);
+        let optimizer = Optimizer::new(opt, hp, &mut params);
+        let policy = ExecPolicy::from_env();
+        let ctx = SampleCtx::for_arch(
+            config.arch,
+            ds,
+            &mb.fanouts,
+            config.num_layers(),
+            seed,
+            policy,
+        )?;
+        let batch_size = mb.batch_size.max(1);
+        let static_bytes =
+            params.nbytes() + optimizer.nbytes() + ctx.agg.nbytes() + ds.features.nbytes();
+        Ok(MiniBatchEngine {
+            ctx,
+            st: TrainState {
+                params,
+                opt: optimizer,
+                arch: config.arch,
+                dims: config.dims.clone(),
+                batch_size,
+                prefetch: mb.prefetch,
+                seed,
+                epoch: 0,
+                policy,
+                mask_all: vec![true; batch_size],
+                sampled_edges: 0,
+                ws_peak: 0,
+                static_bytes,
+            },
+        })
+    }
+
+    /// Paper-default model/optimizer with the given mini-batch knobs.
+    pub fn paper_default(
+        ds: &Dataset,
+        arch: Arch,
+        mb: MiniBatchConfig,
+        seed: u64,
+    ) -> Result<MiniBatchEngine, String> {
+        let config = ModelConfig::paper_default(arch, ds.spec.features, ds.spec.classes);
+        MiniBatchEngine::new(ds, &config, OptKind::Adam, AdamParams::default(), mb, seed)
+    }
+
+    /// Builder-style thread-count override (`threads = 1` = serial).
+    pub fn with_threads(mut self, threads: usize) -> MiniBatchEngine {
+        self.set_threads(threads);
+        self
+    }
+
+    /// Override the kernel + gather execution policy.
+    pub fn set_threads(&mut self, threads: usize) {
+        let pol = ExecPolicy::with_threads(threads);
+        self.st.policy = pol;
+        self.ctx.policy = pol;
+    }
+
+    /// Trained parameters (bit-compared by the determinism tests).
+    pub fn params(&self) -> &GnnParams {
+        &self.st.params
+    }
+
+    /// The sampling context (fanout schedule, operand, weight rule).
+    pub fn sample_ctx(&self) -> &SampleCtx {
+        &self.ctx
+    }
+
+    /// Edges sampled during the most recent training epoch.
+    pub fn sampled_edges_last_epoch(&self) -> u64 {
+        self.st.sampled_edges
+    }
+}
+
+impl TrainState {
+    /// Forward (+ loss; + backward and optimizer step when `train`) over
+    /// one sampled batch. `pipelined` says whether the prefetch worker held
+    /// a second batch in flight while this one ran (peak accounting).
+    /// Returns `(mean_loss, accuracy, batch_nodes)`.
+    fn run_batch(
+        &mut self,
+        mb: &MiniBatch,
+        train: bool,
+        pipelined: bool,
+        phases: &mut PhaseTimes,
+    ) -> (f64, f64, usize) {
+        let nl = self.dims.len() - 1;
+        let pol = self.policy;
+        let arch = self.arch;
+        // Per-batch live-set accounting (block shapes vary batch to batch,
+        // so buffers are sized per batch; the allocator reuses freed runs).
+        let mut batch_bytes = mb.nbytes();
+        let alloc = |rows: usize, cols: usize, bytes: &mut usize| {
+            *bytes += rows * cols * 4;
+            Matrix::zeros(rows, cols)
+        };
+        if train {
+            self.params.zero_grads();
+        }
+
+        // ---- forward ----
+        let t = Instant::now();
+        // Saved per layer for the backward: post-activation outputs, SAGE
+        // self-path inputs (dst prefix), max-agg outputs + argmax.
+        let mut h: Vec<Matrix> = Vec::with_capacity(nl);
+        let mut xd: Vec<Matrix> = Vec::with_capacity(nl);
+        let mut magg: Vec<Matrix> = Vec::with_capacity(nl);
+        let mut amax: Vec<Vec<u32>> = Vec::with_capacity(nl);
+        for l in 0..nl {
+            let blk = &mb.blocks[l];
+            let (din, dout) = (self.dims[l], self.dims[l + 1]);
+            let is_last = l + 1 == nl;
+            let x_in: &Matrix = if l == 0 { &mb.x0 } else { &h[l - 1] };
+            debug_assert_eq!(x_in.rows, blk.n_src);
+            // SAGE self path: dst rows are the contiguous prefix of x_in.
+            let xdl = if arch.has_self_weight() {
+                batch_bytes += blk.n_dst * din * 4;
+                Matrix::from_vec(blk.n_dst, din, x_in.data[..blk.n_dst * din].to_vec())
+            } else {
+                Matrix::zeros(0, 0)
+            };
+            let mut hl;
+            match arch {
+                Arch::Gcn => {
+                    // z = X·W ; h = B·z ; h += b ; relu
+                    let mut z = alloc(blk.n_src, dout, &mut batch_bytes);
+                    gemm_ex(x_in, &self.params.layers[l].w, &mut z, pol);
+                    hl = alloc(blk.n_dst, dout, &mut batch_bytes);
+                    spmm_block_ex(&blk.adj, &z, &mut hl, pol);
+                }
+                Arch::SageMean => {
+                    // z = X·W ; h = B·z ; h += X_dst·W_self
+                    let mut z = alloc(blk.n_src, dout, &mut batch_bytes);
+                    gemm_ex(x_in, &self.params.layers[l].w, &mut z, pol);
+                    hl = alloc(blk.n_dst, dout, &mut batch_bytes);
+                    spmm_block_ex(&blk.adj, &z, &mut hl, pol);
+                    let mut zs = alloc(blk.n_dst, dout, &mut batch_bytes);
+                    gemm_ex(&xdl, self.params.layers[l].w_self.as_ref().unwrap(), &mut zs, pol);
+                    for (hv, zv) in hl.data.iter_mut().zip(&zs.data) {
+                        *hv += zv;
+                    }
+                }
+                Arch::SageMax => {
+                    // m = maxagg(X) ; h = X_dst·W_self + m·W
+                    let mut ml = alloc(blk.n_dst, din, &mut batch_bytes);
+                    let mut am = vec![0u32; blk.n_dst * din];
+                    batch_bytes += am.len() * 4;
+                    spmm_max_block_ex(&blk.adj, x_in, &mut ml, &mut am, pol);
+                    let mut z = alloc(blk.n_dst, dout, &mut batch_bytes);
+                    gemm_ex(&ml, &self.params.layers[l].w, &mut z, pol);
+                    hl = alloc(blk.n_dst, dout, &mut batch_bytes);
+                    gemm_ex(&xdl, self.params.layers[l].w_self.as_ref().unwrap(), &mut hl, pol);
+                    for (hv, zv) in hl.data.iter_mut().zip(&z.data) {
+                        *hv += zv;
+                    }
+                    magg.push(ml);
+                    amax.push(am);
+                }
+                Arch::Gin => unreachable!("rejected at construction"),
+            }
+            add_bias_ex(&mut hl, &self.params.layers[l].b, pol);
+            if !is_last {
+                relu_inplace_ex(&mut hl, pol);
+            }
+            h.push(hl);
+            xd.push(xdl);
+        }
+        phases.add("forward", t.elapsed().as_secs_f64());
+
+        // ---- loss ----
+        let b = mb.seeds.len();
+        let classes = self.dims[nl];
+        let mut g_last = train.then(|| alloc(b, classes, &mut batch_bytes));
+        let (loss, acc, n) = phases.time("loss", || {
+            softmax_xent(&h[nl - 1], &mb.labels, &self.mask_all[..b], g_last.as_mut())
+        });
+
+        // ---- backward + update ----
+        if let Some(g0) = g_last {
+            let t = Instant::now();
+            let mut g = g0;
+            for l in (0..nl).rev() {
+                let blk = &mb.blocks[l];
+                let (din, dout) = (self.dims[l], self.dims[l + 1]);
+                if l + 1 != nl {
+                    relu_backward_inplace_ex(&h[l], &mut g, pol);
+                }
+                col_sum(&g, &mut self.params.layers[l].db);
+                debug_assert_eq!((g.rows, g.cols), (blk.n_dst, dout));
+                match arch {
+                    Arch::Gcn => {
+                        // gz = Bᵀ·g ; dW = Xᵀ·gz ; g_prev = gz·Wᵀ
+                        let mut gz = alloc(blk.n_src, dout, &mut batch_bytes);
+                        spmm_block_ex(&blk.adj_t, &g, &mut gz, pol);
+                        let x_in: &Matrix = if l == 0 { &mb.x0 } else { &h[l - 1] };
+                        let mut dw = std::mem::replace(
+                            &mut self.params.layers[l].dw,
+                            Matrix::zeros(0, 0),
+                        );
+                        gemm_at_b_ex(x_in, &gz, &mut dw, pol);
+                        self.params.layers[l].dw = dw;
+                        if l > 0 {
+                            let mut gprev = alloc(blk.n_src, din, &mut batch_bytes);
+                            gemm_a_bt_ex(&gz, &self.params.layers[l].w, &mut gprev, pol);
+                            g = gprev;
+                        }
+                    }
+                    Arch::SageMean => {
+                        // dW_self = X_dstᵀ·g ; gz = Bᵀ·g ; dW = Xᵀ·gz ;
+                        // g_prev = gz·Wᵀ (+ g·W_selfᵀ into the dst prefix)
+                        let mut dws = std::mem::replace(
+                            self.params.layers[l].dw_self.as_mut().unwrap(),
+                            Matrix::zeros(0, 0),
+                        );
+                        gemm_at_b_ex(&xd[l], &g, &mut dws, pol);
+                        self.params.layers[l].dw_self = Some(dws);
+                        let mut gz = alloc(blk.n_src, dout, &mut batch_bytes);
+                        spmm_block_ex(&blk.adj_t, &g, &mut gz, pol);
+                        let x_in: &Matrix = if l == 0 { &mb.x0 } else { &h[l - 1] };
+                        let mut dw = std::mem::replace(
+                            &mut self.params.layers[l].dw,
+                            Matrix::zeros(0, 0),
+                        );
+                        gemm_at_b_ex(x_in, &gz, &mut dw, pol);
+                        self.params.layers[l].dw = dw;
+                        if l > 0 {
+                            let mut gprev = alloc(blk.n_src, din, &mut batch_bytes);
+                            gemm_a_bt_ex(&gz, &self.params.layers[l].w, &mut gprev, pol);
+                            let mut ts = alloc(blk.n_dst, din, &mut batch_bytes);
+                            gemm_a_bt_ex(
+                                &g,
+                                self.params.layers[l].w_self.as_ref().unwrap(),
+                                &mut ts,
+                                pol,
+                            );
+                            for (gp, tv) in
+                                gprev.data[..blk.n_dst * din].iter_mut().zip(&ts.data)
+                            {
+                                *gp += tv;
+                            }
+                            g = gprev;
+                        }
+                    }
+                    Arch::SageMax => {
+                        // dW = mᵀ·g ; dW_self = X_dstᵀ·g ;
+                        // g_prev = max_bwd(g·Wᵀ) + g·W_selfᵀ (dst prefix)
+                        gemm_at_b_ex(&magg[l], &g, &mut self.params.layers[l].dw, pol);
+                        let mut dws = std::mem::replace(
+                            self.params.layers[l].dw_self.as_mut().unwrap(),
+                            Matrix::zeros(0, 0),
+                        );
+                        gemm_at_b_ex(&xd[l], &g, &mut dws, pol);
+                        self.params.layers[l].dw_self = Some(dws);
+                        if l > 0 {
+                            let mut gm = alloc(blk.n_dst, din, &mut batch_bytes);
+                            gemm_a_bt_ex(&g, &self.params.layers[l].w, &mut gm, pol);
+                            let mut gprev = alloc(blk.n_src, din, &mut batch_bytes);
+                            spmm_max_backward(&gm, &amax[l], &mut gprev);
+                            let mut ts = alloc(blk.n_dst, din, &mut batch_bytes);
+                            gemm_a_bt_ex(
+                                &g,
+                                self.params.layers[l].w_self.as_ref().unwrap(),
+                                &mut ts,
+                                pol,
+                            );
+                            for (gp, tv) in
+                                gprev.data[..blk.n_dst * din].iter_mut().zip(&ts.data)
+                            {
+                                *gp += tv;
+                            }
+                            g = gprev;
+                        }
+                    }
+                    Arch::Gin => unreachable!("rejected at construction"),
+                }
+            }
+            phases.add("backward", t.elapsed().as_secs_f64());
+            phases.time("optimizer", || self.opt.step(&mut self.params));
+        }
+
+        // Double-buffered prefetch keeps (up to) a second batch in flight.
+        if pipelined {
+            batch_bytes += mb.nbytes();
+        }
+        // Only training batches feed the live-set model: `peak_bytes` is
+        // the Table-III training-loop number (matching the full-batch
+        // engines' analytic models). Exact full-neighborhood inference has
+        // its own graph-scale transient; bounding it via layer-wise shared
+        // inference is the ROADMAP follow-up.
+        if train {
+            self.ws_peak = self.ws_peak.max(batch_bytes);
+        }
+        (loss, acc, n)
+    }
+}
+
+impl Engine for MiniBatchEngine {
+    fn name(&self) -> &'static str {
+        "morphling-minibatch"
+    }
+
+    fn train_epoch(&mut self, ds: &Dataset) -> EpochStats {
+        let MiniBatchEngine { ctx, st } = self;
+        st.epoch += 1;
+        let epoch = st.epoch;
+        // Deterministic epoch shuffle (independent of threads/prefetch).
+        let mut seeds: Vec<u32> = (0..ds.spec.nodes)
+            .filter(|&u| ds.train_mask[u])
+            .map(|u| u as u32)
+            .collect();
+        Rng::new(mix64(st.seed ^ 0x5EED, epoch)).shuffle(&mut seeds);
+
+        let mut phases = PhaseTimes::new();
+        let (mut loss_sum, mut acc_sum, mut total) = (0.0f64, 0.0f64, 0usize);
+        let mut edges = 0u64;
+        // The pipeline only holds a second batch when there is more than
+        // one chunk (run_batches falls back to inline sampling otherwise).
+        let pipelined = st.prefetch && seeds.len() > st.batch_size;
+        let report = run_batches(
+            ctx,
+            &ds.features,
+            &ds.labels,
+            &seeds,
+            st.batch_size,
+            &ctx.fanouts,
+            epoch,
+            pipelined,
+            |mb| {
+                edges += mb.sampled_edges();
+                let (l, a, n) = st.run_batch(&mb, true, pipelined, &mut phases);
+                loss_sum += l * n as f64;
+                acc_sum += a * n as f64;
+                total += n;
+            },
+        );
+        phases.add("sample", report.exposed_sample_secs);
+        st.sampled_edges = edges;
+        let total = total.max(1);
+        EpochStats {
+            loss: loss_sum / total as f64,
+            train_acc: acc_sum / total as f64,
+            phases,
+        }
+    }
+
+    fn evaluate(&mut self, ds: &Dataset, mask: Mask) -> (f64, f64) {
+        let MiniBatchEngine { ctx, st } = self;
+        let seeds: Vec<u32> = mask
+            .select(ds)
+            .iter()
+            .enumerate()
+            .filter(|(_, &m)| m)
+            .map(|(u, _)| u as u32)
+            .collect();
+        if seeds.is_empty() {
+            return (0.0, 0.0);
+        }
+        // Exact inference: full neighborhoods regardless of the training
+        // fanout schedule. Full-fanout multi-hop blocks can approach the
+        // whole graph, so prefetch is forced OFF here — one evaluation
+        // batch lives at a time (layer-wise shared inference is the
+        // ROADMAP follow-up for bounding this further).
+        let full = vec![0usize; ctx.fanouts.len()];
+        let mut phases = PhaseTimes::new();
+        let (mut loss_sum, mut acc_sum, mut total) = (0.0f64, 0.0f64, 0usize);
+        run_batches(
+            ctx,
+            &ds.features,
+            &ds.labels,
+            &seeds,
+            st.batch_size,
+            &full,
+            st.epoch,
+            false,
+            |mb| {
+                let (l, a, n) = st.run_batch(&mb, false, false, &mut phases);
+                loss_sum += l * n as f64;
+                acc_sum += a * n as f64;
+                total += n;
+            },
+        );
+        let total = total.max(1);
+        (loss_sum / total as f64, acc_sum / total as f64)
+    }
+
+    fn peak_bytes(&self) -> usize {
+        self.st.static_bytes + self.st.ws_peak
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::datasets;
+    use crate::train::{train, TrainConfig};
+
+    fn tiny_dataset() -> Dataset {
+        let spec = crate::graph::DatasetSpec {
+            name: "tiny-mb",
+            real_nodes: 0,
+            real_edges: 0,
+            real_features: 0,
+            nodes: 220,
+            edges: 1400,
+            features: 40,
+            classes: 4,
+            feat_sparsity: 0.0,
+            gamma: 2.4,
+            components: 1,
+        };
+        datasets::load(&spec)
+    }
+
+    #[test]
+    fn sampled_training_converges_all_archs() {
+        let ds = tiny_dataset();
+        for arch in [Arch::Gcn, Arch::SageMean, Arch::SageMax] {
+            let cfg = MiniBatchConfig {
+                batch_size: 64,
+                fanouts: vec![4, 6],
+                prefetch: true,
+            };
+            let mut eng = MiniBatchEngine::paper_default(&ds, arch, cfg, 13).unwrap();
+            let report = train(
+                &mut eng,
+                &ds,
+                &TrainConfig {
+                    epochs: 25,
+                    eval_every: 0,
+                    log: false,
+                },
+            );
+            assert!(
+                report.final_loss() < report.epochs[0].loss,
+                "{}: {} -> {}",
+                arch.name(),
+                report.epochs[0].loss,
+                report.final_loss()
+            );
+            assert!(report.final_loss().is_finite());
+            assert!(eng.sampled_edges_last_epoch() > 0);
+            assert!(eng.peak_bytes() > 0);
+        }
+    }
+
+    #[test]
+    fn gin_rejected_at_construction() {
+        let ds = tiny_dataset();
+        assert!(
+            MiniBatchEngine::paper_default(&ds, Arch::Gin, MiniBatchConfig::default(), 1).is_err()
+        );
+    }
+
+    #[test]
+    fn evaluate_uses_full_neighborhood() {
+        let ds = tiny_dataset();
+        // Aggressive training fanout, but evaluation must be exact: two
+        // engines differing only in fanouts agree on evaluate().
+        let mk = |fanouts: Vec<usize>| {
+            MiniBatchEngine::paper_default(
+                &ds,
+                Arch::SageMean,
+                MiniBatchConfig {
+                    batch_size: 96,
+                    fanouts,
+                    prefetch: false,
+                },
+                21,
+            )
+            .unwrap()
+        };
+        let (l1, a1) = mk(vec![2, 2]).evaluate(&ds, Mask::Val);
+        let (l2, a2) = mk(vec![0]).evaluate(&ds, Mask::Val);
+        assert!((l1 - l2).abs() < 1e-9, "{l1} vs {l2}");
+        assert_eq!(a1, a2);
+    }
+}

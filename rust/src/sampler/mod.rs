@@ -1,0 +1,40 @@
+//! Mini-batch neighbor-sampled training — the scale-out execution path the
+//! full-batch engines cannot offer (graphs whose live-set exceeds memory
+//! train here at `O(batch live-set)` instead of `O(|V|·F)`).
+//!
+//! The subsystem is four pieces, each in its own module:
+//!
+//! - [`neighbor`] — a deterministic fanout sampler in the GraphSAGE
+//!   lineage: per-layer fanouts (`[10, 25]`-style, `0` = full
+//!   neighborhood), every dst node drawing from a private
+//!   `(seed, epoch, layer, node)`-keyed RNG so blocks are bitwise-identical
+//!   at any thread count and independent of batch composition;
+//! - [`extract`] — fused subgraph extraction: sample, relabel (generation-
+//!   stamped O(1) map), and emit the compact block CSR in one pass — no COO
+//!   intermediate, no `O(|E|·F)` message tensor — plus the pre-transposed
+//!   backward operand and a row-parallel feature gather under
+//!   [`crate::kernels::parallel::ExecPolicy`];
+//! - [`engine`] — [`engine::MiniBatchEngine`], an [`crate::engine::Engine`]
+//!   running SAGE-mean/max and GCN forward/backward over the relabeled
+//!   blocks by reusing the existing `spmm`/`gemm`/`activations` `_ex`
+//!   kernels, with exact gradient scatter into the shared
+//!   [`crate::model::GnnParams`];
+//! - [`pipeline`] — a double-buffered prefetch loop: batch *k+1* is
+//!   sampled on a worker thread while batch *k* trains, so sampling
+//!   overlaps compute and only the exposed wait is charged to the epoch.
+//!
+//! Invariants pinned by `tests/minibatch.rs`: bitwise determinism across
+//! thread counts and prefetch on/off, and exact equivalence to the
+//! full-batch [`crate::engine::native::NativeEngine`] at full-neighborhood
+//! fanouts.
+
+pub mod block;
+pub mod extract;
+pub mod neighbor;
+pub mod engine;
+pub mod pipeline;
+
+pub use block::{Block, MiniBatch};
+pub use engine::{MiniBatchConfig, MiniBatchEngine};
+pub use extract::SamplerScratch;
+pub use neighbor::{expand_fanouts, SampleCtx, WeightRule, FULL_NEIGHBORHOOD};

@@ -1,0 +1,272 @@
+//! Deterministic fanout neighbor sampling (the GraphSAGE lineage of the
+//! paper's "SAGE"/"Max" model family).
+//!
+//! Every dst node draws its sample from a private [`Rng`] seeded by
+//! `(run seed, epoch, layer, node id)` — never from a shared stream — so the
+//! sampled blocks are a pure function of that tuple: **bitwise-identical at
+//! any kernel thread count, with or without the prefetch pipeline, and
+//! independent of batch composition**. Fanout `0` means the full
+//! neighborhood (the exact-equivalence mode pinned by
+//! `tests/minibatch.rs`).
+//!
+//! Per-layer sampling operands and edge-weight rules are arch-specific
+//! ([`SampleCtx::for_arch`]):
+//!
+//! - **GCN** samples from the normalized `Â` (self-loops included) and
+//!   carries its weights scaled by `deg/k` — an unbiased estimator of the
+//!   full aggregation row that degenerates to the exact weights at full
+//!   fanout;
+//! - **SAGE-mean** samples the raw structure and weights each edge `1/k`
+//!   (the mean over *sampled* neighbors; `k = deg` at full fanout);
+//! - **SAGE-max** samples the raw structure; weights are unused by the max
+//!   aggregation.
+
+use super::block::MiniBatch;
+use super::extract::{extract_block, gather_rows_ex, SamplerScratch};
+use crate::graph::{Dataset, Graph};
+use crate::kernels::parallel::ExecPolicy;
+use crate::model::Arch;
+use crate::tensor::Matrix;
+use crate::util::Rng;
+
+/// Fanout value meaning "take the full neighborhood".
+pub const FULL_NEIGHBORHOOD: usize = 0;
+
+/// How sampled edges are weighted (see module docs).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum WeightRule {
+    /// Carry the operand's weight scaled by `deg/k` (GCN's Â estimator).
+    DegreeScaled,
+    /// Uniform `1/k` over the sampled neighbors (SAGE-mean).
+    MeanOfSampled,
+    /// Unit weights (max aggregation ignores them).
+    Unit,
+}
+
+/// Stateless 64-bit mixer for deriving per-(epoch, layer, node) seeds.
+#[inline]
+pub(crate) fn mix64(a: u64, b: u64) -> u64 {
+    let mut x = a ^ b.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+    x ^= x >> 33;
+    x = x.wrapping_mul(0xFF51_AFD7_ED55_8CCD);
+    x ^= x >> 33;
+    x
+}
+
+/// Choose the sampled edge offsets for one dst row: writes **ascending**
+/// absolute edge indices `start..start+deg` into `out` (all of them when
+/// `fanout` is [`FULL_NEIGHBORHOOD`] or the degree is small enough, else a
+/// `fanout`-sized uniform sample without replacement via partial
+/// Fisher–Yates over `idx`). Ascending order keeps the block row's
+/// accumulation order identical to the full-batch CSR row — the key to the
+/// full-fanout bitwise-equivalence property.
+pub(crate) fn sample_row(
+    rng: &mut Rng,
+    start: usize,
+    deg: usize,
+    fanout: usize,
+    idx: &mut Vec<u32>,
+    out: &mut Vec<u32>,
+) {
+    out.clear();
+    if fanout == FULL_NEIGHBORHOOD || deg <= fanout {
+        out.extend((start..start + deg).map(|e| e as u32));
+        return;
+    }
+    idx.clear();
+    idx.extend(0..deg as u32);
+    for i in 0..fanout {
+        let j = i + rng.below(deg - i);
+        idx.swap(i, j);
+    }
+    out.extend_from_slice(&idx[..fanout]);
+    out.sort_unstable();
+    for e in out.iter_mut() {
+        *e += start as u32;
+    }
+}
+
+/// The immutable sampling context shared by the training loop and the
+/// prefetch worker: the arch-specific aggregation operand, the per-layer
+/// fanout schedule, the weight rule, and the gather fan-out policy.
+#[derive(Clone, Debug)]
+pub struct SampleCtx {
+    /// Aggregation operand sampled from (arch-specific, see module docs).
+    pub agg: Graph,
+    pub rule: WeightRule,
+    /// Per-layer fanouts, input-side first, `len == num_layers`.
+    pub fanouts: Vec<usize>,
+    /// Base seed; combined with epoch/layer/node via [`mix64`].
+    pub seed: u64,
+    /// Row-blocked fan-out policy for the feature gather.
+    pub policy: ExecPolicy,
+}
+
+/// Expand a user fanout list to `layers` entries: a shorter list is padded
+/// on the *input* side with its first value (so `5,25` on a 3-layer model
+/// becomes `5,5,25` — the widest hop stays nearest the seeds, the DGL
+/// convention).
+pub fn expand_fanouts(fanouts: &[usize], layers: usize) -> Result<Vec<usize>, String> {
+    if fanouts.is_empty() {
+        return Err("--fanouts needs at least one value (0 = full neighborhood)".into());
+    }
+    if fanouts.len() > layers {
+        return Err(format!(
+            "{} fanouts given but the model has only {layers} layers",
+            fanouts.len()
+        ));
+    }
+    let mut out = vec![fanouts[0]; layers - fanouts.len()];
+    out.extend_from_slice(fanouts);
+    Ok(out)
+}
+
+impl SampleCtx {
+    /// Build the sampling context for an architecture. GIN has no sampled
+    /// formulation here (its sum aggregation is not closed under neighbor
+    /// subsampling without bias) and is rejected.
+    pub fn for_arch(
+        arch: Arch,
+        ds: &Dataset,
+        fanouts: &[usize],
+        layers: usize,
+        seed: u64,
+        policy: ExecPolicy,
+    ) -> Result<SampleCtx, String> {
+        let fanouts = expand_fanouts(fanouts, layers)?;
+        let (agg, rule) = match arch {
+            Arch::Gcn => (ds.graph.clone(), WeightRule::DegreeScaled),
+            Arch::SageMean => (ds.raw_graph.clone(), WeightRule::MeanOfSampled),
+            Arch::SageMax => (ds.raw_graph.clone(), WeightRule::Unit),
+            Arch::Gin => {
+                return Err("minibatch mode supports gcn|sage|sage-max (not gin)".into())
+            }
+        };
+        Ok(SampleCtx {
+            agg,
+            rule,
+            fanouts,
+            seed,
+            policy,
+        })
+    }
+
+    /// Sample and extract one mini-batch for `seeds`: layered blocks are
+    /// built top-down (the top block's dst rows are the seeds, each deeper
+    /// block's dst set is the previous block's src set), then the input
+    /// features of the innermost src set are gathered row-parallel. `salt`
+    /// carries the epoch component of the per-node key; the context's base
+    /// seed is folded in here, completing the `(seed, epoch, layer, node)`
+    /// derivation. `fanouts` overrides the schedule (the evaluator passes
+    /// all-zeros for exact full-neighborhood inference).
+    pub fn sample_batch(
+        &self,
+        scratch: &mut SamplerScratch,
+        feats: &Matrix,
+        labels: &[u32],
+        seeds: &[u32],
+        salt: u64,
+        fanouts: &[usize],
+    ) -> MiniBatch {
+        let salt = mix64(self.seed, salt);
+        let layers = fanouts.len();
+        let mut blocks = Vec::with_capacity(layers);
+        for l in (0..layers).rev() {
+            let b = {
+                let dst = blocks
+                    .first()
+                    .map(|b: &super::block::Block| &b.src_nodes[..])
+                    .unwrap_or(seeds);
+                extract_block(
+                    &self.agg,
+                    self.rule,
+                    dst,
+                    fanouts[l],
+                    mix64(salt, 0xB10C ^ ((l as u64) << 32)),
+                    scratch,
+                )
+            };
+            blocks.insert(0, b);
+        }
+        let x0 = gather_rows_ex(feats, &blocks[0].src_nodes, self.policy);
+        let batch_labels = seeds.iter().map(|&s| labels[s as usize]).collect();
+        MiniBatch {
+            blocks,
+            x0,
+            seeds: seeds.to_vec(),
+            labels: batch_labels,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sample_row_full_and_partial() {
+        let mut rng = Rng::new(3);
+        let (mut idx, mut out) = (Vec::new(), Vec::new());
+        // full neighborhood: every edge, ascending
+        sample_row(&mut rng, 10, 4, FULL_NEIGHBORHOOD, &mut idx, &mut out);
+        assert_eq!(out, vec![10, 11, 12, 13]);
+        // deg <= fanout: also every edge
+        sample_row(&mut rng, 10, 4, 6, &mut idx, &mut out);
+        assert_eq!(out, vec![10, 11, 12, 13]);
+        // partial: k distinct ascending indices within the row
+        sample_row(&mut rng, 100, 50, 8, &mut idx, &mut out);
+        assert_eq!(out.len(), 8);
+        for w in out.windows(2) {
+            assert!(w[0] < w[1], "not strictly ascending: {out:?}");
+        }
+        assert!(out.iter().all(|&e| (100..150).contains(&e)));
+    }
+
+    #[test]
+    fn sample_row_deterministic_per_seed() {
+        let (mut idx, mut out1, mut out2) = (Vec::new(), Vec::new(), Vec::new());
+        let mut a = Rng::new(mix64(7, 42));
+        let mut b = Rng::new(mix64(7, 42));
+        sample_row(&mut a, 0, 30, 5, &mut idx, &mut out1);
+        sample_row(&mut b, 0, 30, 5, &mut idx, &mut out2);
+        assert_eq!(out1, out2);
+    }
+
+    #[test]
+    fn expand_fanouts_pads_input_side() {
+        assert_eq!(expand_fanouts(&[5, 25], 3).unwrap(), vec![5, 5, 25]);
+        assert_eq!(expand_fanouts(&[10], 3).unwrap(), vec![10, 10, 10]);
+        assert_eq!(expand_fanouts(&[1, 2, 3], 3).unwrap(), vec![1, 2, 3]);
+        assert!(expand_fanouts(&[], 3).is_err());
+        assert!(expand_fanouts(&[1, 2, 3, 4], 3).is_err());
+    }
+
+    #[test]
+    fn ctx_seed_changes_samples() {
+        let ds = crate::graph::datasets::load_by_name("corafull").unwrap();
+        let seeds: Vec<u32> = (0..64).collect();
+        let sample = |seed: u64| {
+            let ctx =
+                SampleCtx::for_arch(Arch::SageMean, &ds, &[3], 3, seed, ExecPolicy::serial())
+                    .unwrap();
+            let mut scratch = SamplerScratch::new(ds.spec.nodes);
+            ctx.sample_batch(&mut scratch, &ds.features, &ds.labels, &seeds, 1, &ctx.fanouts)
+        };
+        let (a, b) = (sample(1), sample(2));
+        assert_ne!(a.blocks, b.blocks, "ctx seed must affect sampling");
+    }
+
+    #[test]
+    fn gin_is_rejected() {
+        let ds = crate::graph::datasets::load_by_name("corafull").unwrap();
+        let err = SampleCtx::for_arch(
+            Arch::Gin,
+            &ds,
+            &[5],
+            3,
+            1,
+            ExecPolicy::serial(),
+        );
+        assert!(err.is_err());
+    }
+}

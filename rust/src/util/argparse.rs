@@ -72,6 +72,34 @@ impl Args {
     }
 }
 
+/// Parse a flag value against a closed set of choices, producing an error
+/// that names every valid value — the shared helper behind `--arch`,
+/// `--engine`, `--mode`, and `--optimizer` (whose parsers return a bare
+/// `None`, which used to surface as an unhelpful generic message).
+///
+/// `parse` is the domain parser (e.g. `Arch::parse`); `valid` its canonical
+/// spellings (e.g. `Arch::VALID`).
+pub fn choice<T>(
+    key: &str,
+    raw: &str,
+    parse: impl Fn(&str) -> Option<T>,
+    valid: &[&str],
+) -> Result<T, String> {
+    parse(raw).ok_or_else(|| format!("invalid --{key} '{raw}' (valid: {})", valid.join("|")))
+}
+
+/// Parse a comma-separated list of unsigned integers (`--fanouts 10,25`,
+/// `--threads 1,4`), with a descriptive error naming the offending entry.
+pub fn usize_list(key: &str, raw: &str) -> Result<Vec<usize>, String> {
+    raw.split(',')
+        .map(|t| {
+            let t = t.trim();
+            t.parse::<usize>()
+                .map_err(|_| format!("invalid --{key} entry '{t}' (expected e.g. 10,25)"))
+        })
+        .collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -102,5 +130,27 @@ mod tests {
         let a = parse(&["--fast", "run"]);
         // "--fast run": "run" doesn't start with --, so it's consumed as value.
         assert_eq!(a.get("fast"), Some("run"));
+    }
+
+    #[test]
+    fn choice_lists_valid_values() {
+        let parse_ab = |s: &str| match s {
+            "a" => Some(1),
+            "b" => Some(2),
+            _ => None,
+        };
+        assert_eq!(choice("mode", "a", parse_ab, &["a", "b"]), Ok(1));
+        let err = choice("mode", "zzz", parse_ab, &["a", "b"]).unwrap_err();
+        assert!(err.contains("--mode"), "{err}");
+        assert!(err.contains("zzz"), "{err}");
+        assert!(err.contains("a|b"), "{err}");
+    }
+
+    #[test]
+    fn usize_list_parses_and_errors() {
+        assert_eq!(usize_list("fanouts", "10, 25").unwrap(), vec![10, 25]);
+        assert_eq!(usize_list("fanouts", "0").unwrap(), vec![0]);
+        let err = usize_list("fanouts", "10,x").unwrap_err();
+        assert!(err.contains("--fanouts") && err.contains("'x'"), "{err}");
     }
 }

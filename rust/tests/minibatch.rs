@@ -1,0 +1,184 @@
+//! Mini-batch subsystem invariants (ISSUE 3 acceptance criteria):
+//!
+//! 1. **Sampling determinism** — same seed + fanouts ⇒ bit-identical
+//!    blocks at any kernel thread count, and full training runs are
+//!    bit-deterministic across thread counts and prefetch on/off;
+//! 2. **Full-batch equivalence** — with full-neighborhood fanouts and a
+//!    single batch covering the train set, the mini-batch engine matches
+//!    the full-batch `NativeEngine` (forward exactly, training within fp
+//!    tolerance);
+//! 3. **Memory win** — the mini-batch live-set stays below the full-batch
+//!    engine's on an ogbn-arxiv-class dataset.
+
+use morphling::engine::native::NativeEngine;
+use morphling::engine::sparsity::SparsityPolicy;
+use morphling::engine::{Engine, Mask};
+use morphling::graph::datasets;
+use morphling::kernels::parallel::ExecPolicy;
+use morphling::kernels::update::AdamParams;
+use morphling::model::{Arch, ModelConfig};
+use morphling::optim::OptKind;
+use morphling::sampler::{MiniBatchConfig, MiniBatchEngine, SampleCtx, SamplerScratch};
+
+fn tiny_spec() -> morphling::graph::DatasetSpec {
+    morphling::graph::DatasetSpec {
+        name: "tiny-mb-it",
+        real_nodes: 0,
+        real_edges: 0,
+        real_features: 0,
+        nodes: 260,
+        edges: 1800,
+        features: 48,
+        classes: 5,
+        feat_sparsity: 0.0, // dense: the full-batch reference stays on the dense path
+        gamma: 2.4,
+        components: 1,
+    }
+}
+
+/// Same seed + fanouts ⇒ identical blocks at any `threads` count (the
+/// gather fan-out is row-owned; sampling never touches a shared RNG).
+#[test]
+fn sampled_blocks_bitwise_identical_across_threads() {
+    let ds = datasets::load(&tiny_spec());
+    let seeds: Vec<u32> = (0..120u32).map(|i| i * 2).collect();
+    let reference = {
+        let ctx =
+            SampleCtx::for_arch(Arch::SageMean, &ds, &[3, 7], 3, 42, ExecPolicy::serial())
+                .unwrap();
+        let mut scratch = SamplerScratch::new(ds.spec.nodes);
+        ctx.sample_batch(&mut scratch, &ds.features, &ds.labels, &seeds, 9, &ctx.fanouts)
+    };
+    for t in [2usize, 4, 16] {
+        let ctx = SampleCtx::for_arch(
+            Arch::SageMean,
+            &ds,
+            &[3, 7],
+            3,
+            42,
+            ExecPolicy::with_threads(t),
+        )
+        .unwrap();
+        let mut scratch = SamplerScratch::new(ds.spec.nodes);
+        let mb =
+            ctx.sample_batch(&mut scratch, &ds.features, &ds.labels, &seeds, 9, &ctx.fanouts);
+        assert_eq!(reference.blocks, mb.blocks, "threads={t}");
+        assert_eq!(reference.x0.data, mb.x0.data, "threads={t}");
+        assert_eq!(reference.seeds, mb.seeds);
+        assert_eq!(reference.labels, mb.labels);
+    }
+}
+
+/// A full sampled training run (2 epochs) is bit-deterministic across
+/// thread counts and prefetch on/off: identical losses and weights.
+#[test]
+fn sampled_training_bit_deterministic() {
+    let ds = datasets::load(&tiny_spec());
+    let run = |threads: usize, prefetch: bool| {
+        let cfg = MiniBatchConfig {
+            batch_size: 64,
+            fanouts: vec![3, 5],
+            prefetch,
+        };
+        let mut eng = MiniBatchEngine::paper_default(&ds, Arch::SageMean, cfg, 7)
+            .unwrap()
+            .with_threads(threads);
+        let losses: Vec<f64> = (0..2).map(|_| eng.train_epoch(&ds).loss).collect();
+        let w0 = eng.params().layers[0].w.data.clone();
+        (losses, w0)
+    };
+    let (l_ref, w_ref) = run(1, true);
+    for (t, p) in [(4usize, true), (1, false), (4, false)] {
+        let (l, w) = run(t, p);
+        assert_eq!(l_ref, l, "losses diverged at threads={t} prefetch={p}");
+        assert_eq!(w_ref, w, "weights diverged at threads={t} prefetch={p}");
+    }
+}
+
+/// Full-neighborhood fanouts + one batch covering the train set ⇒ the
+/// mini-batch engine reproduces the full-batch NativeEngine: the initial
+/// forward exactly (same per-row kernel order), training within fp
+/// tolerance (the shuffled batch changes only reduction order).
+#[test]
+fn full_fanout_matches_full_batch_engine() {
+    let ds = datasets::load(&tiny_spec());
+    for arch in [Arch::Gcn, Arch::SageMean, Arch::SageMax] {
+        let config = ModelConfig::paper_default(arch, ds.spec.features, ds.spec.classes);
+        let mut full = NativeEngine::new(
+            &ds,
+            &config,
+            OptKind::Adam,
+            AdamParams::default(),
+            SparsityPolicy::from_tau(1.01), // dense reference
+            3,
+        );
+        let cfg = MiniBatchConfig {
+            batch_size: ds.spec.nodes, // one batch spans every train seed
+            fanouts: vec![0],          // full neighborhood at every layer
+            prefetch: true,
+        };
+        let mut mb = MiniBatchEngine::new(
+            &ds,
+            &config,
+            OptKind::Adam,
+            AdamParams::default(),
+            cfg,
+            3, // same seed ⇒ identical Xavier init
+        )
+        .unwrap();
+
+        // forward equivalence at initialization (identical params)
+        for mask in [Mask::Train, Mask::Val, Mask::Test] {
+            let (lf, af) = full.evaluate(&ds, mask);
+            let (lm, am) = mb.evaluate(&ds, mask);
+            assert!(
+                (lf - lm).abs() < 1e-9,
+                "{}: eval loss {lf} vs {lm}",
+                arch.name()
+            );
+            assert!((af - am).abs() < 1e-9, "{}: eval acc {af} vs {am}", arch.name());
+        }
+
+        // training equivalence over a few epochs
+        for e in 0..3 {
+            let sf = full.train_epoch(&ds);
+            let sm = mb.train_epoch(&ds);
+            assert!(
+                (sf.loss - sm.loss).abs() < 1e-3 * sf.loss.abs().max(1.0),
+                "{} epoch {e}: full {} vs minibatch {}",
+                arch.name(),
+                sf.loss,
+                sm.loss
+            );
+        }
+        let d = full.params.layers[0]
+            .w
+            .max_abs_diff(&mb.params().layers[0].w);
+        assert!(d < 1e-3, "{}: weight divergence {d}", arch.name());
+    }
+}
+
+/// Partial-fanout sampled training still converges on an ogbn-arxiv-class
+/// dataset, and the mini-batch live-set beats the full-batch engine's —
+/// the Table-III-style memory win the subsystem exists for.
+#[test]
+fn minibatch_peak_bytes_below_full_batch_on_arxiv_replica() {
+    let ds = datasets::load_by_name("ogbn-arxiv").unwrap();
+    let mut full = NativeEngine::paper_default(&ds, Arch::Gcn, 5);
+    full.train_epoch(&ds);
+    let cfg = MiniBatchConfig {
+        batch_size: 256,
+        fanouts: vec![5, 5],
+        prefetch: true,
+    };
+    let mut mb = MiniBatchEngine::paper_default(&ds, Arch::Gcn, cfg, 5).unwrap();
+    let first = mb.train_epoch(&ds).loss;
+    let second = mb.train_epoch(&ds).loss;
+    assert!(second < first, "sampled loss did not decrease: {first} -> {second}");
+    assert!(mb.sampled_edges_last_epoch() > 0);
+    let (pf, pm) = (full.peak_bytes(), mb.peak_bytes());
+    assert!(
+        pm < pf,
+        "minibatch live-set {pm} not below full-batch {pf}"
+    );
+}
