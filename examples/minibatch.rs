@@ -5,7 +5,10 @@
 //!    batch prefetch), loss curve + sampling throughput;
 //! 2. the full-batch comparison on the same dataset: epoch time and the
 //!    analytic peak live-set (the Table-III-style mini-batch memory win);
-//! 3. exact full-neighborhood evaluation on the test split.
+//! 3. exact full-neighborhood evaluation on the test split;
+//! 4. the historical-embedding cache (`--cache-staleness 2`): the same
+//!    schedule with the out-of-batch frontier served from the store —
+//!    sampled-edge reduction, hit-rate, and the static-store trade.
 //!
 //!     cargo run --release --example minibatch [-- --threads N]
 //!     cargo run --release --example minibatch -- --batch-size 256 --fanouts 5,5
@@ -33,6 +36,7 @@ fn main() -> anyhow::Result<()> {
         batch_size,
         fanouts: fanouts.clone(),
         prefetch: true,
+        cache: None,
     };
     let mut eng = MiniBatchEngine::paper_default(&ds, Arch::SageMean, cfg, 42)
         .map_err(anyhow::Error::msg)?;
@@ -40,7 +44,7 @@ fn main() -> anyhow::Result<()> {
         eng.set_threads(t);
     }
     println!(
-        "[1/3] SAGE-mean, batch {batch_size}, fanouts {:?} (expanded {:?}), prefetch on",
+        "[1/4] SAGE-mean, batch {batch_size}, fanouts {:?} (expanded {:?}), prefetch on",
         fanouts,
         eng.sample_ctx().fanouts
     );
@@ -80,7 +84,7 @@ fn main() -> anyhow::Result<()> {
     let t0 = std::time::Instant::now();
     full.train_epoch(&ds);
     let full_epoch = t0.elapsed().as_secs_f64();
-    println!("[2/3] full-batch comparison:");
+    println!("[2/4] full-batch comparison:");
     println!(
         "  full-batch epoch {}  peak live-set {}",
         fmt_secs(full_epoch),
@@ -95,8 +99,41 @@ fn main() -> anyhow::Result<()> {
 
     // --- 3. exact full-neighborhood evaluation ---
     let (loss, acc) = eng.evaluate(&ds, Mask::Test);
-    println!("[3/3] test split (full-neighborhood inference): loss {loss:.4} acc {acc:.3}");
+    println!("[3/4] test split (full-neighborhood inference): loss {loss:.4} acc {acc:.3}");
     anyhow::ensure!(loss.is_finite());
+
+    // --- 4. historical-embedding cache ---
+    let baseline_edges = eng.sampled_edges_last_epoch();
+    let cache_epochs = 4usize;
+    let cfg = MiniBatchConfig {
+        batch_size,
+        fanouts: fanouts.clone(),
+        prefetch: true,
+        cache: Some(2),
+    };
+    let mut cached = MiniBatchEngine::paper_default(&ds, Arch::SageMean, cfg, 42)
+        .map_err(anyhow::Error::msg)?;
+    if let Some(t) = threads {
+        cached.set_threads(t);
+    }
+    println!("\n[4/4] historical-embedding cache (staleness K=2), {cache_epochs} epochs:");
+    for _ in 0..cache_epochs {
+        cached.train_epoch(&ds);
+    }
+    let stats = cached.cache_stats_last_epoch().expect("cache is enabled");
+    println!(
+        "  sampled edges/epoch {} → {} ({:.2}x fewer)  hit-rate {:.1}%  mean staleness {:.2}",
+        baseline_edges,
+        cached.sampled_edges_last_epoch(),
+        baseline_edges as f64 / cached.sampled_edges_last_epoch().max(1) as f64,
+        stats.hit_rate() * 100.0,
+        stats.mean_staleness()
+    );
+    println!(
+        "  static store {} (epoch-stamped; K=0 would be bitwise-identical to leg 1)",
+        fmt_bytes(cached.cache_bytes())
+    );
+    anyhow::ensure!(cached.sampled_edges_last_epoch() <= baseline_edges);
     println!("\nminibatch subsystem: OK");
     Ok(())
 }

@@ -3,6 +3,9 @@
 //! it to the model's prediction τ = 1 − γ with the calibrated γ.
 //!
 //!     cargo bench --bench crossover
+//!     cargo bench --bench crossover -- --json crossover.json
+
+mod common;
 
 use morphling::engine::native::NativeEngine;
 use morphling::engine::sparsity::{calibrate_gamma, SparsityPolicy};
@@ -11,10 +14,12 @@ use morphling::graph::{datasets, DatasetSpec};
 use morphling::kernels::update::AdamParams;
 use morphling::model::{Arch, ModelConfig};
 use morphling::optim::OptKind;
+use morphling::util::argparse::Args;
 use morphling::util::table::{fmt_secs, Table};
 use morphling::util::timer::{bench_fn, median};
 
 fn main() {
+    let args = Args::from_env();
     let gamma = calibrate_gamma(7);
     let tau_pred = 1.0 - gamma;
     println!("=== Eq. 1 crossover: sparse path wins iff s > 1 − γ ===");
@@ -24,6 +29,8 @@ fn main() {
     let mut t = Table::new(vec!["s", "dense/epoch", "sparse/epoch", "speedup", "model:(γ/(1−s))"]);
     let mut crossover: Option<f64> = None;
     let mut prev: Option<(f64, f64)> = None;
+    // JSON records: (s, dense secs, sparse secs, speedup, model speedup)
+    let mut records: Vec<(f64, f64, f64, f64, f64)> = Vec::new();
     for &s in &sweep {
         let spec = DatasetSpec {
             name: "sweep",
@@ -45,6 +52,7 @@ fn main() {
         let (_, ss) = bench_fn(1, 5, || sparse.train_epoch(&ds));
         let (td, ts) = (median(&sd), median(&ss));
         let speedup = td / ts;
+        records.push((s, td, ts, speedup, gamma / (1.0 - s).max(1e-9)));
         t.row(vec![
             format!("{s:.2}"),
             fmt_secs(td),
@@ -70,5 +78,21 @@ fn main() {
             "\nempirical crossover at s ≈ {c:.3} vs predicted τ = {tau_pred:.3} (paper: s≈0.8–0.85)"
         ),
         None => println!("\nno crossover located in sweep range (check γ calibration)"),
+    }
+
+    if let Some(path) = args.get("json") {
+        let body: Vec<String> = records
+            .iter()
+            .map(|(s, td, ts, speedup, model)| {
+                format!(
+                    "{{\"sparsity\":{s:.3},\"dense_epoch_secs\":{td:.9},\
+                     \"sparse_epoch_secs\":{ts:.9},\"speedup\":{speedup:.4},\
+                     \"model_speedup\":{model:.4},\"gamma\":{gamma:.4},\
+                     \"tau_pred\":{tau_pred:.4},\"empirical_crossover\":{}}}",
+                    crossover.map_or("null".to_string(), |c| format!("{c:.4}"))
+                )
+            })
+            .collect();
+        common::write_json_records(path, &body);
     }
 }

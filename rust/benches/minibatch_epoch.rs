@@ -94,6 +94,7 @@ fn main() {
                 batch_size: b,
                 fanouts: fanouts.clone(),
                 prefetch: true,
+                cache: None,
             };
             let mut eng = MiniBatchEngine::paper_default(&ds, arch, cfg, 42)
                 .unwrap_or_else(|e| {

@@ -8,41 +8,80 @@
 //! - vertex-chunk as the no-partitioner control.
 //!
 //!     cargo bench --bench partition
+//!     cargo bench --bench partition -- --json partition.json
+
+mod common;
 
 use morphling::graph::generator::star_graph;
 use morphling::graph::{datasets, Graph};
 use morphling::partition::metis_like::{partition_kway, MetisOptions};
 use morphling::partition::phases::{component_partition, greedy_degree_partition};
 use morphling::partition::{chunk_partition, hierarchical_partition, quality, Partitioning};
+use morphling::util::argparse::Args;
 use morphling::util::table::{fmt_secs, Table};
 use std::time::Instant;
 
-fn assess_row(
-    t: &mut Table,
-    graph_name: &str,
-    strat: &str,
-    g: &Graph,
-    p: &Partitioning,
-    secs: f64,
-) {
-    let q = quality::assess(g, p);
-    t.row(vec![
-        graph_name.to_string(),
-        strat.to_string(),
-        fmt_secs(secs),
-        format!("{} ({:.1}%)", q.edge_cut, q.cut_ratio * 100.0),
-        format!("{:.3}", q.vertex_imbalance),
-        format!("{:.3}", q.compute_imbalance),
-        q.max_ghosts.to_string(),
-    ]);
+/// Render one (graph, strategy) assessment into the table and, for the
+/// `--json` trajectory, a record.
+struct Assess {
+    table: Table,
+    records: Vec<String>,
+    k: usize,
+}
+
+impl Assess {
+    fn row(&mut self, graph_name: &str, strat: &str, g: &Graph, p: &Partitioning, secs: f64) {
+        let q = quality::assess(g, p);
+        self.table.row(vec![
+            graph_name.to_string(),
+            strat.to_string(),
+            fmt_secs(secs),
+            format!("{} ({:.1}%)", q.edge_cut, q.cut_ratio * 100.0),
+            format!("{:.3}", q.vertex_imbalance),
+            format!("{:.3}", q.compute_imbalance),
+            q.max_ghosts.to_string(),
+        ]);
+        self.records.push(format!(
+            "{{\"graph\":\"{graph_name}\",\"strategy\":\"{strat}\",\"k\":{},\
+             \"secs\":{secs:.9},\"edge_cut\":{},\"cut_ratio\":{:.6},\
+             \"vertex_imbalance\":{:.6},\"compute_imbalance\":{:.6},\"max_ghosts\":{}}}",
+            self.k, q.edge_cut, q.cut_ratio, q.vertex_imbalance, q.compute_imbalance, q.max_ghosts
+        ));
+    }
+
+    /// A strategy that errored: the table shows the error, and the JSON
+    /// trajectory records it explicitly (an absent record would read as
+    /// "not run").
+    fn error_row(&mut self, graph_name: &str, strat: &str, secs: f64, err: &str) {
+        self.table.row(vec![
+            graph_name.to_string(),
+            strat.to_string(),
+            fmt_secs(secs),
+            err.to_string(),
+            "-".into(),
+            "-".into(),
+            "-".into(),
+        ]);
+        let escaped = err.replace('\\', "\\\\").replace('"', "\\\"");
+        self.records.push(format!(
+            "{{\"graph\":\"{graph_name}\",\"strategy\":\"{strat}\",\"k\":{},\
+             \"secs\":{secs:.9},\"error\":\"{escaped}\"}}",
+            self.k
+        ));
+    }
 }
 
 fn main() {
+    let args = Args::from_env();
     let k = 4;
     println!("=== Table I: partitioning strategies (k = {k}) ===\n");
-    let mut t = Table::new(vec![
-        "graph", "strategy", "time", "edge-cut", "v-imbal", "c-imbal", "max-ghosts",
-    ]);
+    let mut a = Assess {
+        table: Table::new(vec![
+            "graph", "strategy", "time", "edge-cut", "v-imbal", "c-imbal", "max-ghosts",
+        ]),
+        records: Vec::new(),
+        k,
+    };
 
     // connected power-law graphs (Phase I territory)
     for name in ["corafull", "yelp", "ogbn-products"] {
@@ -54,23 +93,17 @@ fn main() {
         ] {
             let t0 = Instant::now();
             match partition_kway(g, k, &opts) {
-                Ok(p) => assess_row(&mut t, name, strat, g, &p, t0.elapsed().as_secs_f64()),
-                Err(e) => t.row(vec![
-                    name.to_string(),
-                    strat.to_string(),
-                    fmt_secs(t0.elapsed().as_secs_f64()),
-                    format!("{e:?}"),
-                    "-".into(),
-                    "-".into(),
-                    "-".into(),
-                ]),
+                Ok(p) => a.row(name, strat, g, &p, t0.elapsed().as_secs_f64()),
+                // Failures must reach the --json trajectory too — an
+                // omitted record would be indistinguishable from "not run".
+                Err(e) => a.error_row(name, strat, t0.elapsed().as_secs_f64(), &format!("{e:?}")),
             }
         }
         let t0 = Instant::now();
         let p = greedy_degree_partition(g, k);
-        assess_row(&mut t, name, "greedy-degree", g, &p, t0.elapsed().as_secs_f64());
+        a.row(name, "greedy-degree", g, &p, t0.elapsed().as_secs_f64());
         let p = chunk_partition(g.num_nodes, k);
-        assess_row(&mut t, name, "vertex-chunk", g, &p, 0.0);
+        a.row(name, "vertex-chunk", g, &p, 0.0);
         eprintln!("  [{name}] done");
     }
 
@@ -80,12 +113,11 @@ fn main() {
         let g = &ds.raw_graph;
         let t0 = Instant::now();
         if let Some(p) = component_partition(g, k) {
-            assess_row(&mut t, "ppi(20 comps)", "component-bfd", g, &p, t0.elapsed().as_secs_f64());
+            a.row("ppi(20 comps)", "component-bfd", g, &p, t0.elapsed().as_secs_f64());
         }
         let t0 = Instant::now();
         let r = hierarchical_partition(g, k, 1);
-        assess_row(
-            &mut t,
+        a.row(
             "ppi(20 comps)",
             &format!("hierarchical→{}", r.strategy.name()),
             g,
@@ -99,13 +131,12 @@ fn main() {
         let g = star_graph(20_001);
         let t0 = Instant::now();
         let p = greedy_degree_partition(&g, k);
-        assess_row(&mut t, "star-20k", "greedy-degree", &g, &p, t0.elapsed().as_secs_f64());
+        a.row("star-20k", "greedy-degree", &g, &p, t0.elapsed().as_secs_f64());
         let p = chunk_partition(g.num_nodes, k);
-        assess_row(&mut t, "star-20k", "vertex-chunk", &g, &p, 0.0);
+        a.row("star-20k", "vertex-chunk", &g, &p, 0.0);
         let t0 = Instant::now();
         let r = hierarchical_partition(&g, k, 1);
-        assess_row(
-            &mut t,
+        a.row(
             "star-20k",
             &format!("hierarchical→{}", r.strategy.name()),
             &g,
@@ -114,6 +145,10 @@ fn main() {
         );
     }
 
-    print!("{}", t.render());
+    print!("{}", a.table.render());
     println!("\nexpected shape (Table I): metis-like minimizes edge-cut; greedy minimizes\ncompute imbalance at the cost of cut; component packing gets 0-cut when\ncomponents ≥ k; the hierarchical driver picks the right phase per input.");
+
+    if let Some(path) = args.get("json") {
+        common::write_json_records(path, &a.records);
+    }
 }

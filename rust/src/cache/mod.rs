@@ -1,0 +1,282 @@
+//! Historical-embedding cache — bounded-staleness activation reuse for the
+//! mini-batch sampler (the GNNAutoScale lineage; see ROADMAP "cached /
+//! historical embeddings").
+//!
+//! The sampled path's cost is dominated by the fanout recursion's fan-in:
+//! every out-of-batch frontier node at layer `l` forces a full sub-tree of
+//! sampling, gathering, and compute below it. [`HistCache`] breaks that
+//! recursion: it keeps a versioned per-layer store of every node's most
+//! recent layer outputs, and frontier nodes whose cached activation is
+//! *fresh enough* are served from the store instead of being expanded —
+//! the block extractor places them in a separate `cached` partition of the
+//! source set ([`crate::sampler::Block::n_live`]) and the engine stitches
+//! their rows into the layer input with
+//! [`crate::sampler::scatter_rows_ex`].
+//!
+//! **Exactness contract.** Freshness is *epoch-stamped*: a row written in
+//! epoch `w` may be served during epoch `e` iff `e − w ≤ K` where `K` is
+//! the staleness bound (`--cache-staleness`). Rows are only eligible from
+//! the epoch *after* they were written (`w < e`), so the serve/refresh
+//! schedule never depends on intra-epoch timing, and `K = 0` admits no row
+//! at all — the cache-on run is **bitwise identical** to the cache-off
+//! path (pinned by `tests/cache.rs`). Evaluation never consults the cache;
+//! reported val/test numbers stay exact.
+//!
+//! **Determinism under prefetch.** The sampler (possibly a prefetch worker
+//! thread) never reads the mutable store. At the start of each epoch the
+//! engine freezes a [`CacheGate`] — an immutable per-layer freshness
+//! bitmask — and pruning decisions are a pure function of that snapshot.
+//! Push-on-compute refreshes (`emb` rows + epoch stamps) happen only on
+//! the training thread, and become visible to sampling at the next epoch
+//! boundary. Blocks therefore stay bit-deterministic at any thread count
+//! and with prefetch on or off.
+//!
+//! **Gradients.** Cached rows are constants of the batch: the backward
+//! pass blocks gradient flow at them (the engine truncates the propagated
+//! gradient to the live prefix), exactly like GNNAutoScale's historical
+//! embeddings.
+//!
+//! **Memory.** The store is a static region — `O(|V| · Σ hidden)` bytes
+//! charged up front (`HistCache::nbytes`, folded into the engine's
+//! `peak_bytes` and the memory bench via
+//! [`crate::memtrack::PeakRegion::charge_static`]) — traded against a
+//! much smaller per-batch transient live-set and ≥2× fewer sampled edges
+//! per epoch (`benches/cache_epoch.rs`).
+
+use crate::kernels::parallel::ExecPolicy;
+use crate::sampler::scatter_rows_ex;
+use crate::tensor::Matrix;
+
+/// One cached layer level: every node's most recent output of model layer
+/// `level` plus the epoch it was written (0 = never).
+#[derive(Clone, Debug)]
+struct LevelHist {
+    emb: Matrix,
+    stamp: Vec<u32>,
+}
+
+/// Versioned per-layer historical activation store (module docs).
+///
+/// Level `l` holds layer-`l` *post-activation* outputs for all `N` nodes —
+/// the tensor consumed as layer `l+1`'s input. The top layer's logits are
+/// never consumed by another layer and are not stored.
+#[derive(Clone, Debug)]
+pub struct HistCache {
+    staleness: u64,
+    levels: Vec<LevelHist>,
+}
+
+impl HistCache {
+    /// Build an empty store. `hidden_dims[l]` is the width of layer `l`'s
+    /// output (`&config.dims[1..num_layers]` — everything except the input
+    /// features and the final logits).
+    pub fn new(num_nodes: usize, hidden_dims: &[usize], staleness: u64) -> HistCache {
+        HistCache {
+            staleness,
+            levels: hidden_dims
+                .iter()
+                .map(|&d| LevelHist {
+                    emb: Matrix::zeros(num_nodes, d),
+                    stamp: vec![0; num_nodes],
+                })
+                .collect(),
+        }
+    }
+
+    /// The staleness bound `K` (0 = exact, cache never serves).
+    pub fn staleness(&self) -> u64 {
+        self.staleness
+    }
+
+    /// Number of cached layer levels.
+    pub fn num_levels(&self) -> usize {
+        self.levels.len()
+    }
+
+    /// Freeze the freshness snapshot for `epoch`: level `l`, node `v` is
+    /// servable iff its row was written in one of the `K` *previous*
+    /// epochs (`0 < stamp < epoch` and `epoch − stamp ≤ K`). Computed once
+    /// per epoch on the training thread; the sampler reads only this.
+    pub fn gate(&self, epoch: u64) -> CacheGate {
+        let k = self.staleness;
+        CacheGate {
+            fresh: self
+                .levels
+                .iter()
+                .map(|lv| {
+                    lv.stamp
+                        .iter()
+                        .map(|&s| s > 0 && (s as u64) < epoch && epoch - s as u64 <= k)
+                        .collect()
+                })
+                .collect(),
+        }
+    }
+
+    /// Push-on-compute refresh: store the first `ids.len()` rows of `h`
+    /// (the block's live-computed dst rows) as level `level`'s entries for
+    /// those global ids, stamped with `epoch`.
+    pub fn push(&mut self, level: usize, ids: &[u32], h: &Matrix, epoch: u64) {
+        let lv = &mut self.levels[level];
+        debug_assert_eq!(h.cols, lv.emb.cols);
+        debug_assert!(ids.len() <= h.rows);
+        for (i, &g) in ids.iter().enumerate() {
+            lv.emb.row_mut(g as usize).copy_from_slice(h.row(i));
+            lv.stamp[g as usize] = epoch as u32;
+        }
+    }
+
+    /// Stitch cached rows into a layer input: scatter level `level`'s rows
+    /// for `ids` into `out` starting at `at_row` (row-parallel under
+    /// `pol`), returning the summed staleness (in epochs) of the served
+    /// rows — the numerator of the mean-staleness metric. A row re-pushed
+    /// earlier in the current epoch serves the refreshed value (staleness
+    /// 0); the gate only bounds staleness from above.
+    pub fn stitch(
+        &self,
+        level: usize,
+        ids: &[u32],
+        out: &mut Matrix,
+        at_row: usize,
+        epoch: u64,
+        pol: ExecPolicy,
+    ) -> u64 {
+        let lv = &self.levels[level];
+        scatter_rows_ex(out, at_row, &lv.emb, ids, pol);
+        ids.iter()
+            .map(|&g| epoch.saturating_sub(lv.stamp[g as usize] as u64))
+            .sum()
+    }
+
+    /// Byte footprint of the store (embedding tables + epoch stamps) —
+    /// the static region charged to the engine's live-set model.
+    pub fn nbytes(&self) -> usize {
+        self.levels
+            .iter()
+            .map(|lv| lv.emb.nbytes() + lv.stamp.len() * 4)
+            .sum()
+    }
+}
+
+/// Immutable per-epoch freshness snapshot (module docs): `level(l)[v]` ⇔
+/// node `v`'s level-`l` row may be served this epoch. Shared by reference
+/// with the prefetch worker; never mutated during an epoch.
+#[derive(Clone, Debug, Default)]
+pub struct CacheGate {
+    fresh: Vec<Vec<bool>>,
+}
+
+impl CacheGate {
+    /// Freshness bitmask for one cached level.
+    pub fn level(&self, level: usize) -> &[bool] {
+        &self.fresh[level]
+    }
+
+    /// Nodes servable at `level` (diagnostics).
+    pub fn fresh_count(&self, level: usize) -> usize {
+        self.fresh[level].iter().filter(|&&f| f).count()
+    }
+}
+
+/// Per-epoch cache effectiveness counters, accumulated by the engine and
+/// reported by `benches/cache_epoch.rs`.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CacheEpochStats {
+    /// Frontier nodes served from the cache.
+    pub hits: u64,
+    /// Frontier candidates (out-of-batch source nodes, hit or missed).
+    pub candidates: u64,
+    /// Summed staleness (epochs) of served rows.
+    pub staleness_sum: u64,
+}
+
+impl CacheEpochStats {
+    /// Fraction of frontier candidates served from the cache.
+    pub fn hit_rate(&self) -> f64 {
+        if self.candidates == 0 {
+            0.0
+        } else {
+            self.hits as f64 / self.candidates as f64
+        }
+    }
+
+    /// Mean staleness (epochs) of served rows; 0 when nothing was served.
+    pub fn mean_staleness(&self) -> f64 {
+        if self.hits == 0 {
+            0.0
+        } else {
+            self.staleness_sum as f64 / self.hits as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn filled(level_dims: &[usize], n: usize) -> HistCache {
+        HistCache::new(n, level_dims, 2)
+    }
+
+    #[test]
+    fn gate_respects_staleness_bound() {
+        let mut c = filled(&[4], 6);
+        // node 1 written epoch 1, node 2 epoch 3, node 3 never
+        let h = Matrix::zeros(2, 4);
+        c.push(0, &[1], &h, 1);
+        c.push(0, &[2], &h, 3);
+        // at epoch 4 with K=2: epochs 2..=3 are fresh
+        let g = c.gate(4);
+        assert!(!g.level(0)[1], "age 3 > K=2 must be re-sampled");
+        assert!(g.level(0)[2], "age 1 <= K=2 is servable");
+        assert!(!g.level(0)[3], "never-written row can't serve");
+        assert_eq!(g.fresh_count(0), 1);
+        // same-epoch rows are never servable (inter-epoch reuse only)
+        let g = c.gate(3);
+        assert!(!g.level(0)[2]);
+    }
+
+    #[test]
+    fn staleness_zero_gate_is_empty() {
+        let mut c = HistCache::new(4, &[3], 0);
+        let h = Matrix::zeros(4, 3);
+        c.push(0, &[0, 1, 2, 3], &h, 1);
+        let g = c.gate(2);
+        assert_eq!(g.fresh_count(0), 0, "K=0 must never serve");
+    }
+
+    #[test]
+    fn push_then_stitch_roundtrip() {
+        let mut c = HistCache::new(5, &[3], 1);
+        let h = Matrix::from_vec(2, 3, vec![1., 2., 3., 4., 5., 6.]);
+        c.push(0, &[4, 2], &h, 1);
+        let mut out = Matrix::zeros(4, 3);
+        let stale = c.stitch(0, &[2, 4], &mut out, 1, 3, ExecPolicy::serial());
+        assert_eq!(out.row(1), &[4., 5., 6.]);
+        assert_eq!(out.row(2), &[1., 2., 3.]);
+        assert_eq!(out.row(0), &[0., 0., 0.]); // untouched
+        assert_eq!(out.row(3), &[0., 0., 0.]);
+        assert_eq!(stale, 4, "two rows of age 2 each");
+    }
+
+    #[test]
+    fn nbytes_counts_all_levels() {
+        let c = HistCache::new(10, &[8, 4], 1);
+        assert_eq!(c.nbytes(), 10 * 8 * 4 + 10 * 4 + 10 * 4 * 4 + 10 * 4);
+        assert_eq!(c.num_levels(), 2);
+    }
+
+    #[test]
+    fn stats_rates() {
+        let s = CacheEpochStats {
+            hits: 3,
+            candidates: 4,
+            staleness_sum: 6,
+        };
+        assert_eq!(s.hit_rate(), 0.75);
+        assert_eq!(s.mean_staleness(), 2.0);
+        let z = CacheEpochStats::default();
+        assert_eq!(z.hit_rate(), 0.0);
+        assert_eq!(z.mean_staleness(), 0.0);
+    }
+}

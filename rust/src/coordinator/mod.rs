@@ -35,6 +35,14 @@ pub struct TrainSpec {
     pub batch_size: usize,
     /// Sample batch k+1 on a worker thread while batch k trains.
     pub prefetch: bool,
+    /// Historical-embedding cache (`--cache`, mini-batch mode only):
+    /// serve out-of-batch frontier activations from a bounded-staleness
+    /// store instead of recursively sampling them.
+    pub cache: bool,
+    /// Staleness bound K in epochs (`--cache-staleness`): cached rows
+    /// older than K epochs are re-sampled; 0 = exact (bitwise-identical
+    /// to the cache-off path).
+    pub cache_staleness: u64,
     pub epochs: usize,
     pub optimizer: OptKind,
     pub lr: f32,
@@ -61,6 +69,8 @@ impl Default for TrainSpec {
             fanouts: vec![10, 25],
             batch_size: 512,
             prefetch: true,
+            cache: false,
+            cache_staleness: 1,
             epochs: 100,
             optimizer: OptKind::Adam,
             lr: 0.01,
@@ -101,6 +111,12 @@ pub fn build_engine(spec: &TrainSpec, ds: &Dataset) -> Result<Box<dyn Engine>> {
         lr: spec.lr,
         ..Default::default()
     };
+    if spec.cache && spec.mode != RunMode::Minibatch {
+        return Err(anyhow!(
+            "--cache/--cache-staleness apply to --mode minibatch only (got --mode {})",
+            spec.mode.name()
+        ));
+    }
     if spec.mode == RunMode::Minibatch {
         if spec.engine != EngineKind::Native {
             return Err(anyhow!(
@@ -112,6 +128,7 @@ pub fn build_engine(spec: &TrainSpec, ds: &Dataset) -> Result<Box<dyn Engine>> {
             batch_size: spec.batch_size,
             fanouts: spec.fanouts.clone(),
             prefetch: spec.prefetch,
+            cache: spec.cache.then_some(spec.cache_staleness),
         };
         let mut e = MiniBatchEngine::new(ds, &config, spec.optimizer, hp, mb, spec.seed)
             .map_err(|e| anyhow!(e))?;
@@ -254,6 +271,34 @@ mod tests {
         assert_eq!(out.report.epochs.len(), 2);
         assert!(out.report.final_loss().is_finite());
         assert!(out.peak_bytes > 0);
+    }
+
+    #[test]
+    fn run_minibatch_with_cache() {
+        let spec = TrainSpec {
+            dataset: "corafull".to_string(),
+            arch: Arch::SageMean,
+            mode: RunMode::Minibatch,
+            fanouts: vec![4, 4],
+            batch_size: 512,
+            cache: true,
+            cache_staleness: 2,
+            epochs: 3,
+            ..Default::default()
+        };
+        let out = run(&spec).unwrap();
+        assert_eq!(out.engine_name, "morphling-minibatch");
+        assert_eq!(out.report.epochs.len(), 3);
+        assert!(out.report.final_loss().is_finite());
+    }
+
+    #[test]
+    fn cache_rejected_in_full_batch_mode() {
+        let spec = TrainSpec {
+            cache: true,
+            ..Default::default()
+        };
+        assert!(run(&spec).is_err());
     }
 
     #[test]

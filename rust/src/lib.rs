@@ -35,6 +35,7 @@ pub mod graph;
 pub mod kernels;
 pub mod engine;
 pub mod sampler;
+pub mod cache;
 pub mod model;
 pub mod optim;
 pub mod train;

@@ -96,6 +96,10 @@ fn cmd_train(args: &Args) -> Result<()> {
             .map_err(anyhow::Error::msg)?,
         batch_size: args.usize_or("batch-size", 512),
         prefetch: !args.flag("no-prefetch"),
+        // --cache-staleness alone implies --cache (friendlier than
+        // silently ignoring the bound).
+        cache: args.flag("cache") || args.get("cache-staleness").is_some(),
+        cache_staleness: args.u64_or("cache-staleness", 1),
         epochs: args.usize_or("epochs", 100),
         optimizer: choice(
             "optimizer",
@@ -119,10 +123,15 @@ fn cmd_train(args: &Args) -> Result<()> {
     );
     if spec.mode == RunMode::Minibatch {
         println!(
-            "minibatch: batch size {}, fanouts {:?} (0 = full neighborhood), prefetch {}",
+            "minibatch: batch size {}, fanouts {:?} (0 = full neighborhood), prefetch {}, {}",
             spec.batch_size,
             spec.fanouts,
             if spec.prefetch { "on" } else { "off" },
+            if spec.cache {
+                format!("historical cache on (staleness K={})", spec.cache_staleness)
+            } else {
+                "cache off".to_string()
+            },
         );
     }
     println!(
@@ -235,7 +244,9 @@ fn main() -> Result<()> {
                 "usage: morphling <info|shapes|train|partition|dist|calibrate> [--flags]\n\
                  train:     --dataset corafull --engine native|pyg|dgl|pjrt --arch gcn|sage|sage-max|gin --epochs 100 [--threads N]\n\
                  \u{20}          --mode full|minibatch [--batch-size 512] [--fanouts 10,25] [--no-prefetch]\n\
-                 \u{20}          (minibatch: native engine; fanout 0 = full neighborhood)\n\
+                 \u{20}          [--cache] [--cache-staleness K]\n\
+                 \u{20}          (minibatch: native engine; fanout 0 = full neighborhood;\n\
+                 \u{20}           cache serves stale out-of-batch activations, K=0 exact)\n\
                  partition: --dataset corafull --k 4\n\
                  dist:      --dataset corafull --world 4 [--blocking] [--chunk] [--network infiniband|ethernet|ideal]\n\
                  calibrate: [--threads N] [--seed 7]\n\

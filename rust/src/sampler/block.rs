@@ -8,11 +8,19 @@
 //! order — the self-path of SAGE/GIN-style layers is then simply the first
 //! `n_dst` rows of the layer input, a contiguous prefix, no gather needed.
 //!
+//! With the historical-embedding cache enabled ([`crate::cache`]), the
+//! source set is further partitioned: `src_nodes[n_dst..n_live]` are the
+//! *live* frontier (computed recursively by the layer below) and
+//! `src_nodes[n_live..]` are the *cached* frontier, served from the store
+//! and never expanded. Cache off ⇒ `n_live == n_src` and the layout is
+//! exactly the old one.
+//!
 //! A [`MiniBatch`] stacks one block per model layer (input-side first, so
 //! `blocks[0]` consumes the gathered features) plus the gathered input
-//! features and the seed labels. By construction the dst set of `blocks[l]`
-//! *is* the src set of `blocks[l+1]`, so layer outputs flow into the next
-//! layer without any re-indexing.
+//! features and the seed labels. By construction the **live** src prefix of
+//! `blocks[l+1]` *is* the dst set of `blocks[l]`, so layer outputs flow
+//! into the next layer without any re-indexing (the cached tail, if any,
+//! is stitched on by the engine).
 
 use crate::graph::Graph;
 use crate::tensor::Matrix;
@@ -30,8 +38,14 @@ pub struct Block {
     pub adj_t: Graph,
     pub n_dst: usize,
     pub n_src: usize,
-    /// Global node id per local src row; the first `n_dst` entries are the
-    /// dst nodes in order.
+    /// Partition point of the source set: rows `< n_live` are computed
+    /// live by the layer below (dst prefix + live frontier), rows
+    /// `n_live..n_src` are served from the historical-embedding cache.
+    /// Equals `n_src` when the cache is off.
+    pub n_live: usize,
+    /// Global node id per local src row: the first `n_dst` entries are the
+    /// dst nodes in order, then the live frontier, then the cached
+    /// frontier (see module docs).
     pub src_nodes: Vec<u32>,
 }
 
@@ -39,6 +53,11 @@ impl Block {
     /// Sampled edges in this block.
     pub fn num_edges(&self) -> usize {
         self.adj.num_edges()
+    }
+
+    /// Source rows served from the historical-embedding cache.
+    pub fn num_cached(&self) -> usize {
+        self.n_src - self.n_live
     }
 
     /// Byte footprint (both CSR copies + the id map).

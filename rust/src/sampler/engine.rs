@@ -18,17 +18,22 @@
 //! full-batch epoch (pinned by `tests/minibatch.rs`).
 //!
 //! Peak-bytes accounting: the static live-set (params, optimizer state,
-//! sampling operand, resident features) plus the *high-water* of the
-//! per-**training**-batch live-set (blocks + gathered features + layer
-//! buffers, doubled when the prefetch pipeline holds a second batch in
-//! flight) — the Table-III-style training-loop number the memory bench
-//! compares against full-batch. Exact full-neighborhood evaluation is a
-//! separate graph-scale transient and deliberately excluded (see
-//! `run_batch`).
+//! sampling operand, resident features, historical-embedding store when
+//! enabled) plus the *high-water* of the per-**training**-batch live-set
+//! (blocks + gathered features + layer buffers, doubled when the prefetch
+//! pipeline holds a second batch in flight) over the **most recent**
+//! training epoch — the Table-III-style training-loop number the memory
+//! bench compares against full-batch. Per-epoch (not lifetime) high-water
+//! so the steady state is observable: with the cache on, epoch 1 runs
+//! cold (empty gate, full fan-in) and a lifetime max would pin the
+//! reported peak there forever, hiding the pruned-fan-in live-set the
+//! store buys. Exact full-neighborhood evaluation is a separate
+//! graph-scale transient and deliberately excluded (see `run_batch`).
 
 use super::block::MiniBatch;
 use super::neighbor::{mix64, SampleCtx};
 use super::pipeline::run_batches;
+use crate::cache::{CacheEpochStats, CacheGate, HistCache};
 use crate::engine::{Engine, Mask};
 use crate::graph::Dataset;
 use crate::kernels::activations::{relu_backward_inplace_ex, relu_inplace_ex, softmax_xent};
@@ -44,7 +49,8 @@ use crate::util::timer::PhaseTimes;
 use crate::util::Rng;
 use std::time::Instant;
 
-/// Mini-batch knobs (the `--batch-size` / `--fanouts` / prefetch plumbing).
+/// Mini-batch knobs (the `--batch-size` / `--fanouts` / prefetch / cache
+/// plumbing).
 #[derive(Clone, Debug)]
 pub struct MiniBatchConfig {
     pub batch_size: usize,
@@ -53,6 +59,11 @@ pub struct MiniBatchConfig {
     pub fanouts: Vec<usize>,
     /// Sample batch k+1 on a worker thread while batch k trains.
     pub prefetch: bool,
+    /// Historical-embedding cache: `Some(K)` enables bounded-staleness
+    /// activation reuse with staleness bound `K` epochs
+    /// (`--cache --cache-staleness K`; `K = 0` keeps the cache primed but
+    /// never serves — bitwise-identical to `None`). See [`crate::cache`].
+    pub cache: Option<u64>,
 }
 
 impl Default for MiniBatchConfig {
@@ -61,7 +72,19 @@ impl Default for MiniBatchConfig {
             batch_size: 512,
             fanouts: vec![10, 25],
             prefetch: true,
+            cache: None,
         }
+    }
+}
+
+/// Gradient blocking at cached rows: the propagated gradient's cached tail
+/// (rows `n_live..`) belongs to historical-embedding constants, not to
+/// anything the layer below computed — drop it so only the live prefix
+/// flows further down. No-op with the cache off (`n_live == n_src`).
+fn block_cached_grad(g: &mut Matrix, n_live: usize) {
+    if g.rows > n_live {
+        g.data.truncate(n_live * g.cols);
+        g.rows = n_live;
     }
 }
 
@@ -82,15 +105,28 @@ struct TrainState {
     mask_all: Vec<bool>,
     /// Sampled edges during the most recent training epoch.
     sampled_edges: u64,
-    /// High-water of the per-batch live-set (see module docs).
+    /// High-water of the per-batch live-set across the **most recent**
+    /// training epoch (reset at each epoch start, so steady-state effects
+    /// like the historical cache's pruned fan-in are visible instead of
+    /// being masked by the cold first epoch; see module docs).
     ws_peak: usize,
-    /// Params + optimizer + sampling operand + resident features.
+    /// Params + optimizer + sampling operand + resident features (+ the
+    /// historical-embedding store when enabled).
     static_bytes: usize,
+    /// Historical activation store ([`crate::cache`]); `None` = cache off.
+    hist: Option<HistCache>,
+    /// Cache effectiveness counters for the most recent training epoch.
+    cache_stats: CacheEpochStats,
 }
 
 /// The mini-batch engine. See module docs.
 pub struct MiniBatchEngine {
     ctx: SampleCtx,
+    /// Epoch-frozen cache freshness snapshot, rebuilt at the top of every
+    /// training epoch. Lives beside `ctx` (not inside `st`) so the epoch
+    /// loop can lend it to the prefetch worker while batches mutate the
+    /// training state — the same disjoint-borrow split as `ctx`.
+    gate: Option<CacheGate>,
     st: TrainState,
 }
 
@@ -118,10 +154,19 @@ impl MiniBatchEngine {
             policy,
         )?;
         let batch_size = mb.batch_size.max(1);
-        let static_bytes =
-            params.nbytes() + optimizer.nbytes() + ctx.agg.nbytes() + ds.features.nbytes();
+        // The store holds every node's hidden-layer outputs (never the
+        // logits) — a static region traded for the pruned fan-in.
+        let hist = mb
+            .cache
+            .map(|k| HistCache::new(ds.spec.nodes, &config.dims[1..config.num_layers()], k));
+        let static_bytes = params.nbytes()
+            + optimizer.nbytes()
+            + ctx.agg.nbytes()
+            + ds.features.nbytes()
+            + hist.as_ref().map_or(0, |h| h.nbytes());
         Ok(MiniBatchEngine {
             ctx,
+            gate: None,
             st: TrainState {
                 params,
                 opt: optimizer,
@@ -136,6 +181,8 @@ impl MiniBatchEngine {
                 sampled_edges: 0,
                 ws_peak: 0,
                 static_bytes,
+                hist,
+                cache_stats: CacheEpochStats::default(),
             },
         })
     }
@@ -178,6 +225,19 @@ impl MiniBatchEngine {
     pub fn sampled_edges_last_epoch(&self) -> u64 {
         self.st.sampled_edges
     }
+
+    /// Cache effectiveness counters for the most recent training epoch
+    /// (`None` when the historical-embedding cache is disabled).
+    pub fn cache_stats_last_epoch(&self) -> Option<CacheEpochStats> {
+        self.st.hist.as_ref().map(|_| self.st.cache_stats)
+    }
+
+    /// Static bytes held by the historical-embedding store (0 when off) —
+    /// already included in [`Engine::peak_bytes`]; exposed so the memory
+    /// bench can report the trade explicitly.
+    pub fn cache_bytes(&self) -> usize {
+        self.st.hist.as_ref().map_or(0, |h| h.nbytes())
+    }
 }
 
 impl TrainState {
@@ -208,6 +268,9 @@ impl TrainState {
 
         // ---- forward ----
         let t = Instant::now();
+        // Historical-cache time (push-on-compute refresh + stitching
+        // cached rows into layer inputs), split out of the forward phase.
+        let mut cache_secs = 0.0f64;
         // Saved per layer for the backward: post-activation outputs, SAGE
         // self-path inputs (dst prefix), max-agg outputs + argmax.
         let mut h: Vec<Matrix> = Vec::with_capacity(nl);
@@ -243,7 +306,11 @@ impl TrainState {
                     hl = alloc(blk.n_dst, dout, &mut batch_bytes);
                     spmm_block_ex(&blk.adj, &z, &mut hl, pol);
                     let mut zs = alloc(blk.n_dst, dout, &mut batch_bytes);
-                    gemm_ex(&xdl, self.params.layers[l].w_self.as_ref().unwrap(), &mut zs, pol);
+                    let ws = self.params.layers[l].w_self.as_ref().expect(
+                        "w_self missing: SAGE-mean layers always carry a self-path weight \
+                         (Arch::has_self_weight invariant)",
+                    );
+                    gemm_ex(&xdl, ws, &mut zs, pol);
                     for (hv, zv) in hl.data.iter_mut().zip(&zs.data) {
                         *hv += zv;
                     }
@@ -257,7 +324,11 @@ impl TrainState {
                     let mut z = alloc(blk.n_dst, dout, &mut batch_bytes);
                     gemm_ex(&ml, &self.params.layers[l].w, &mut z, pol);
                     hl = alloc(blk.n_dst, dout, &mut batch_bytes);
-                    gemm_ex(&xdl, self.params.layers[l].w_self.as_ref().unwrap(), &mut hl, pol);
+                    let ws = self.params.layers[l].w_self.as_ref().expect(
+                        "w_self missing: SAGE-max layers always carry a self-path weight \
+                         (Arch::has_self_weight invariant)",
+                    );
+                    gemm_ex(&xdl, ws, &mut hl, pol);
                     for (hv, zv) in hl.data.iter_mut().zip(&z.data) {
                         *hv += zv;
                     }
@@ -270,10 +341,54 @@ impl TrainState {
             if !is_last {
                 relu_inplace_ex(&mut hl, pol);
             }
+            if let Some(hist) = self.hist.as_mut() {
+                if !is_last {
+                    let tc = Instant::now();
+                    // Push-on-compute refresh: this block's live dst rows
+                    // are exactly computed layer-l outputs — store them
+                    // (training batches only; evaluation leaves the store
+                    // untouched). Rows land with this epoch's stamp and
+                    // become servable next epoch.
+                    if train {
+                        hist.push(l, &blk.src_nodes[..blk.n_dst], &hl, self.epoch);
+                    }
+                    // Stitch: the next block's cached tail is appended to
+                    // hl in place (its live prefix IS hl, by the block
+                    // layout), turning hl into the full layer-(l+1) input.
+                    let nxt = &mb.blocks[l + 1];
+                    if nxt.n_live < nxt.n_src {
+                        debug_assert_eq!(nxt.n_live, hl.rows);
+                        batch_bytes += nxt.num_cached() * dout * 4;
+                        hl.data.resize(nxt.n_src * dout, 0.0);
+                        hl.rows = nxt.n_src;
+                        self.cache_stats.staleness_sum += hist.stitch(
+                            l,
+                            &nxt.src_nodes[nxt.n_live..],
+                            &mut hl,
+                            nxt.n_live,
+                            self.epoch,
+                            pol,
+                        );
+                    }
+                    cache_secs += tc.elapsed().as_secs_f64();
+                }
+            }
             h.push(hl);
             xd.push(xdl);
         }
-        phases.add("forward", t.elapsed().as_secs_f64());
+        phases.add("forward", t.elapsed().as_secs_f64() - cache_secs);
+        if self.hist.is_some() {
+            phases.add("cache", cache_secs);
+            if train {
+                // Hit accounting straight from the block shapes: every
+                // above-input block's frontier is a candidate set, its
+                // cached partition the hits.
+                for blk in &mb.blocks[1..] {
+                    self.cache_stats.candidates += (blk.n_src - blk.n_dst) as u64;
+                    self.cache_stats.hits += blk.num_cached() as u64;
+                }
+            }
+        }
 
         // ---- loss ----
         let b = mb.seeds.len();
@@ -310,6 +425,7 @@ impl TrainState {
                         if l > 0 {
                             let mut gprev = alloc(blk.n_src, din, &mut batch_bytes);
                             gemm_a_bt_ex(&gz, &self.params.layers[l].w, &mut gprev, pol);
+                            block_cached_grad(&mut gprev, blk.n_live);
                             g = gprev;
                         }
                     }
@@ -317,7 +433,10 @@ impl TrainState {
                         // dW_self = X_dstᵀ·g ; gz = Bᵀ·g ; dW = Xᵀ·gz ;
                         // g_prev = gz·Wᵀ (+ g·W_selfᵀ into the dst prefix)
                         let mut dws = std::mem::replace(
-                            self.params.layers[l].dw_self.as_mut().unwrap(),
+                            self.params.layers[l].dw_self.as_mut().expect(
+                                "dw_self missing: SAGE-mean layers always carry a self-path \
+                                 gradient buffer (Arch::has_self_weight invariant)",
+                            ),
                             Matrix::zeros(0, 0),
                         );
                         gemm_at_b_ex(&xd[l], &g, &mut dws, pol);
@@ -337,7 +456,10 @@ impl TrainState {
                             let mut ts = alloc(blk.n_dst, din, &mut batch_bytes);
                             gemm_a_bt_ex(
                                 &g,
-                                self.params.layers[l].w_self.as_ref().unwrap(),
+                                self.params.layers[l].w_self.as_ref().expect(
+                                    "w_self missing: SAGE-mean layers always carry a \
+                                     self-path weight (Arch::has_self_weight invariant)",
+                                ),
                                 &mut ts,
                                 pol,
                             );
@@ -346,6 +468,7 @@ impl TrainState {
                             {
                                 *gp += tv;
                             }
+                            block_cached_grad(&mut gprev, blk.n_live);
                             g = gprev;
                         }
                     }
@@ -354,7 +477,10 @@ impl TrainState {
                         // g_prev = max_bwd(g·Wᵀ) + g·W_selfᵀ (dst prefix)
                         gemm_at_b_ex(&magg[l], &g, &mut self.params.layers[l].dw, pol);
                         let mut dws = std::mem::replace(
-                            self.params.layers[l].dw_self.as_mut().unwrap(),
+                            self.params.layers[l].dw_self.as_mut().expect(
+                                "dw_self missing: SAGE-max layers always carry a self-path \
+                                 gradient buffer (Arch::has_self_weight invariant)",
+                            ),
                             Matrix::zeros(0, 0),
                         );
                         gemm_at_b_ex(&xd[l], &g, &mut dws, pol);
@@ -367,7 +493,10 @@ impl TrainState {
                             let mut ts = alloc(blk.n_dst, din, &mut batch_bytes);
                             gemm_a_bt_ex(
                                 &g,
-                                self.params.layers[l].w_self.as_ref().unwrap(),
+                                self.params.layers[l].w_self.as_ref().expect(
+                                    "w_self missing: SAGE-max layers always carry a \
+                                     self-path weight (Arch::has_self_weight invariant)",
+                                ),
                                 &mut ts,
                                 pol,
                             );
@@ -376,10 +505,23 @@ impl TrainState {
                             {
                                 *gp += tv;
                             }
+                            block_cached_grad(&mut gprev, blk.n_live);
                             g = gprev;
                         }
                     }
                     Arch::Gin => unreachable!("rejected at construction"),
+                }
+                // This layer's input h[l-1] carried the stitched cache
+                // tail through the forward; its final read (x_in above)
+                // is done, so shrink it back to its own block's dst rows
+                // for the layer-(l-1) ReLU backward's shape contract.
+                if l > 0 {
+                    let rows = mb.blocks[l - 1].n_dst;
+                    let hprev = &mut h[l - 1];
+                    if hprev.rows > rows {
+                        hprev.data.truncate(rows * self.dims[l]);
+                        hprev.rows = rows;
+                    }
                 }
             }
             phases.add("backward", t.elapsed().as_secs_f64());
@@ -408,9 +550,15 @@ impl Engine for MiniBatchEngine {
     }
 
     fn train_epoch(&mut self, ds: &Dataset) -> EpochStats {
-        let MiniBatchEngine { ctx, st } = self;
+        let MiniBatchEngine { ctx, gate, st } = self;
         st.epoch += 1;
         let epoch = st.epoch;
+        // Freeze this epoch's cache freshness snapshot (None with the
+        // cache off). Immutable until the next epoch, so the prefetch
+        // worker's pruning decisions can't race the in-epoch refreshes.
+        *gate = st.hist.as_ref().map(|h| h.gate(epoch));
+        st.cache_stats = CacheEpochStats::default();
+        st.ws_peak = 0;
         // Deterministic epoch shuffle (independent of threads/prefetch).
         let mut seeds: Vec<u32> = (0..ds.spec.nodes)
             .filter(|&u| ds.train_mask[u])
@@ -433,6 +581,7 @@ impl Engine for MiniBatchEngine {
             &ctx.fanouts,
             epoch,
             pipelined,
+            gate.as_ref(),
             |mb| {
                 edges += mb.sampled_edges();
                 let (l, a, n) = st.run_batch(&mb, true, pipelined, &mut phases);
@@ -452,7 +601,7 @@ impl Engine for MiniBatchEngine {
     }
 
     fn evaluate(&mut self, ds: &Dataset, mask: Mask) -> (f64, f64) {
-        let MiniBatchEngine { ctx, st } = self;
+        let MiniBatchEngine { ctx, st, .. } = self;
         let seeds: Vec<u32> = mask
             .select(ds)
             .iter()
@@ -480,6 +629,8 @@ impl Engine for MiniBatchEngine {
             &full,
             st.epoch,
             false,
+            // Exactness contract: evaluation never consults the cache.
+            None,
             |mb| {
                 let (l, a, n) = st.run_batch(&mb, false, false, &mut phases);
                 loss_sum += l * n as f64;
@@ -527,6 +678,7 @@ mod tests {
                 batch_size: 64,
                 fanouts: vec![4, 6],
                 prefetch: true,
+                cache: None,
             };
             let mut eng = MiniBatchEngine::paper_default(&ds, arch, cfg, 13).unwrap();
             let report = train(
@@ -572,6 +724,7 @@ mod tests {
                     batch_size: 96,
                     fanouts,
                     prefetch: false,
+                    cache: None,
                 },
                 21,
             )

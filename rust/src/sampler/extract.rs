@@ -12,6 +12,16 @@
 //! kernel style. The backward operand (`adj_t`) is built by a counting-sort
 //! transpose while the batch is still hot in cache, and the feature gather
 //! fans out over row blocks under the engine's [`ExecPolicy`].
+//!
+//! When a freshness snapshot ([`crate::cache::CacheGate`] level) is
+//! supplied, the same single pass also splits the source set into live vs.
+//! cached partitions: a first-seen frontier node that the snapshot marks
+//! fresh is assigned a **tagged** provisional id (high bit set) and queued
+//! in the cached list instead of the live one; a single O(|E_block|)
+//! fix-up pass after the row loop rewrites tagged column ids to their
+//! final slots (`n_live + k`). The relabel map stays generation-stamped
+//! and O(1) per node, so the split costs one extra sweep over the block's
+//! column ids — no hashing, no extra passes over the graph.
 
 use super::block::Block;
 use super::neighbor::{sample_row, WeightRule};
@@ -35,7 +45,15 @@ pub struct SamplerScratch {
     idx: Vec<u32>,
     /// Chosen absolute edge offsets for one row.
     picks: Vec<u32>,
+    /// Global ids of cache-served frontier nodes for the current block.
+    cached: Vec<u32>,
 }
+
+/// High bit marking a provisional *cached-partition* local id in the
+/// relabel map / column buffer; cleared by the fix-up pass once `n_live`
+/// is known. Limits blocks to 2^31 live src nodes (vastly above any
+/// realistic batch).
+const CACHED_TAG: u32 = 1 << 31;
 
 impl SamplerScratch {
     pub fn new(num_nodes: usize) -> SamplerScratch {
@@ -45,6 +63,7 @@ impl SamplerScratch {
             gen: 0,
             idx: Vec::new(),
             picks: Vec::new(),
+            cached: Vec::new(),
         }
     }
 
@@ -61,17 +80,22 @@ impl SamplerScratch {
 }
 
 /// One-pass sample + relabel + CSR build for a single layer (module docs).
-/// `salt` seeds the per-node RNG; dst nodes must be distinct.
+/// `salt` seeds the per-node RNG; dst nodes must be distinct. `fresh`, when
+/// present, is the epoch-frozen freshness bitmask of the cache level this
+/// block's sources read from: fresh frontier nodes land in the cached
+/// partition (`src_nodes[n_live..]`) and are not expanded further.
 pub(crate) fn extract_block(
     agg: &Graph,
     rule: WeightRule,
     dst: &[u32],
     fanout: usize,
     salt: u64,
+    fresh: Option<&[bool]>,
     scratch: &mut SamplerScratch,
 ) -> Block {
     let n_dst = dst.len();
     let gen = scratch.next_gen();
+    scratch.cached.clear();
     let mut src_nodes: Vec<u32> = Vec::with_capacity(n_dst * 2);
     src_nodes.extend_from_slice(dst);
     for (i, &g) in dst.iter().enumerate() {
@@ -98,10 +122,19 @@ pub(crate) fn extract_block(
             let lv = if scratch.stamp[v] == gen {
                 scratch.local[v]
             } else {
-                let id = src_nodes.len() as u32;
                 scratch.stamp[v] = gen;
+                let id = if fresh.is_some_and(|f| f[v]) {
+                    // cache hit: provisional tagged id, no recursion below
+                    let id = CACHED_TAG | scratch.cached.len() as u32;
+                    scratch.cached.push(v as u32);
+                    id
+                } else {
+                    let id = src_nodes.len() as u32;
+                    debug_assert!(id < CACHED_TAG);
+                    src_nodes.push(v as u32);
+                    id
+                };
                 scratch.local[v] = id;
-                src_nodes.push(v as u32);
                 id
             };
             col_idx.push(lv);
@@ -112,6 +145,16 @@ pub(crate) fn extract_block(
             });
         }
         row_ptr.push(col_idx.len() as u32);
+    }
+    let n_live = src_nodes.len();
+    if !scratch.cached.is_empty() {
+        // fix-up pass: cached-partition ids live after the live prefix
+        for c in col_idx.iter_mut() {
+            if *c & CACHED_TAG != 0 {
+                *c = n_live as u32 + (*c & !CACHED_TAG);
+            }
+        }
+        src_nodes.extend_from_slice(&scratch.cached);
     }
     let n_src = src_nodes.len();
     let adj = Graph {
@@ -126,6 +169,7 @@ pub(crate) fn extract_block(
         adj_t,
         n_dst,
         n_src,
+        n_live,
         src_nodes,
     }
 }
@@ -183,6 +227,35 @@ pub fn gather_rows_ex(feats: &Matrix, rows: &[u32], pol: ExecPolicy) -> Matrix {
     out
 }
 
+/// Scatter `rows` of `src` into `dst` starting at row `at_row` — the
+/// stitch kernel that splices historical-cache rows into a layer input
+/// after the live prefix. Fanned out over even row blocks with the same
+/// ownership discipline as [`gather_rows_ex`] (pure copying, bitwise-
+/// deterministic at any thread count).
+pub fn scatter_rows_ex(
+    dst: &mut Matrix,
+    at_row: usize,
+    src: &Matrix,
+    rows: &[u32],
+    pol: ExecPolicy,
+) {
+    assert_eq!(dst.cols, src.cols, "stitch width mismatch");
+    assert!(at_row + rows.len() <= dst.rows, "stitch past dst rows");
+    let f = dst.cols;
+    let out = &mut dst.data[at_row * f..(at_row + rows.len()) * f];
+    let body = |range: std::ops::Range<usize>, slice: &mut [f32]| {
+        for (i, &g) in rows[range].iter().enumerate() {
+            slice[i * f..(i + 1) * f].copy_from_slice(src.row(g as usize));
+        }
+    };
+    if pol.is_serial() {
+        body(0..rows.len(), out);
+        return;
+    }
+    let blocks = partition_even(rows.len(), pol.threads);
+    par_row_blocks(&blocks, f, out, body);
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -205,7 +278,7 @@ mod tests {
     fn full_fanout_block_structure() {
         let g = path_graph();
         let mut scratch = SamplerScratch::new(4);
-        let b = extract_block(&g, WeightRule::Unit, &[2, 0], 0, 9, &mut scratch);
+        let b = extract_block(&g, WeightRule::Unit, &[2, 0], 0, 9, None, &mut scratch);
         assert_eq!(b.n_dst, 2);
         // dst prefix then first-seen neighbors: [2, 0] then 1
         assert_eq!(b.src_nodes, vec![2, 0, 1]);
@@ -229,12 +302,12 @@ mod tests {
         let g = path_graph();
         let mut scratch = SamplerScratch::new(4);
         // MeanOfSampled: every row's weights sum to 1 (when non-empty)
-        let b = extract_block(&g, WeightRule::MeanOfSampled, &[0, 1, 3], 0, 9, &mut scratch);
+        let b = extract_block(&g, WeightRule::MeanOfSampled, &[0, 1, 3], 0, 9, None, &mut scratch);
         assert_eq!(b.adj.neighbor_weights(0), &[0.5, 0.5]);
         assert_eq!(b.adj.neighbor_weights(1), &[1.0]);
         assert_eq!(b.adj.neighbors(2), &[] as &[u32]); // isolated dst
         // DegreeScaled at full fanout: weights carried over exactly
-        let b = extract_block(&g, WeightRule::DegreeScaled, &[0], 0, 9, &mut scratch);
+        let b = extract_block(&g, WeightRule::DegreeScaled, &[0], 0, 9, None, &mut scratch);
         assert_eq!(b.adj.neighbor_weights(0), &[1.0, 2.0]);
     }
 
@@ -244,7 +317,7 @@ mod tests {
         let edges: Vec<(u32, u32, f32)> = (1..21).map(|v| (0u32, v, 1.0f32)).collect();
         let g = Graph::from_weighted_edges(21, edges);
         let mut scratch = SamplerScratch::new(21);
-        let b = extract_block(&g, WeightRule::DegreeScaled, &[0], 4, 123, &mut scratch);
+        let b = extract_block(&g, WeightRule::DegreeScaled, &[0], 4, 123, None, &mut scratch);
         assert_eq!(b.num_edges(), 4);
         for &w in b.adj.neighbor_weights(0) {
             assert_eq!(w, 5.0);
@@ -260,8 +333,8 @@ mod tests {
     fn scratch_reuse_across_blocks() {
         let g = path_graph();
         let mut scratch = SamplerScratch::new(4);
-        let a = extract_block(&g, WeightRule::Unit, &[0], 0, 1, &mut scratch);
-        let b = extract_block(&g, WeightRule::Unit, &[0], 0, 1, &mut scratch);
+        let a = extract_block(&g, WeightRule::Unit, &[0], 0, 1, None, &mut scratch);
+        let b = extract_block(&g, WeightRule::Unit, &[0], 0, 1, None, &mut scratch);
         assert_eq!(a, b, "stale stamps leaked between generations");
     }
 

@@ -23,10 +23,19 @@
 //!   sampled on a worker thread while batch *k* trains, so sampling
 //!   overlaps compute and only the exposed wait is charged to the epoch.
 //!
-//! Invariants pinned by `tests/minibatch.rs`: bitwise determinism across
-//! thread counts and prefetch on/off, and exact equivalence to the
-//! full-batch [`crate::engine::native::NativeEngine`] at full-neighborhood
-//! fanouts.
+//! The subsystem composes with the historical-embedding cache
+//! ([`crate::cache`]): given an epoch-frozen freshness gate, the extractor
+//! splits each block's source set into live vs. cached partitions
+//! ([`Block::n_live`]), the sampler truncates the fanout recursion at
+//! cache-hit frontier nodes, and the engine stitches cached activations
+//! into layer inputs ([`scatter_rows_ex`]) with gradients blocked at the
+//! cached rows.
+//!
+//! Invariants pinned by `tests/minibatch.rs` and `tests/cache.rs`: bitwise
+//! determinism across thread counts and prefetch on/off (cache on or off),
+//! exact equivalence to the full-batch
+//! [`crate::engine::native::NativeEngine`] at full-neighborhood fanouts,
+//! and bitwise equivalence of `--cache-staleness 0` to the cache-off path.
 
 pub mod block;
 pub mod extract;
@@ -36,5 +45,5 @@ pub mod pipeline;
 
 pub use block::{Block, MiniBatch};
 pub use engine::{MiniBatchConfig, MiniBatchEngine};
-pub use extract::SamplerScratch;
+pub use extract::{scatter_rows_ex, SamplerScratch};
 pub use neighbor::{expand_fanouts, SampleCtx, WeightRule, FULL_NEIGHBORHOOD};

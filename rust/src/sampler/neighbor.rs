@@ -23,6 +23,7 @@
 
 use super::block::MiniBatch;
 use super::extract::{extract_block, gather_rows_ex, SamplerScratch};
+use crate::cache::CacheGate;
 use crate::graph::{Dataset, Graph};
 use crate::kernels::parallel::ExecPolicy;
 use crate::model::Arch;
@@ -153,12 +154,16 @@ impl SampleCtx {
 
     /// Sample and extract one mini-batch for `seeds`: layered blocks are
     /// built top-down (the top block's dst rows are the seeds, each deeper
-    /// block's dst set is the previous block's src set), then the input
-    /// features of the innermost src set are gathered row-parallel. `salt`
-    /// carries the epoch component of the per-node key; the context's base
-    /// seed is folded in here, completing the `(seed, epoch, layer, node)`
-    /// derivation. `fanouts` overrides the schedule (the evaluator passes
-    /// all-zeros for exact full-neighborhood inference).
+    /// block's dst set is the previous block's **live** src prefix), then
+    /// the input features of the innermost src set are gathered
+    /// row-parallel. `salt` carries the epoch component of the per-node
+    /// key; the context's base seed is folded in here, completing the
+    /// `(seed, epoch, layer, node)` derivation. `fanouts` overrides the
+    /// schedule (the evaluator passes all-zeros for exact
+    /// full-neighborhood inference). `gate`, when present, is the
+    /// epoch-frozen historical-cache freshness snapshot: blocks above the
+    /// input layer split their frontier against it and the recursion is
+    /// truncated at cache-hit nodes (only the live prefix is expanded).
     pub fn sample_batch(
         &self,
         scratch: &mut SamplerScratch,
@@ -167,6 +172,7 @@ impl SampleCtx {
         seeds: &[u32],
         salt: u64,
         fanouts: &[usize],
+        gate: Option<&CacheGate>,
     ) -> MiniBatch {
         let salt = mix64(self.seed, salt);
         let layers = fanouts.len();
@@ -175,14 +181,23 @@ impl SampleCtx {
             let b = {
                 let dst = blocks
                     .first()
-                    .map(|b: &super::block::Block| &b.src_nodes[..])
+                    .map(|b: &super::block::Block| &b.src_nodes[..b.n_live])
                     .unwrap_or(seeds);
+                // Block l's sources are layer-(l-1) outputs = cache level
+                // l-1. The input layer (l = 0) reads raw features, which
+                // are always available — never split.
+                let fresh = if l > 0 {
+                    gate.map(|g| g.level(l - 1))
+                } else {
+                    None
+                };
                 extract_block(
                     &self.agg,
                     self.rule,
                     dst,
                     fanouts[l],
                     mix64(salt, 0xB10C ^ ((l as u64) << 32)),
+                    fresh,
                     scratch,
                 )
             };
@@ -250,7 +265,7 @@ mod tests {
                 SampleCtx::for_arch(Arch::SageMean, &ds, &[3], 3, seed, ExecPolicy::serial())
                     .unwrap();
             let mut scratch = SamplerScratch::new(ds.spec.nodes);
-            ctx.sample_batch(&mut scratch, &ds.features, &ds.labels, &seeds, 1, &ctx.fanouts)
+            ctx.sample_batch(&mut scratch, &ds.features, &ds.labels, &seeds, 1, &ctx.fanouts, None)
         };
         let (a, b) = (sample(1), sample(2));
         assert_ne!(a.blocks, b.blocks, "ctx seed must affect sampling");

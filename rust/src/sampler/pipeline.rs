@@ -15,6 +15,7 @@
 use super::block::MiniBatch;
 use super::extract::SamplerScratch;
 use super::neighbor::SampleCtx;
+use crate::cache::CacheGate;
 use crate::tensor::Matrix;
 use std::sync::mpsc;
 use std::time::Instant;
@@ -34,6 +35,10 @@ pub struct PipelineReport {
 /// runs inline. `fanouts` is passed through to
 /// [`SampleCtx::sample_batch`] so evaluation can request full
 /// neighborhoods; `salt` is the epoch component of the sampling seed.
+/// `gate` is the epoch-frozen historical-cache freshness snapshot (or
+/// `None` with the cache off / during exact evaluation) — immutable for
+/// the whole epoch, so sharing it with the prefetch worker cannot
+/// introduce timing-dependent sampling decisions.
 pub fn run_batches<F>(
     ctx: &SampleCtx,
     feats: &Matrix,
@@ -43,6 +48,7 @@ pub fn run_batches<F>(
     fanouts: &[usize],
     salt: u64,
     prefetch: bool,
+    gate: Option<&CacheGate>,
     mut consume: F,
 ) -> PipelineReport
 where
@@ -54,7 +60,7 @@ where
         let mut scratch = SamplerScratch::new(ctx.agg.num_nodes);
         for c in &chunks {
             let t = Instant::now();
-            let mb = ctx.sample_batch(&mut scratch, feats, labels, c, salt, fanouts);
+            let mb = ctx.sample_batch(&mut scratch, feats, labels, c, salt, fanouts, gate);
             exposed += t.elapsed().as_secs_f64();
             consume(mb);
         }
@@ -68,7 +74,7 @@ where
             s.spawn(move || {
                 let mut scratch = SamplerScratch::new(ctx.agg.num_nodes);
                 for c in chunks {
-                    let mb = ctx.sample_batch(&mut scratch, feats, labels, c, salt, fanouts);
+                    let mb = ctx.sample_batch(&mut scratch, feats, labels, c, salt, fanouts, gate);
                     // consumer gone (panic unwinding): stop sampling
                     if tx.send(mb).is_err() {
                         break;
@@ -121,6 +127,7 @@ mod tests {
                 &ctx.fanouts,
                 77,
                 prefetch,
+                None,
                 |mb| out.push(mb),
             );
             assert_eq!(r.batches, 3);

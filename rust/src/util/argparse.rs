@@ -13,34 +13,50 @@ pub struct Args {
 }
 
 impl Args {
-    /// Parse from an iterator of raw arguments (excluding argv[0]).
-    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Args {
+    /// Parse from an iterator of raw arguments (excluding argv[0]),
+    /// rejecting repeated named flags. Last-wins would silently mask typos
+    /// in long bench invocations (a second `--fanouts` overriding the
+    /// first), so a duplicate is an error naming the repeated flag.
+    pub fn try_parse<I: IntoIterator<Item = String>>(raw: I) -> Result<Args, String> {
         let mut out = Args::default();
         let mut iter = raw.into_iter().peekable();
         while let Some(a) = iter.next() {
             if let Some(stripped) = a.strip_prefix("--") {
-                if let Some((k, v)) = stripped.split_once('=') {
-                    out.named.insert(k.to_string(), v.to_string());
+                let (k, v) = if let Some((k, v)) = stripped.split_once('=') {
+                    (k.to_string(), v.to_string())
                 } else if iter
                     .peek()
                     .map(|n| !n.starts_with("--"))
                     .unwrap_or(false)
                 {
-                    let v = iter.next().unwrap();
-                    out.named.insert(stripped.to_string(), v);
+                    (stripped.to_string(), iter.next().unwrap())
                 } else {
-                    out.named.insert(stripped.to_string(), "true".to_string());
+                    (stripped.to_string(), "true".to_string())
+                };
+                if out.named.insert(k.clone(), v).is_some() {
+                    return Err(format!("duplicate flag --{k} (each flag may be given once)"));
                 }
             } else {
                 out.positional.push(a);
             }
         }
-        out
+        Ok(out)
     }
 
-    /// Parse from the process environment.
+    /// Infallible parse for pre-validated input (tests, fixed invocations);
+    /// panics on duplicate flags — CLI entry points use [`Args::from_env`],
+    /// which reports the duplicate and exits instead.
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Args {
+        Args::try_parse(raw).unwrap_or_else(|e| panic!("{e}"))
+    }
+
+    /// Parse from the process environment; a duplicate flag prints the
+    /// offending name and exits non-zero.
     pub fn from_env() -> Args {
-        Args::parse(std::env::args().skip(1))
+        Args::try_parse(std::env::args().skip(1)).unwrap_or_else(|e| {
+            eprintln!("error: {e}");
+            std::process::exit(2);
+        })
     }
 
     pub fn flag(&self, key: &str) -> bool {
@@ -130,6 +146,20 @@ mod tests {
         let a = parse(&["--fast", "run"]);
         // "--fast run": "run" doesn't start with --, so it's consumed as value.
         assert_eq!(a.get("fast"), Some("run"));
+    }
+
+    #[test]
+    fn duplicate_flags_rejected() {
+        let raw = |s: &[&str]| s.iter().map(|s| s.to_string()).collect::<Vec<_>>();
+        let err = Args::try_parse(raw(&["--epochs", "10", "--epochs", "20"])).unwrap_err();
+        assert!(err.contains("--epochs"), "{err}");
+        // =-form and bare-flag duplicates are caught too
+        assert!(Args::try_parse(raw(&["--tau=0.8", "--tau=0.9"])).is_err());
+        assert!(Args::try_parse(raw(&["--verbose", "--verbose"])).is_err());
+        // distinct flags are fine
+        let a = Args::try_parse(raw(&["--epochs", "10", "--tau=0.8", "--verbose"])).unwrap();
+        assert_eq!(a.usize_or("epochs", 0), 10);
+        assert!(a.flag("verbose"));
     }
 
     #[test]

@@ -1,0 +1,270 @@
+//! Historical-embedding cache invariants (ISSUE 5 acceptance criteria):
+//!
+//! 1. **Exactness at K = 0** — `--cache --cache-staleness 0` is
+//!    bitwise-identical to the cache-off mini-batch path for all three
+//!    sampled architectures (losses AND trained weights);
+//! 2. **Monotone freshness** — the per-epoch gate's fresh set is nested as
+//!    the staleness bound grows, and the engine's hit counters respect the
+//!    bound (zero at K = 0, positive from the second epoch at K ≥ 1, mean
+//!    staleness ≤ K);
+//! 3. **Determinism** — with the cache enabled, training stays
+//!    bit-deterministic across kernel thread counts and prefetch on/off;
+//! 4. **Evaluation purity** — evaluation neither consults nor perturbs the
+//!    store.
+
+use morphling::cache::HistCache;
+use morphling::engine::{Engine, Mask};
+use morphling::graph::datasets;
+use morphling::model::{Arch, GnnParams};
+use morphling::sampler::{MiniBatchConfig, MiniBatchEngine};
+use morphling::tensor::Matrix;
+use morphling::util::Rng;
+
+fn tiny_spec() -> morphling::graph::DatasetSpec {
+    morphling::graph::DatasetSpec {
+        name: "tiny-cache-it",
+        real_nodes: 0,
+        real_edges: 0,
+        real_features: 0,
+        nodes: 240,
+        edges: 1600,
+        features: 44,
+        classes: 5,
+        feat_sparsity: 0.0,
+        gamma: 2.4,
+        components: 1,
+    }
+}
+
+/// Every trainable buffer, flattened for bitwise comparison.
+fn param_bits(p: &GnnParams) -> Vec<f32> {
+    let mut out = Vec::new();
+    for l in &p.layers {
+        out.extend_from_slice(&l.w.data);
+        if let Some(ws) = &l.w_self {
+            out.extend_from_slice(&ws.data);
+        }
+        out.extend_from_slice(&l.b);
+    }
+    out
+}
+
+fn engine(ds: &morphling::graph::Dataset, arch: Arch, cache: Option<u64>) -> MiniBatchEngine {
+    let cfg = MiniBatchConfig {
+        batch_size: 64,
+        fanouts: vec![3, 5],
+        prefetch: true,
+        cache,
+    };
+    MiniBatchEngine::paper_default(ds, arch, cfg, 11).unwrap()
+}
+
+/// K = 0 keeps the cache primed but never serves: the gate is empty, no
+/// block grows a cached partition, and the run is bitwise-identical to the
+/// cache-off path — the exactness contract that makes `--cache` safe to
+/// leave on.
+#[test]
+fn staleness_zero_bitwise_identical_to_cache_off() {
+    let ds = datasets::load(&tiny_spec());
+    for arch in [Arch::Gcn, Arch::SageMean, Arch::SageMax] {
+        let mut off = engine(&ds, arch, None);
+        let mut on = engine(&ds, arch, Some(0));
+        for e in 0..3 {
+            let (so, sn) = (off.train_epoch(&ds), on.train_epoch(&ds));
+            assert_eq!(so.loss, sn.loss, "{} epoch {e}: loss diverged", arch.name());
+            assert_eq!(
+                param_bits(off.params()),
+                param_bits(on.params()),
+                "{} epoch {e}: params diverged",
+                arch.name()
+            );
+            assert_eq!(
+                off.sampled_edges_last_epoch(),
+                on.sampled_edges_last_epoch(),
+                "{} epoch {e}: K=0 must not prune sampling",
+                arch.name()
+            );
+        }
+        // K = 0 admits nothing: the engine reports all-miss counters.
+        let stats = on.cache_stats_last_epoch().unwrap();
+        assert_eq!(stats.hits, 0);
+        assert!(stats.candidates > 0, "frontier candidates must be counted");
+        assert_eq!(stats.hit_rate(), 0.0);
+        let (lo, ao) = off.evaluate(&ds, Mask::Val);
+        let (ln, an) = on.evaluate(&ds, Mask::Val);
+        assert_eq!((lo, ao), (ln, an), "{}: eval diverged", arch.name());
+    }
+}
+
+/// Gate-level monotonicity: with identical store contents, the fresh set
+/// under bound K is a subset of the fresh set under any K' > K, at every
+/// level and every query epoch (the property behind "a larger staleness
+/// budget can only serve more").
+#[test]
+fn gate_freshness_nested_in_staleness_bound() {
+    let n = 64;
+    let mut rng = Rng::new(9);
+    // One shared stamp history, replayed into stores with different bounds.
+    let history: Vec<(usize, u32, u64)> = (0..200)
+        .map(|_| (rng.below(2), rng.below(n) as u32, 1 + rng.below(7) as u64))
+        .collect();
+    let caches: Vec<HistCache> = (0..6u64)
+        .map(|k| {
+            let mut c = HistCache::new(n, &[8, 4], k);
+            let row = Matrix::zeros(1, 8);
+            let row2 = Matrix::zeros(1, 4);
+            for &(lvl, id, epoch) in &history {
+                c.push(lvl, &[id], if lvl == 0 { &row } else { &row2 }, epoch);
+            }
+            c
+        })
+        .collect();
+    for epoch in 1..10u64 {
+        for w in caches.windows(2) {
+            let (small, big) = (w[0].gate(epoch), w[1].gate(epoch));
+            for lvl in 0..2 {
+                for v in 0..n {
+                    assert!(
+                        !small.level(lvl)[v] || big.level(lvl)[v],
+                        "epoch {epoch} level {lvl} node {v}: fresh set not nested"
+                    );
+                }
+                assert!(small.fresh_count(lvl) <= big.fresh_count(lvl));
+            }
+        }
+        // K = 0 must be empty at any epoch.
+        assert_eq!(caches[0].gate(epoch).fresh_count(0), 0);
+        assert_eq!(caches[0].gate(epoch).fresh_count(1), 0);
+    }
+}
+
+/// Engine-level counters respect the bound: epoch 1 has no servable rows
+/// (the store is empty at the epoch-1 gate freeze), hits appear from epoch
+/// 2 at K ≥ 1, served staleness never exceeds K, and pruning can only
+/// shrink the sampled edge volume relative to the cache-off twin.
+#[test]
+fn cache_hits_bounded_staleness_and_edge_reduction() {
+    let ds = datasets::load(&tiny_spec());
+    let k = 2u64;
+    let mut off = engine(&ds, Arch::SageMean, None);
+    let mut on = engine(&ds, Arch::SageMean, Some(k));
+    let mut total_off = 0u64;
+    let mut total_on = 0u64;
+    for e in 1..=4u64 {
+        off.train_epoch(&ds);
+        on.train_epoch(&ds);
+        let (eo, en) = (off.sampled_edges_last_epoch(), on.sampled_edges_last_epoch());
+        let stats = on.cache_stats_last_epoch().unwrap();
+        assert!(
+            en <= eo,
+            "epoch {e}: cache-on sampled {en} edges > cache-off {eo}"
+        );
+        if e == 1 {
+            assert_eq!(stats.hits, 0, "no rows are servable before epoch 2");
+            assert_eq!(en, eo, "epoch 1 must match the cache-off path exactly");
+        } else {
+            assert!(stats.hits > 0, "epoch {e}: expected cache hits at K={k}");
+            assert!(stats.hits <= stats.candidates);
+            let rate = stats.hit_rate();
+            assert!(rate > 0.0 && rate <= 1.0, "epoch {e}: hit rate {rate}");
+            let mean = stats.mean_staleness();
+            assert!(
+                mean <= k as f64,
+                "epoch {e}: mean staleness {mean} exceeds bound {k}"
+            );
+        }
+        total_off += eo;
+        total_on += en;
+    }
+    assert!(
+        total_on < total_off,
+        "pruning never engaged: {total_on} vs {total_off} sampled edges"
+    );
+    assert!(on.cache_bytes() > 0, "store must charge static bytes");
+    assert!(off.cache_bytes() == 0);
+}
+
+/// Two runs that differ only in the staleness bound share their first two
+/// epochs bit-for-bit (the epoch-2 gate admits exactly the epoch-1 stamps
+/// for every K ≥ 1), and a K = 0 run serves strictly less — the engine-level
+/// face of the gate-nesting property.
+#[test]
+fn epoch_two_hits_agree_across_positive_bounds() {
+    let ds = datasets::load(&tiny_spec());
+    let hits_at_epoch_two = |k: u64| {
+        let mut eng = engine(&ds, Arch::Gcn, Some(k));
+        eng.train_epoch(&ds);
+        eng.train_epoch(&ds);
+        let s = eng.cache_stats_last_epoch().unwrap();
+        (s.hits, s.candidates, param_bits(eng.params()))
+    };
+    let (h1, c1, p1) = hits_at_epoch_two(1);
+    let (h2, c2, p2) = hits_at_epoch_two(2);
+    let (h4, c4, p4) = hits_at_epoch_two(4);
+    assert!(h1 > 0, "expected hits at epoch 2");
+    assert_eq!((h1, c1), (h2, c2), "epoch-2 gates are identical for K >= 1");
+    assert_eq!((h1, c1), (h4, c4));
+    assert_eq!(p1, p2, "epoch-2 params must agree for K >= 1");
+    assert_eq!(p1, p4);
+    let (h0, _, _) = hits_at_epoch_two(0);
+    assert_eq!(h0, 0, "K = 0 must never serve");
+}
+
+/// Full cache-on training is bit-deterministic across kernel thread counts
+/// and prefetch on/off: the gate is frozen per epoch, pushes happen only on
+/// the training thread, and stitching is row-owned copying.
+#[test]
+fn cache_training_bit_deterministic_across_threads_and_prefetch() {
+    let ds = datasets::load(&tiny_spec());
+    let run = |threads: usize, prefetch: bool| {
+        let cfg = MiniBatchConfig {
+            batch_size: 64,
+            fanouts: vec![3, 5],
+            prefetch,
+            cache: Some(2),
+        };
+        let mut eng = MiniBatchEngine::paper_default(&ds, Arch::SageMean, cfg, 7)
+            .unwrap()
+            .with_threads(threads);
+        let losses: Vec<f64> = (0..3).map(|_| eng.train_epoch(&ds).loss).collect();
+        let stats = eng.cache_stats_last_epoch().unwrap();
+        (losses, param_bits(eng.params()), stats)
+    };
+    let (l_ref, p_ref, s_ref) = run(1, true);
+    assert!(s_ref.hits > 0, "cache must engage for the test to bite");
+    for (t, p) in [(4usize, true), (1, false), (4, false)] {
+        let (l, w, s) = run(t, p);
+        assert_eq!(l_ref, l, "losses diverged at threads={t} prefetch={p}");
+        assert_eq!(p_ref, w, "weights diverged at threads={t} prefetch={p}");
+        assert_eq!(s_ref, s, "cache counters diverged at threads={t} prefetch={p}");
+    }
+}
+
+/// Evaluation is exact and side-effect free with the cache enabled: it
+/// never serves stale rows (full-neighborhood blocks carry no cached
+/// partition), never refreshes the store, and leaves the training
+/// trajectory untouched.
+#[test]
+fn evaluation_ignores_and_preserves_the_store() {
+    let ds = datasets::load(&tiny_spec());
+    // Twin runs: one evaluates between epochs, one doesn't.
+    let mut plain = engine(&ds, Arch::SageMean, Some(2));
+    let mut evald = engine(&ds, Arch::SageMean, Some(2));
+    for _ in 0..3 {
+        plain.train_epoch(&ds);
+        evald.train_epoch(&ds);
+        let a = evald.evaluate(&ds, Mask::Val);
+        let b = evald.evaluate(&ds, Mask::Val);
+        assert_eq!(a, b, "repeated evaluation must be pure");
+    }
+    assert_eq!(
+        param_bits(plain.params()),
+        param_bits(evald.params()),
+        "interleaved evaluation perturbed training"
+    );
+    assert_eq!(
+        plain.cache_stats_last_epoch().unwrap(),
+        evald.cache_stats_last_epoch().unwrap(),
+        "evaluation leaked into the cache counters"
+    );
+}

@@ -47,7 +47,7 @@ fn sampled_blocks_bitwise_identical_across_threads() {
             SampleCtx::for_arch(Arch::SageMean, &ds, &[3, 7], 3, 42, ExecPolicy::serial())
                 .unwrap();
         let mut scratch = SamplerScratch::new(ds.spec.nodes);
-        ctx.sample_batch(&mut scratch, &ds.features, &ds.labels, &seeds, 9, &ctx.fanouts)
+        ctx.sample_batch(&mut scratch, &ds.features, &ds.labels, &seeds, 9, &ctx.fanouts, None)
     };
     for t in [2usize, 4, 16] {
         let ctx = SampleCtx::for_arch(
@@ -61,7 +61,7 @@ fn sampled_blocks_bitwise_identical_across_threads() {
         .unwrap();
         let mut scratch = SamplerScratch::new(ds.spec.nodes);
         let mb =
-            ctx.sample_batch(&mut scratch, &ds.features, &ds.labels, &seeds, 9, &ctx.fanouts);
+            ctx.sample_batch(&mut scratch, &ds.features, &ds.labels, &seeds, 9, &ctx.fanouts, None);
         assert_eq!(reference.blocks, mb.blocks, "threads={t}");
         assert_eq!(reference.x0.data, mb.x0.data, "threads={t}");
         assert_eq!(reference.seeds, mb.seeds);
@@ -79,6 +79,7 @@ fn sampled_training_bit_deterministic() {
             batch_size: 64,
             fanouts: vec![3, 5],
             prefetch,
+            cache: None,
         };
         let mut eng = MiniBatchEngine::paper_default(&ds, Arch::SageMean, cfg, 7)
             .unwrap()
@@ -116,6 +117,7 @@ fn full_fanout_matches_full_batch_engine() {
             batch_size: ds.spec.nodes, // one batch spans every train seed
             fanouts: vec![0],          // full neighborhood at every layer
             prefetch: true,
+            cache: None,
         };
         let mut mb = MiniBatchEngine::new(
             &ds,
@@ -170,6 +172,7 @@ fn minibatch_peak_bytes_below_full_batch_on_arxiv_replica() {
         batch_size: 256,
         fanouts: vec![5, 5],
         prefetch: true,
+        cache: None,
     };
     let mut mb = MiniBatchEngine::paper_default(&ds, Arch::Gcn, cfg, 5).unwrap();
     let first = mb.train_epoch(&ds).loss;
