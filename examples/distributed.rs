@@ -1,6 +1,6 @@
 //! Distributed training walk-through (paper §IV-E): partitions a scaled
-//! Yelp-like graph across 4 simulated ranks and contrasts Morphling's two
-//! distributed contributions against their baselines:
+//! Yelp-like graph across 4 threaded rank workers and contrasts
+//! Morphling's two distributed contributions against their baselines:
 //!
 //! - degree-aware hierarchical partitioner vs contiguous vertex chunks
 //!   (straggler imbalance);
@@ -57,6 +57,7 @@ fn main() {
                 pipelined,
                 network: NetworkModel::ethernet(), // slow fabric: comm visible
                 seed: 42,
+                ..Default::default()
             };
             let rep = train_distributed(&ds, &cfg);
             let comm: f64 = rep.ranks.iter().map(|s| s.exposed_comm_secs).sum();

@@ -1,8 +1,12 @@
-//! Figures 6 & 7: distributed per-epoch time and speedups, plus the §V-E2
-//! attribution ablation (partitioner × communication pipeline).
+//! Figures 6 & 7: distributed per-epoch time and speedups — measured
+//! wall clock (rank workers are real threads, so epoch time scales with
+//! `--worlds` on a multi-core host) next to the α–β modeled fabric
+//! column — plus the §V-E2 attribution ablation (partitioner ×
+//! communication pipeline).
 //!
 //!     cargo bench --bench dist_epoch
-//!     cargo bench --bench dist_epoch -- --world 8 --datasets yelp
+//!     cargo bench --bench dist_epoch -- --worlds 1,2,4,8 --datasets yelp
+//!     cargo bench --bench dist_epoch -- --mode minibatch --cache
 //!     cargo bench --bench dist_epoch -- --json dist.json   # perf trajectory
 //!
 //! Morphling = hierarchical partitioner + pipelined gradient reduction;
@@ -13,19 +17,31 @@
 
 mod common;
 
-use morphling::dist::runtime::{train_distributed, DistConfig, PartitionerKind};
+use morphling::dist::runtime::{train_distributed, DistConfig, DistMode, PartitionerKind};
 use morphling::dist::NetworkModel;
 use morphling::graph::datasets;
-use morphling::util::argparse::Args;
+use morphling::util::argparse::{usize_list, Args};
 use morphling::util::table::{fmt_secs, Table};
 
+struct Sample {
+    /// Measured wall-clock sustained epoch seconds.
+    measured: f64,
+    /// α–β modeled sustained epoch seconds.
+    modeled: f64,
+    /// Mean per-rank exposed (modeled) communication seconds.
+    comm: f64,
+}
+
+#[allow(clippy::too_many_arguments)]
 fn run_cfg(
     ds: &morphling::graph::Dataset,
     world: usize,
     pk: PartitionerKind,
     pipelined: bool,
     epochs: usize,
-) -> (f64, f64) {
+    mode: DistMode,
+    cache: Option<u64>,
+) -> Sample {
     let cfg = DistConfig {
         world,
         epochs,
@@ -33,80 +49,115 @@ fn run_cfg(
         pipelined,
         network: NetworkModel::ethernet(),
         seed: 42,
+        mode,
+        cache,
+        ..Default::default()
     };
     let r = train_distributed(ds, &cfg);
     let comm: f64 = r.ranks.iter().map(|s| s.exposed_comm_secs).sum();
-    (r.sustained_epoch_secs(), comm / world as f64)
+    Sample {
+        measured: r.sustained_epoch_secs(),
+        modeled: r.sustained_modeled_secs(),
+        comm: comm / world as f64,
+    }
 }
 
 fn main() {
     let args = Args::from_env();
-    let world = args.usize_or("world", 4);
+    let worlds =
+        usize_list("worlds", args.get_or("worlds", "1,2,4")).expect("--worlds wants a list");
     let epochs = args.usize_or("epochs", 5);
+    let cache = (args.flag("cache") || args.get("cache-staleness").is_some())
+        .then(|| args.u64_or("cache-staleness", 2));
+    let modes: Vec<(DistMode, &str)> = match args.get_or("mode", "both") {
+        "full" => vec![(DistMode::Full, "full")],
+        "minibatch" => vec![(DistMode::Sampled, "sampled")],
+        _ => vec![(DistMode::Full, "full"), (DistMode::Sampled, "sampled")],
+    };
     let default = "ppi,flickr,ogbn-arxiv,yelp,ogbn-products,reddit";
     let names: Vec<&str> = args.get_or("datasets", default).split(',').collect();
+    let world_max = worlds.iter().copied().max().unwrap_or(4);
 
-    println!("=== Fig 6/7: distributed per-epoch time, {world} ranks ===\n");
-    let mut t = Table::new(vec![
-        "dataset",
-        "morphling",
-        "baseline(chunk+blocking)",
-        "speedup",
-        "morphling-comm",
-        "baseline-comm",
-    ]);
-    let mut abl = Table::new(vec!["dataset", "hier+pipe", "hier+block", "chunk+pipe", "chunk+block"]);
-    // JSON records: (dataset, config, epoch_secs, mean exposed-comm secs)
-    let mut records: Vec<(String, &'static str, f64, f64)> = Vec::new();
+    println!("=== Fig 6/7: distributed per-epoch time, worlds {worlds:?} ===\n");
+    // JSON records: one per (dataset, mode, config, world).
+    let mut records: Vec<String> = Vec::new();
     for name in &names {
         let Some(ds) = datasets::load_by_name(name) else {
             eprintln!("unknown dataset {name}");
             continue;
         };
-        let (t_m, c_m) = run_cfg(&ds, world, PartitionerKind::Hierarchical, true, epochs);
-        let (t_hb, c_hb) = run_cfg(&ds, world, PartitionerKind::Hierarchical, false, epochs);
-        let (t_cp, c_cp) = run_cfg(&ds, world, PartitionerKind::VertexChunk, true, epochs);
-        let (t_b, c_b) = run_cfg(&ds, world, PartitionerKind::VertexChunk, false, epochs);
-        for (cfg, secs, comm) in [
-            ("hier+pipe", t_m, c_m),
-            ("hier+block", t_hb, c_hb),
-            ("chunk+pipe", t_cp, c_cp),
-            ("chunk+block", t_b, c_b),
-        ] {
-            records.push((name.to_string(), cfg, secs, comm));
+        for (mode, mode_name) in &modes {
+            // --- measured wall-clock scaling sweep over --worlds ---
+            let mut scale = Table::new(vec![
+                "world",
+                "measured",
+                "speedup",
+                "modeled",
+                "exposed-comm",
+            ]);
+            let mut base = f64::NAN;
+            for &w in &worlds {
+                let s = run_cfg(
+                    &ds,
+                    w,
+                    PartitionerKind::Hierarchical,
+                    true,
+                    epochs,
+                    *mode,
+                    cache,
+                );
+                if base.is_nan() {
+                    base = s.measured;
+                }
+                scale.row(vec![
+                    w.to_string(),
+                    fmt_secs(s.measured),
+                    format!("{:.2}x", base / s.measured),
+                    fmt_secs(s.modeled),
+                    fmt_secs(s.comm),
+                ]);
+                records.push(format!(
+                    "{{\"dataset\":\"{name}\",\"mode\":\"{mode_name}\",\"config\":\"hier+pipe\",\"world\":{w},\"epoch_secs\":{:.9},\"modeled_epoch_secs\":{:.9},\"exposed_comm_secs\":{:.9}}}",
+                    s.measured, s.modeled, s.comm
+                ));
+            }
+            println!("[{name}] {mode_name} mode (hier+pipe; speedup = measured vs world {}):", worlds.first().copied().unwrap_or(1));
+            print!("{}", scale.render());
+
+            // --- §V-E2 attribution ablation at the largest world ---
+            let mut abl =
+                Table::new(vec!["config", "measured", "modeled", "exposed-comm"]);
+            for (cfg_name, pk, pipe) in [
+                ("hier+pipe", PartitionerKind::Hierarchical, true),
+                ("hier+block", PartitionerKind::Hierarchical, false),
+                ("chunk+pipe", PartitionerKind::VertexChunk, true),
+                ("chunk+block", PartitionerKind::VertexChunk, false),
+            ] {
+                let s = run_cfg(&ds, world_max, pk, pipe, epochs, *mode, cache);
+                abl.row(vec![
+                    cfg_name.to_string(),
+                    fmt_secs(s.measured),
+                    fmt_secs(s.modeled),
+                    fmt_secs(s.comm),
+                ]);
+                records.push(format!(
+                    "{{\"dataset\":\"{name}\",\"mode\":\"{mode_name}\",\"config\":\"{cfg_name}\",\"world\":{world_max},\"epoch_secs\":{:.9},\"modeled_epoch_secs\":{:.9},\"exposed_comm_secs\":{:.9}}}",
+                    s.measured, s.modeled, s.comm
+                ));
+            }
+            println!("attribution ablation (partitioner x pipeline) at world {world_max}:");
+            print!("{}", abl.render());
+            println!();
+            eprintln!("  [{name}/{mode_name}] done");
         }
-        t.row(vec![
-            name.to_string(),
-            fmt_secs(t_m),
-            fmt_secs(t_b),
-            format!("{:.2}x", t_b / t_m),
-            fmt_secs(c_m),
-            fmt_secs(c_b),
-        ]);
-        abl.row(vec![
-            name.to_string(),
-            fmt_secs(t_m),
-            fmt_secs(t_hb),
-            fmt_secs(t_cp),
-            fmt_secs(t_b),
-        ]);
-        eprintln!("  [{name}] done");
     }
-    println!("Morphling vs baseline (Fig 6/7):");
-    print!("{}", t.render());
-    println!("\nAttribution ablation (§V-E2): partitioner × pipeline");
-    print!("{}", abl.render());
-    println!("\nexpected shape: gains grow with graph size; small graphs show parity\n(fixed runtime overhead dominates), matching the paper's PPI/Flickr observation.");
+    println!(
+        "expected shape: measured speedup grows with cores and graph size (single-core\n\
+         hosts show parity — the modeled column still separates the fabrics); small\n\
+         graphs show parity, matching the paper's PPI/Flickr observation."
+    );
 
     if let Some(path) = args.get("json") {
-        let body: Vec<String> = records
-            .iter()
-            .map(|(ds, cfg, secs, comm)| {
-                format!(
-                    "{{\"dataset\":\"{ds}\",\"config\":\"{cfg}\",\"world\":{world},\"epoch_secs\":{secs:.9},\"exposed_comm_secs\":{comm:.9}}}"
-                )
-            })
-            .collect();
-        common::write_json_records(path, &body);
+        common::write_json_records(path, &records);
     }
 }

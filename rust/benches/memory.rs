@@ -22,11 +22,13 @@
 mod common;
 
 use morphling::baselines::{GatherScatterEngine, NonFusedEngine};
+use morphling::dist::g2l::build_views_with_features;
 use morphling::engine::native::NativeEngine;
 use morphling::engine::Engine;
 use morphling::graph::datasets;
 use morphling::memtrack::{PeakRegion, TrackingAlloc};
 use morphling::model::Arch;
+use morphling::partition::chunk_partition;
 use morphling::sampler::{MiniBatchConfig, MiniBatchEngine};
 use morphling::util::argparse::{usize_list, Args};
 use morphling::util::table::{fmt_bytes, Table};
@@ -58,7 +60,7 @@ fn main() {
     ]);
     // JSON records: (dataset, engine label, analytic, measured)
     let mut records: Vec<(String, &'static str, usize, usize)> = Vec::new();
-    for name in names {
+    for &name in &names {
         let Some(ds) = datasets::load_by_name(name) else {
             eprintln!("unknown dataset {name}");
             continue;
@@ -129,6 +131,69 @@ fn main() {
     );
     print!("{}", t.render());
     println!("\npaper Table III ratios for reference: PyG 6–15x, DGL 1.7–3.4x over Morphling");
+
+    // --- distributed feature sharding: per-shard slice bytes vs densified ---
+    // NELL-class feature matrices (99%+ zeros) must shard without
+    // densifying: `g2l::build_views_with_features` keeps each shard's rows
+    // as CSR whenever that is smaller. The sum of slice bytes is the
+    // distributed runtime's peak feature footprint per host.
+    println!("\n=== dist feature slices (4-way chunk partition): shard bytes vs dense ===\n");
+    let mut ft = Table::new(vec![
+        "dataset",
+        "sparsity",
+        "dense",
+        "sliced",
+        "savings",
+        "csr-shards",
+    ]);
+    let mut slice_names: Vec<&str> = vec!["nell"];
+    slice_names.extend(names.iter().copied().filter(|n| *n != "nell"));
+    for name in slice_names {
+        let Some(ds) = datasets::load_by_name(name) else {
+            continue;
+        };
+        let parts = chunk_partition(ds.spec.nodes, 4);
+        let views = build_views_with_features(&ds.graph, &parts, &ds.features);
+        let dense: usize = ds.features.nbytes();
+        let sliced: usize = views
+            .iter()
+            .map(|v| {
+                v.feats
+                    .as_ref()
+                    .expect("build_views_with_features always attaches slices")
+                    .nbytes()
+            })
+            .sum();
+        let csr = views
+            .iter()
+            .filter(|v| v.feats.as_ref().is_some_and(|f| f.is_sparse()))
+            .count();
+        // The slice chooser takes CSR only when strictly smaller, so the
+        // sharded total can never exceed the densified total — and on
+        // NELL-class sparsity it must win outright.
+        assert!(
+            sliced <= dense,
+            "[{name}] sharded feature bytes exceed densified ({sliced} > {dense})"
+        );
+        if ds.spec.feat_sparsity >= 0.9 {
+            assert!(
+                sliced < dense,
+                "[{name}] {:.1}%-sparse features should shard as CSR below dense bytes",
+                ds.spec.feat_sparsity * 100.0
+            );
+        }
+        ft.row(vec![
+            name.to_string(),
+            format!("{:.2}", ds.spec.feat_sparsity),
+            fmt_bytes(dense),
+            fmt_bytes(sliced),
+            format!("{:.2}x", dense as f64 / sliced as f64),
+            format!("{csr}/4"),
+        ]);
+        records.push((name.to_string(), "dist-featslice", dense, sliced));
+    }
+    print!("{}", ft.render());
+    println!("(JSON: engine dist-featslice, analytic_bytes = densified, measured_bytes = sliced)");
 
     if let Some(path) = args.get("json") {
         let body: Vec<String> = records

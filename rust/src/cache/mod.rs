@@ -98,19 +98,44 @@ impl HistCache {
     /// epochs (`0 < stamp < epoch` and `epoch − stamp ≤ K`). Computed once
     /// per epoch on the training thread; the sampler reads only this.
     pub fn gate(&self, epoch: u64) -> CacheGate {
-        let k = self.staleness;
         CacheGate {
-            fresh: self
-                .levels
-                .iter()
-                .map(|lv| {
-                    lv.stamp
-                        .iter()
-                        .map(|&s| s > 0 && (s as u64) < epoch && epoch - s as u64 <= k)
+            fresh: (0..self.levels.len())
+                .map(|l| {
+                    (0..self.levels[l].stamp.len())
+                        .map(|v| self.servable(l, v, epoch))
                         .collect()
                 })
                 .collect(),
         }
+    }
+
+    /// The servability predicate behind [`HistCache::gate`], exposed so the
+    /// distributed runtime can assemble a *global* [`CacheGate`] from the
+    /// union of per-shard stores (each store indexed by shard-local row).
+    pub fn servable(&self, level: usize, id: usize, epoch: u64) -> bool {
+        let s = self.levels[level].stamp[id] as u64;
+        s > 0 && s < epoch && epoch - s <= self.staleness
+    }
+
+    /// Epoch stamp of one stored row (0 = never written).
+    pub fn stamp(&self, level: usize, id: usize) -> u64 {
+        self.levels[level].stamp[id] as u64
+    }
+
+    /// Direct read of one stored row — the distributed halo path packs
+    /// these into coalesced per-peer buffers instead of calling
+    /// [`HistCache::stitch`] on a foreign store.
+    pub fn row(&self, level: usize, id: usize) -> &[f32] {
+        self.levels[level].emb.row(id)
+    }
+
+    /// Push a single row (the distributed trainer stores only the rows a
+    /// shard *owns*, which are not a prefix of the block's dst set).
+    pub fn push_row(&mut self, level: usize, id: usize, row: &[f32], epoch: u64) {
+        let lv = &mut self.levels[level];
+        debug_assert_eq!(row.len(), lv.emb.cols);
+        lv.emb.row_mut(id).copy_from_slice(row);
+        lv.stamp[id] = epoch as u32;
     }
 
     /// Push-on-compute refresh: store the first `ids.len()` rows of `h`
@@ -167,6 +192,13 @@ pub struct CacheGate {
 }
 
 impl CacheGate {
+    /// Assemble a gate from externally computed per-level bitmasks — the
+    /// distributed runtime builds one global mask per level by unioning
+    /// every shard's [`HistCache::servable`] verdicts over its owned rows.
+    pub fn from_levels(fresh: Vec<Vec<bool>>) -> CacheGate {
+        CacheGate { fresh }
+    }
+
     /// Freshness bitmask for one cached level.
     pub fn level(&self, level: usize) -> &[bool] {
         &self.fresh[level]

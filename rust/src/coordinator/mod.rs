@@ -5,6 +5,10 @@
 //! loop.
 
 use crate::baselines::{GatherScatterEngine, NonFusedEngine};
+use crate::dist::runtime::{
+    train_distributed, DistConfig, DistMode, DistReport, PartitionerKind,
+};
+use crate::dist::NetworkModel;
 use crate::engine::native::NativeEngine;
 use crate::engine::sparsity::{calibrate_gamma_ex, decide, SparsityPolicy};
 use crate::engine::{Engine, EngineKind, RunMode};
@@ -15,7 +19,7 @@ use crate::model::{Arch, ModelConfig};
 use crate::optim::OptKind;
 use crate::runtime::engine::PjrtVariant;
 use crate::runtime::PjrtEngine;
-use crate::sampler::{MiniBatchConfig, MiniBatchEngine};
+use crate::sampler::{expand_fanouts, MiniBatchConfig, MiniBatchEngine};
 use crate::train::{train, TrainConfig, TrainReport};
 use anyhow::{anyhow, Result};
 use std::path::PathBuf;
@@ -171,6 +175,126 @@ pub fn build_engine(spec: &TrainSpec, ds: &Dataset) -> Result<Box<dyn Engine>> {
     })
 }
 
+/// The distributed-run specification (the `dist` subcommand's parsed
+/// form) — the coordinator validates it and assembles the
+/// [`DistConfig`] the runtime executes.
+#[derive(Clone, Debug)]
+pub struct DistSpec {
+    pub dataset: String,
+    /// Rank worker threads.
+    pub world: usize,
+    pub epochs: usize,
+    /// Contiguous vertex chunks instead of the hierarchical partitioner.
+    pub chunk: bool,
+    /// Overlap gradient all-reduce with backward compute.
+    pub pipelined: bool,
+    /// Fabric preset name: `ideal`, `ethernet`, or `infiniband`.
+    pub network: String,
+    pub seed: u64,
+    /// Full-batch epochs or mini-batch neighbor-sampled epochs
+    /// (`--mode minibatch` / `--dist-sampled`).
+    pub mode: RunMode,
+    /// Sampled mode: virtual shard count (0 = auto `max(world, 8)`).
+    pub shards: usize,
+    /// Sampled mode: global seed-batch size.
+    pub batch_size: usize,
+    /// Sampled mode: per-layer fanouts (0 = full neighborhood).
+    pub fanouts: Vec<usize>,
+    /// Kernel threads per rank worker (0 = `MORPHLING_THREADS` env).
+    pub threads: usize,
+    /// Sampled mode: per-shard historical-embedding cache.
+    pub cache: bool,
+    /// Staleness bound K for `cache` (0 = exact, bitwise cache-off).
+    pub cache_staleness: u64,
+}
+
+impl Default for DistSpec {
+    fn default() -> Self {
+        DistSpec {
+            dataset: "corafull".to_string(),
+            world: 4,
+            epochs: 10,
+            chunk: false,
+            pipelined: true,
+            network: "infiniband".to_string(),
+            seed: 42,
+            mode: RunMode::Full,
+            shards: 0,
+            batch_size: 512,
+            fanouts: vec![10, 25],
+            threads: 0,
+            cache: false,
+            cache_staleness: 1,
+        }
+    }
+}
+
+/// Fabric presets the `--network` flag accepts.
+pub const NETWORK_VALID: &[&str] = &["infiniband", "ethernet", "ideal"];
+
+/// Validate a [`DistSpec`] and run distributed training: load the
+/// dataset, check the sampled-mode knob combinations (same rules as the
+/// serial `train` path — the cache is a mini-batch construct), and hand
+/// the assembled [`DistConfig`] to
+/// [`train_distributed`](crate::dist::runtime::train_distributed).
+pub fn run_dist(spec: &DistSpec) -> Result<DistReport> {
+    if spec.world == 0 {
+        return Err(anyhow!("--world must be at least 1"));
+    }
+    let network = match spec.network.as_str() {
+        "ideal" => NetworkModel::ideal(),
+        "ethernet" => NetworkModel::ethernet(),
+        "infiniband" => NetworkModel::infiniband(),
+        other => {
+            return Err(anyhow!(
+                "unknown --network '{other}' (valid: {})",
+                NETWORK_VALID.join("|")
+            ))
+        }
+    };
+    let mode = match spec.mode {
+        RunMode::Full => DistMode::Full,
+        RunMode::Minibatch => DistMode::Sampled,
+    };
+    if spec.cache && mode != DistMode::Sampled {
+        return Err(anyhow!(
+            "--cache/--cache-staleness apply to --mode minibatch only (got --mode {})",
+            spec.mode.name()
+        ));
+    }
+    let ds = datasets::load_by_name(&spec.dataset)
+        .ok_or_else(|| anyhow!("unknown dataset '{}' (see `morphling info`)", spec.dataset))?;
+    if mode == DistMode::Sampled {
+        // Validate fanouts *here* so a bad schedule is a CLI error, not a
+        // panic inside a rank worker.
+        let config =
+            ModelConfig::paper_default(Arch::Gcn, ds.spec.features, ds.spec.classes);
+        expand_fanouts(&spec.fanouts, config.num_layers()).map_err(anyhow::Error::msg)?;
+        if spec.batch_size == 0 {
+            return Err(anyhow!("--batch-size must be at least 1"));
+        }
+    }
+    let cfg = DistConfig {
+        world: spec.world,
+        epochs: spec.epochs,
+        partitioner: if spec.chunk {
+            PartitionerKind::VertexChunk
+        } else {
+            PartitionerKind::Hierarchical
+        },
+        pipelined: spec.pipelined,
+        network,
+        seed: spec.seed,
+        mode,
+        threads: spec.threads,
+        shards: spec.shards,
+        batch_size: spec.batch_size,
+        fanouts: spec.fanouts.clone(),
+        cache: spec.cache.then_some(spec.cache_staleness),
+    };
+    Ok(train_distributed(&ds, &cfg))
+}
+
 /// Outcome of a coordinated run.
 pub struct RunOutcome {
     pub report: TrainReport,
@@ -309,6 +433,63 @@ mod tests {
             ..Default::default()
         };
         assert!(run(&spec).is_err());
+    }
+
+    #[test]
+    fn dist_cache_rejected_in_full_mode() {
+        let spec = DistSpec {
+            cache: true,
+            ..Default::default()
+        };
+        assert!(run_dist(&spec).is_err());
+    }
+
+    #[test]
+    fn dist_rejects_unknown_network_and_zero_world() {
+        let bad_net = DistSpec {
+            network: "carrier-pigeon".into(),
+            ..Default::default()
+        };
+        assert!(run_dist(&bad_net).is_err());
+        let zero = DistSpec {
+            world: 0,
+            ..Default::default()
+        };
+        assert!(run_dist(&zero).is_err());
+    }
+
+    #[test]
+    fn dist_rejects_bad_fanout_schedule() {
+        let spec = DistSpec {
+            mode: RunMode::Minibatch,
+            fanouts: vec![4, 4, 4, 4],
+            epochs: 1,
+            ..Default::default()
+        };
+        assert!(run_dist(&spec).is_err());
+    }
+
+    #[test]
+    fn dist_sampled_smoke_via_coordinator() {
+        let spec = DistSpec {
+            dataset: "corafull".into(),
+            world: 2,
+            epochs: 2,
+            mode: RunMode::Minibatch,
+            batch_size: 1024,
+            fanouts: vec![4, 4],
+            network: "ideal".into(),
+            cache: true,
+            cache_staleness: 2,
+            threads: 1,
+            ..Default::default()
+        };
+        let r = run_dist(&spec).expect("sampled dist smoke run must succeed");
+        assert_eq!(r.mode, "sampled");
+        assert_eq!(r.world, 2);
+        assert_eq!(r.losses.len(), 2);
+        assert!(r.final_loss().is_finite());
+        assert!(r.cache.is_some());
     }
 
     #[test]

@@ -12,6 +12,98 @@
 
 use crate::graph::Graph;
 use crate::partition::Partitioning;
+use crate::tensor::{CsrMatrix, Matrix};
+
+/// One shard's slice of the global feature matrix: the rows it owns, in
+/// owned-prefix order. Kept in CSR when that is smaller than dense, so
+/// NELL-class sparse-feature datasets shard **without densifying** — the
+/// memory bench asserts sliced bytes stay below a dense copy.
+#[derive(Clone, Debug)]
+pub enum FeatSlice {
+    Dense(Matrix),
+    Csr(CsrMatrix),
+}
+
+impl FeatSlice {
+    /// Slice `rows` (global ids) out of `feats`, picking the smaller of the
+    /// dense gather and the CSR encoding by exact byte count.
+    pub fn build(feats: &Matrix, rows: &[u32]) -> FeatSlice {
+        let f = feats.cols;
+        let nnz: usize = rows
+            .iter()
+            .map(|&g| feats.row(g as usize).iter().filter(|&&v| v != 0.0).count())
+            .sum();
+        let dense_bytes = rows.len() * f * 4;
+        let csr_bytes = (rows.len() + 1) * 4 + nnz * 8;
+        if csr_bytes < dense_bytes {
+            let mut row_ptr = Vec::with_capacity(rows.len() + 1);
+            let mut col_idx = Vec::with_capacity(nnz);
+            let mut vals = Vec::with_capacity(nnz);
+            row_ptr.push(0u32);
+            for &g in rows {
+                for (c, &v) in feats.row(g as usize).iter().enumerate() {
+                    if v != 0.0 {
+                        col_idx.push(c as u32);
+                        vals.push(v);
+                    }
+                }
+                row_ptr.push(col_idx.len() as u32);
+            }
+            FeatSlice::Csr(CsrMatrix {
+                rows: rows.len(),
+                cols: f,
+                row_ptr,
+                col_idx,
+                vals,
+            })
+        } else {
+            let mut m = Matrix::zeros(rows.len(), f);
+            for (i, &g) in rows.iter().enumerate() {
+                m.row_mut(i).copy_from_slice(feats.row(g as usize));
+            }
+            FeatSlice::Dense(m)
+        }
+    }
+
+    pub fn rows(&self) -> usize {
+        match self {
+            FeatSlice::Dense(m) => m.rows,
+            FeatSlice::Csr(m) => m.rows,
+        }
+    }
+
+    pub fn cols(&self) -> usize {
+        match self {
+            FeatSlice::Dense(m) => m.cols,
+            FeatSlice::Csr(m) => m.cols,
+        }
+    }
+
+    pub fn is_sparse(&self) -> bool {
+        matches!(self, FeatSlice::Csr(_))
+    }
+
+    /// Expand local row `r` into `out` (zero-filled first for CSR rows).
+    pub fn copy_row_into(&self, r: usize, out: &mut [f32]) {
+        match self {
+            FeatSlice::Dense(m) => out.copy_from_slice(m.row(r)),
+            FeatSlice::Csr(m) => {
+                out.fill(0.0);
+                for e in m.row_ptr[r] as usize..m.row_ptr[r + 1] as usize {
+                    out[m.col_idx[e] as usize] = m.vals[e];
+                }
+            }
+        }
+    }
+
+    /// Byte footprint of the slice.
+    pub fn nbytes(&self) -> usize {
+        match self {
+            FeatSlice::Dense(m) => m.nbytes(),
+            FeatSlice::Csr(m) => m.nbytes(),
+        }
+    }
+}
 
 /// One rank's local window onto the global graph.
 #[derive(Clone, Debug)]
@@ -27,6 +119,9 @@ pub struct LocalView {
     /// Owning rank of each ghost slot (parallel to the ghost tail of
     /// `global_ids`).
     pub ghost_owner: Vec<u32>,
+    /// Feature rows of the owned prefix ([`build_views_with_features`]);
+    /// `None` for structure-only views.
+    pub feats: Option<FeatSlice>,
     n_local: usize,
 }
 
@@ -109,8 +204,22 @@ pub fn build_views(g: &Graph, p: &Partitioning) -> Vec<LocalView> {
             graph,
             global_ids,
             ghost_owner,
+            feats: None,
             n_local,
         });
+    }
+    views
+}
+
+/// [`build_views`] plus per-rank feature slices: each view carries its
+/// owned rows of `feats` as a [`FeatSlice`] (CSR when the slice is sparse
+/// enough to be smaller than dense). The global feature matrix can then be
+/// dropped on a real deployment — every row lives on exactly one rank and
+/// remote reads go through the coalesced halo exchange.
+pub fn build_views_with_features(g: &Graph, p: &Partitioning, feats: &Matrix) -> Vec<LocalView> {
+    let mut views = build_views(g, p);
+    for v in &mut views {
+        v.feats = Some(FeatSlice::build(feats, v.owned_global_ids()));
     }
     views
 }
@@ -141,7 +250,9 @@ mod tests {
                 g.num_edges()
             );
             for v in &views {
-                v.graph.validate().unwrap();
+                v.graph
+                    .validate()
+                    .expect("local view CSR must satisfy the graph invariants");
                 assert_eq!(v.n_ghost(), v.ghost_owner.len());
                 // owned rows keep their full global adjacency
                 for (lu, &gid) in v.owned_global_ids().iter().enumerate() {
@@ -193,6 +304,39 @@ mod tests {
                 );
             }
         }
+    }
+
+    /// Feature slices round-trip the owned rows exactly and stay sparse
+    /// (strictly smaller than a dense gather) on NELL-class features.
+    #[test]
+    fn feature_slices_roundtrip_and_stay_sparse() {
+        let ds = crate::graph::datasets::load_by_name("nell")
+            .expect("nell is a registered dataset");
+        let p = chunk_partition(ds.spec.nodes, 4);
+        let views = build_views_with_features(&ds.graph, &p, &ds.features);
+        let f = ds.features.cols;
+        let mut buf = vec![0.0f32; f];
+        for v in &views {
+            let slice = v.feats.as_ref().expect("with_features attaches a slice");
+            assert_eq!(slice.rows(), v.n_local());
+            assert_eq!(slice.cols(), f);
+            assert!(
+                slice.is_sparse(),
+                "nell features (99.2% sparse) must slice to CSR"
+            );
+            let dense_bytes = v.n_local() * f * 4;
+            assert!(slice.nbytes() < dense_bytes, "CSR slice must beat dense");
+            for (i, &g) in v.owned_global_ids().iter().enumerate() {
+                slice.copy_row_into(i, &mut buf);
+                assert_eq!(&buf[..], ds.features.row(g as usize), "row {g} mismatch");
+            }
+        }
+        // Dense features stay dense: zero-sparsity slice picks the gather.
+        let dense = Matrix::from_vec(4, 2, vec![1., 2., 3., 4., 5., 6., 7., 8.]);
+        let s = FeatSlice::build(&dense, &[2, 0]);
+        assert!(!s.is_sparse());
+        s.copy_row_into(0, &mut buf[..2]);
+        assert_eq!(&buf[..2], &[5., 6.]);
     }
 
     #[test]

@@ -1,0 +1,317 @@
+//! Coalesced halo exchange: per-peer deduplicated contiguous buffers.
+//!
+//! The original runtime moved ghost rows one at a time — fine for an α–β
+//! *model*, wrong for a real transport where every message pays latency.
+//! This module packs all rows a shard needs from one peer into a single
+//! contiguous [`PeerMsg`] (one memcpy'd segment per peer per exchange),
+//! which is what the [`crate::dist::NetworkModel`] prices: **the priced
+//! bytes are exactly the packed buffer sizes** (pinned by a unit test
+//! below), not an estimate.
+//!
+//! Two row encodings, chosen by the source representation:
+//! - dense rows: `vals` is a `rows × cols` row-major block, `meta` empty;
+//! - CSR rows (sparse feature slices): per row `meta` carries
+//!   `[nnz, col…]` and `vals` the non-zeros, so NELL-class features cross
+//!   the wire compressed, never densified.
+//!
+//! Only bytes that cross a *rank* boundary count as wire traffic: with
+//! more virtual shards than ranks, same-rank shard transfers are local
+//! memcpys and are excluded from [`HaloStats::wire_bytes`].
+
+use super::g2l::{FeatSlice, LocalView};
+use crate::tensor::Matrix;
+
+/// One coalesced per-peer message: every row the receiver needs from that
+/// peer, packed contiguously.
+#[derive(Clone, Debug, Default)]
+pub struct PeerMsg {
+    /// Row width after expansion.
+    pub cols: usize,
+    /// Number of packed rows.
+    pub n_rows: usize,
+    /// Sparse-row framing: `[nnz, col…]` per row; empty for dense packing.
+    pub meta: Vec<u32>,
+    /// Row values: `n_rows × cols` dense, or the concatenated non-zeros.
+    pub vals: Vec<f32>,
+}
+
+impl PeerMsg {
+    /// Empty dense-encoded message of width `cols`.
+    pub fn dense(cols: usize) -> PeerMsg {
+        PeerMsg {
+            cols,
+            ..PeerMsg::default()
+        }
+    }
+
+    /// Append one dense row.
+    pub fn push_dense_row(&mut self, row: &[f32]) {
+        debug_assert_eq!(row.len(), self.cols);
+        debug_assert!(self.meta.is_empty(), "message is sparse-encoded");
+        self.vals.extend_from_slice(row);
+        self.n_rows += 1;
+    }
+
+    /// On-the-wire size: every `u32`/`f32` word of the packed buffers.
+    pub fn nbytes(&self) -> usize {
+        (self.meta.len() + self.vals.len()) * 4
+    }
+}
+
+/// Pack rows of a [`FeatSlice`] (slice-local row indices) into one message,
+/// keeping the slice's encoding: CSR slices stay compressed on the wire.
+pub fn pack_feature_rows(slice: &FeatSlice, rows: &[u32]) -> PeerMsg {
+    match slice {
+        FeatSlice::Dense(m) => pack_dense_rows(m, rows),
+        FeatSlice::Csr(m) => {
+            let mut msg = PeerMsg::dense(m.cols);
+            for &r in rows {
+                let (s, e) = (m.row_ptr[r as usize] as usize, m.row_ptr[r as usize + 1] as usize);
+                msg.meta.push((e - s) as u32);
+                msg.meta.extend_from_slice(&m.col_idx[s..e]);
+                msg.vals.extend_from_slice(&m.vals[s..e]);
+                msg.n_rows += 1;
+            }
+            msg
+        }
+    }
+}
+
+/// Pack dense matrix rows into one message.
+pub fn pack_dense_rows(src: &Matrix, rows: &[u32]) -> PeerMsg {
+    let mut msg = PeerMsg::dense(src.cols);
+    for &r in rows {
+        msg.push_dense_row(src.row(r as usize));
+    }
+    msg
+}
+
+/// Unpack a received message into `out`: packed row `i` lands in row
+/// `dst_rows[i]`.
+pub fn unpack_rows(msg: &PeerMsg, dst_rows: &[u32], out: &mut Matrix) {
+    assert_eq!(msg.n_rows, dst_rows.len(), "message/destination row mismatch");
+    assert_eq!(msg.cols, out.cols, "message width mismatch");
+    if msg.meta.is_empty() {
+        for (i, &d) in dst_rows.iter().enumerate() {
+            out.row_mut(d as usize)
+                .copy_from_slice(&msg.vals[i * msg.cols..(i + 1) * msg.cols]);
+        }
+    } else {
+        let (mut mi, mut vi) = (0usize, 0usize);
+        for &d in dst_rows {
+            let nnz = msg.meta[mi] as usize;
+            mi += 1;
+            let row = out.row_mut(d as usize);
+            row.fill(0.0);
+            for k in 0..nnz {
+                row[msg.meta[mi + k] as usize] = msg.vals[vi + k];
+            }
+            mi += nnz;
+            vi += nnz;
+        }
+    }
+}
+
+/// Byte/message accounting of one halo exchange. `wire_*` counts only
+/// traffic that crossed a rank boundary (module docs); `remote_rows`
+/// counts every row served by a foreign shard, same-rank or not.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct HaloStats {
+    pub wire_bytes: usize,
+    pub wire_msgs: usize,
+    pub remote_rows: usize,
+}
+
+impl HaloStats {
+    pub fn add(&mut self, o: HaloStats) {
+        self.wire_bytes += o.wire_bytes;
+        self.wire_msgs += o.wire_msgs;
+        self.remote_rows += o.remote_rows;
+    }
+}
+
+/// Fetch feature rows `ids` (global) into rows `0..ids.len()` of `out` on
+/// behalf of `shard`: owned rows expand straight from the local slice,
+/// remote rows are grouped per owning peer, packed into one [`PeerMsg`]
+/// each (peers ascending), and unpacked in place. `owner_row[g]` is `g`'s
+/// row inside its owner's slice; `rank_of[s]` maps shards to physical
+/// ranks for the wire accounting.
+pub fn fetch_feature_rows(
+    shard: usize,
+    ids: &[u32],
+    assign: &[u32],
+    owner_row: &[u32],
+    rank_of: &[usize],
+    views: &[LocalView],
+    out: &mut Matrix,
+) -> HaloStats {
+    let mut groups: Vec<Vec<(u32, u32)>> = vec![Vec::new(); views.len()];
+    let own = views[shard]
+        .feats
+        .as_ref()
+        .expect("halo fetch requires views built with feature slices");
+    for (i, &g) in ids.iter().enumerate() {
+        let owner = assign[g as usize] as usize;
+        if owner == shard {
+            own.copy_row_into(owner_row[g as usize] as usize, out.row_mut(i));
+        } else {
+            groups[owner].push((owner_row[g as usize], i as u32));
+        }
+    }
+    let mut stats = HaloStats::default();
+    let mut src_rows: Vec<u32> = Vec::new();
+    let mut dst_rows: Vec<u32> = Vec::new();
+    for (p, grp) in groups.iter().enumerate() {
+        if grp.is_empty() {
+            continue;
+        }
+        src_rows.clear();
+        dst_rows.clear();
+        src_rows.extend(grp.iter().map(|&(s, _)| s));
+        dst_rows.extend(grp.iter().map(|&(_, d)| d));
+        let slice = views[p]
+            .feats
+            .as_ref()
+            .expect("halo fetch requires views built with feature slices");
+        let msg = pack_feature_rows(slice, &src_rows);
+        unpack_rows(&msg, &dst_rows, out);
+        stats.remote_rows += grp.len();
+        if rank_of[p] != rank_of[shard] {
+            stats.wire_bytes += msg.nbytes();
+            stats.wire_msgs += 1;
+        }
+    }
+    stats
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dist::g2l::build_views_with_features;
+    use crate::dist::NetworkModel;
+    use crate::graph::Graph;
+    use crate::partition::{chunk_partition, Partitioning};
+
+    fn sparse_feats() -> Matrix {
+        // 6 nodes × 8 features, mostly zero → slices encode as CSR.
+        let mut m = Matrix::zeros(6, 8);
+        for i in 0..6 {
+            m.set(i, i % 8, (i + 1) as f32);
+            m.set(i, (i + 3) % 8, 0.5);
+        }
+        m
+    }
+
+    fn two_shard_setup() -> (Vec<LocalView>, Partitioning) {
+        let g = Graph::from_edges(6, &[(0, 3), (1, 4), (2, 5), (3, 0), (4, 1), (5, 2)]);
+        let p = chunk_partition(6, 2);
+        let views = build_views_with_features(&g, &p, &sparse_feats());
+        (views, p)
+    }
+
+    #[test]
+    fn dense_pack_unpack_roundtrip() {
+        let src = Matrix::from_vec(3, 2, vec![1., 2., 3., 4., 5., 6.]);
+        let msg = pack_dense_rows(&src, &[2, 0]);
+        assert_eq!(msg.n_rows, 2);
+        assert_eq!(msg.nbytes(), 2 * 2 * 4);
+        let mut out = Matrix::zeros(4, 2);
+        unpack_rows(&msg, &[1, 3], &mut out);
+        assert_eq!(out.row(1), &[5., 6.]);
+        assert_eq!(out.row(3), &[1., 2.]);
+    }
+
+    #[test]
+    fn sparse_pack_keeps_rows_compressed() {
+        let feats = sparse_feats();
+        let slice = FeatSlice::build(&feats, &[0, 1, 2, 3, 4, 5]);
+        assert!(slice.is_sparse());
+        let msg = pack_feature_rows(&slice, &[4, 1]);
+        // 2 rows × 2 nnz each: meta = 2×(1 + 2) words, vals = 4 words.
+        assert_eq!(msg.nbytes(), (2 * 3 + 4) * 4);
+        assert!(msg.nbytes() < 2 * 8 * 4, "wire rows must stay compressed");
+        let mut out = Matrix::zeros(2, 8);
+        unpack_rows(&msg, &[0, 1], &mut out);
+        assert_eq!(out.row(0), feats.row(4));
+        assert_eq!(out.row(1), feats.row(1));
+    }
+
+    #[test]
+    fn fetch_serves_local_and_remote_rows() {
+        let (views, p) = two_shard_setup();
+        let feats = sparse_feats();
+        let owner_row = owner_rows(&views, 6);
+        let ids = [0u32, 4, 2, 5];
+        let mut out = Matrix::zeros(ids.len(), 8);
+        let stats =
+            fetch_feature_rows(0, &ids, &p.assign, &owner_row, &[0, 1], &views, &mut out);
+        for (i, &g) in ids.iter().enumerate() {
+            assert_eq!(out.row(i), feats.row(g as usize), "row {g}");
+        }
+        assert_eq!(stats.remote_rows, 2, "rows 4 and 5 live on shard 1");
+        assert_eq!(stats.wire_msgs, 1, "one coalesced message per peer");
+        assert!(stats.wire_bytes > 0);
+    }
+
+    #[test]
+    fn same_rank_shards_pay_no_wire_bytes() {
+        let (views, p) = two_shard_setup();
+        let owner_row = owner_rows(&views, 6);
+        let mut out = Matrix::zeros(2, 8);
+        let stats =
+            fetch_feature_rows(0, &[4, 5], &p.assign, &owner_row, &[0, 0], &views, &mut out);
+        assert_eq!(stats.remote_rows, 2);
+        assert_eq!(stats.wire_bytes, 0, "co-located shards exchange in memory");
+        assert_eq!(stats.wire_msgs, 0);
+    }
+
+    /// The coalescing satellite's contract: the bytes the α–β model prices
+    /// are exactly the packed per-peer buffer sizes — recomputed here
+    /// independently from the slice's CSR framing (`[nnz, col…] + vals`
+    /// words per row) — with one α charge per peer message.
+    #[test]
+    fn priced_bytes_match_buffer_sizes_exactly() {
+        let (views, p) = two_shard_setup();
+        let owner_row = owner_rows(&views, 6);
+        let ids = [3u32, 4, 5, 0];
+        let mut out = Matrix::zeros(ids.len(), 8);
+        let stats =
+            fetch_feature_rows(1, &ids, &p.assign, &owner_row, &[0, 1], &views, &mut out);
+        // Shard 1 owns {3,4,5}; rows {3, 0} come from shard 0's CSR slice.
+        let slice = views[0]
+            .feats
+            .as_ref()
+            .expect("build_views_with_features always attaches a feature slice");
+        let msg = pack_feature_rows(slice, &[owner_row[3], owner_row[0]]);
+        assert_eq!(stats.wire_bytes, msg.nbytes());
+        let expected_words: usize = [3u32, 0]
+            .iter()
+            .map(|&g| {
+                let nnz = sparse_feats()
+                    .row(g as usize)
+                    .iter()
+                    .filter(|&&v| v != 0.0)
+                    .count();
+                1 + 2 * nnz
+            })
+            .sum();
+        assert_eq!(stats.wire_bytes, expected_words * 4);
+        // …and the model prices those bytes verbatim: α per message plus
+        // the packed payload over the bandwidth.
+        let net = NetworkModel::ethernet();
+        let priced = net.halo_secs(stats.wire_bytes, stats.wire_msgs);
+        let by_hand = stats.wire_msgs as f64 * net.latency_secs
+            + stats.wire_bytes as f64 / net.bytes_per_sec;
+        assert!((priced - by_hand).abs() < 1e-15);
+    }
+
+    fn owner_rows(views: &[LocalView], n: usize) -> Vec<u32> {
+        let mut m = vec![u32::MAX; n];
+        for v in views {
+            for (i, &g) in v.owned_global_ids().iter().enumerate() {
+                m[g as usize] = i as u32;
+            }
+        }
+        m
+    }
+}

@@ -1,29 +1,42 @@
-//! The simulated distributed backend — the paper's §IV-E runtime behind the
-//! 6× distributed speedups of Figs. 6–7.
+//! The rank-parallel distributed backend — the paper's §IV-E runtime
+//! behind the 6× distributed speedups of Figs. 6–7, executed on real
+//! `std::thread` rank workers.
 //!
-//! Three pieces:
+//! Five pieces:
 //! - [`NetworkModel`] — an α–β (latency + bytes/bandwidth) fabric cost model
 //!   with presets for an ideal fabric, 10 GbE, and 100 Gb InfiniBand; it
 //!   prices the two collective patterns the runtime uses, ring gradient
-//!   all-reduce and neighbor halo exchange.
+//!   all-reduce and neighbor halo exchange. Since the workers share one
+//!   address space, measured wall-clock captures compute scaling while the
+//!   model supplies the fabric column (`modeled_epoch_secs`) — both are
+//!   reported side by side.
 //! - [`g2l`] — global-to-local view construction: given a
 //!   [`crate::partition::Partitioning`], build one [`g2l::LocalView`] per
 //!   rank (owned nodes re-indexed to a local prefix, remote neighbors
 //!   appended as ghost slots) such that local node and edge counts sum
-//!   exactly to the global graph.
-//! - [`runtime`] — the multi-rank full-batch GCN trainer: per-rank fused
-//!   aggregation over local views, halo feature exchange at every layer,
-//!   and pipelined (or blocking) ring gradient reduction. Ranks execute
-//!   sequentially in one process; compute time is measured per rank and
-//!   communication time comes from the [`NetworkModel`], which is how the
-//!   single-core testbed reproduces the paper's scaling shapes (DESIGN.md
-//!   §2). The loss curve is numerically equivalent to serial
+//!   exactly to the global graph; [`g2l::build_views_with_features`] adds
+//!   per-rank [`g2l::FeatSlice`]s (CSR when sparse) so feature rows shard
+//!   without densifying.
+//! - [`halo`] — coalesced per-peer exchange buffers: every row a rank needs
+//!   from one peer travels in a single contiguous [`halo::PeerMsg`], and
+//!   the bytes the model prices are exactly the packed buffer sizes.
+//! - [`runtime`] — the threaded full-batch GCN trainer (one worker thread
+//!   per rank, barrier-synchronized transform/halo/aggregate/reduce
+//!   phases) and the [`runtime::DistConfig`] front door. The loss curve is
+//!   numerically equivalent to serial
 //!   [`crate::engine::native::NativeEngine`] training — the halo exchange
 //!   and rank-ordered deterministic reductions make the distributed epoch
 //!   compute the same numbers the serial epoch does.
+//! - [`sampled`] — the mini-batch scale-out path: per-shard neighbor
+//!   sampling over local views, per-block coalesced halo fetches, optional
+//!   per-shard historical-embedding caches, and an ordered shard-partial
+//!   gradient fold that keeps final parameters **bitwise identical** at
+//!   any `--world` × `--threads` combination (pinned by `tests/dist.rs`).
 
 pub mod g2l;
+pub mod halo;
 pub mod runtime;
+pub mod sampled;
 
 /// α–β fabric cost model: a message of `b` bytes costs `α + b/β` seconds.
 #[derive(Clone, Copy, Debug, PartialEq)]

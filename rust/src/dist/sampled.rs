@@ -1,0 +1,610 @@
+//! Rank-parallel mini-batch sampled distributed training — the PR 3
+//! sampler and PR 5 historical-embedding cache composed with the dist
+//! runtime's rank workers.
+//!
+//! ## Virtual shards: world-invariant numerics by construction
+//!
+//! The graph is partitioned into `S` **virtual shards**
+//! ([`DistConfig::effective_shards`], default `max(world, 8)`) — a fixed
+//! decomposition *independent of the rank count*. Rank `r` of `world`
+//! executes the contiguous shard range `[r·S/world, (r+1)·S/world)`. Every
+//! global seed batch (the same deterministic shuffle + chunk schedule as
+//! [`crate::sampler::MiniBatchEngine`]) is split into per-shard sub-batches
+//! by seed ownership; each shard computes its partial gradients with the
+//! thread-invariant `_ex` block kernels, and **every** worker then folds
+//! the `S` partials in ascending shard order and takes one replicated Adam
+//! step. Because the fold order is fixed by the shard decomposition — not
+//! by which rank computed what — the final parameters are **bitwise
+//! identical at any `--world` × `--threads` combination** (pinned by
+//! `tests/dist.rs`), f32 non-associativity notwithstanding.
+//!
+//! ## Halo per block, not per layer
+//!
+//! Sampling runs over the *global* aggregation operand (graph structure is
+//! replicated — the standard single-digit-GB trade real systems make),
+//! but feature rows live only on their owning shard
+//! ([`crate::dist::g2l::FeatSlice`], CSR when sparse). Each sub-batch
+//! therefore performs exactly one coalesced halo fetch for its innermost
+//! block's feature rows ([`crate::dist::halo::fetch_feature_rows`]) —
+//! per *block*, not per layer — and, with the cache on, dense coalesced
+//! fetches of cached hidden rows from peer-shard snapshots.
+//!
+//! ## Per-shard historical caches
+//!
+//! Each shard owns a [`HistCache`] over its local rows. Pushes are
+//! **owner-filtered**: shard `s` stores only rows it owns, computed by its
+//! own sub-batches, in batch order — single-writer, so store contents are
+//! world- and thread-invariant. At each epoch boundary every shard
+//! publishes a snapshot; the epoch's freshness gate is assembled from the
+//! snapshot stamps ([`CacheGate::from_levels`]) and all intra-epoch serves
+//! read snapshots, never live stores — no read/write races, and staleness
+//! stays bounded by `K` exactly as in the serial engine. `K = 0` yields an
+//! empty gate and is bitwise identical to running with the cache off
+//! (test-enforced).
+
+use crate::cache::{CacheEpochStats, CacheGate, HistCache};
+use crate::dist::g2l::{build_views_with_features, LocalView};
+use crate::dist::halo::{fetch_feature_rows, unpack_rows, HaloStats, PeerMsg};
+use crate::dist::runtime::{
+    partition_dataset, resolve_policy, DistConfig, DistReport, RankStats,
+};
+use crate::dist::NetworkModel;
+use crate::graph::Dataset;
+use crate::kernels::activations::{
+    relu_backward_inplace_ex, relu_inplace_ex, softmax_xent_row,
+};
+use crate::kernels::gemm::{add_bias_ex, col_sum, gemm_a_bt_ex, gemm_at_b_ex, gemm_ex};
+use crate::kernels::parallel::ExecPolicy;
+use crate::kernels::spmm::spmm_block_ex;
+use crate::kernels::update::AdamParams;
+use crate::model::{Arch, GnnParams, ModelConfig};
+use crate::optim::{OptKind, Optimizer};
+use crate::sampler::engine::block_cached_grad;
+use crate::sampler::neighbor::mix64;
+use crate::sampler::{SampleCtx, SamplerScratch};
+use crate::tensor::Matrix;
+use crate::util::Rng;
+use std::sync::{Barrier, Mutex};
+use std::time::Instant;
+
+/// One shard's shared segment: per-batch gradient partials (folded by
+/// every worker) plus per-epoch accumulators (read by worker 0).
+struct ShardSlot {
+    dw: Vec<Matrix>,
+    db: Vec<Vec<f32>>,
+    /// Σ raw per-row losses this epoch (normalized at epoch end).
+    loss_sum: f64,
+    rows: u64,
+    compute_secs: f64,
+    halo: HaloStats,
+    cache: CacheEpochStats,
+}
+
+impl ShardSlot {
+    fn reset_epoch(&mut self) {
+        self.loss_sum = 0.0;
+        self.rows = 0;
+        self.compute_secs = 0.0;
+        self.halo = HaloStats::default();
+        self.cache = CacheEpochStats::default();
+    }
+
+    fn zero_partials(&mut self) {
+        for m in &mut self.dw {
+            m.fill_zero();
+        }
+        for d in &mut self.db {
+            d.fill(0.0);
+        }
+    }
+}
+
+/// Worker-0 cross-epoch accumulator.
+struct RunLog {
+    losses: Vec<f64>,
+    epoch_secs: Vec<f64>,
+    modeled_epoch_secs: Vec<f64>,
+    exposed: Vec<f64>,
+    sent: Vec<usize>,
+    cache: Option<CacheEpochStats>,
+    params: Option<GnnParams>,
+}
+
+/// Immutable context shared by all rank workers.
+struct Shared<'a> {
+    views: &'a [LocalView],
+    assign: &'a [u32],
+    owner_row: &'a [u32],
+    rank_of: &'a [usize],
+    ctx: &'a SampleCtx,
+    labels: &'a [u32],
+    dims: &'a [usize],
+    pol: ExecPolicy,
+}
+
+/// Run rank-parallel sampled distributed training (module docs). GCN only,
+/// like the full-batch path — the SAGE family's sampled formulation stays
+/// with the serial engine.
+pub fn train_sampled(ds: &Dataset, cfg: &DistConfig) -> DistReport {
+    let k = cfg.world.max(1);
+    let s_count = cfg.effective_shards().max(k);
+    let (parts, partition_strategy) = partition_dataset(ds, s_count, cfg);
+    let views = build_views_with_features(&ds.graph, &parts, &ds.features);
+    let net = cfg.network;
+    let pol = resolve_policy(cfg.threads);
+
+    // Shard → executing rank: contiguous ranges, so shard order (the fold
+    // order) never depends on the rank count.
+    let rank_of: Vec<usize> = (0..s_count).map(|s| s * k / s_count).collect();
+
+    // --- replicated model state (same init as every other engine) ---
+    let config = ModelConfig::paper_default(Arch::Gcn, ds.spec.features, ds.spec.classes);
+    let mut rng = Rng::new(cfg.seed);
+    let mut params0 = GnnParams::init(&config, &mut rng);
+    let opt0 = Optimizer::new(OptKind::Adam, AdamParams::default(), &mut params0);
+    let nl = config.num_layers();
+    let dims = config.dims.clone();
+    let ctx = SampleCtx::for_arch(Arch::Gcn, ds, &cfg.fanouts, nl, cfg.seed, pol)
+        .expect("sampled dist mode is GCN-only and GCN always has a sampling context");
+
+    let mut owner_row = vec![0u32; ds.spec.nodes];
+    for v in &views {
+        for (i, &g) in v.owned_global_ids().iter().enumerate() {
+            owner_row[g as usize] = i as u32;
+        }
+    }
+
+    // --- per-shard stores and their epoch-boundary snapshots ---
+    let hidden = &dims[1..nl];
+    let make_stores = || -> Option<Vec<Mutex<HistCache>>> {
+        cfg.cache.map(|k_stale| {
+            views
+                .iter()
+                .map(|v| Mutex::new(HistCache::new(v.n_local(), hidden, k_stale)))
+                .collect()
+        })
+    };
+    let stores = make_stores();
+    let snaps = make_stores();
+
+    let slots: Vec<Mutex<ShardSlot>> = (0..s_count)
+        .map(|_| {
+            Mutex::new(ShardSlot {
+                dw: (0..nl).map(|l| Matrix::zeros(dims[l], dims[l + 1])).collect(),
+                db: (0..nl).map(|l| vec![0.0f32; dims[l + 1]]).collect(),
+                loss_sum: 0.0,
+                rows: 0,
+                compute_secs: 0.0,
+                halo: HaloStats::default(),
+                cache: CacheEpochStats::default(),
+            })
+        })
+        .collect();
+    let barrier = Barrier::new(k);
+    let log = Mutex::new(RunLog {
+        losses: Vec::with_capacity(cfg.epochs),
+        epoch_secs: Vec::with_capacity(cfg.epochs),
+        modeled_epoch_secs: Vec::with_capacity(cfg.epochs),
+        exposed: vec![0.0; k],
+        sent: vec![0usize; k],
+        cache: None,
+        params: None,
+    });
+
+    let train_seeds: Vec<u32> = (0..ds.spec.nodes)
+        .filter(|&u| ds.train_mask[u])
+        .map(|u| u as u32)
+        .collect();
+    let batch_size = cfg.batch_size.max(1);
+    let n_batches = train_seeds.len().div_ceil(batch_size).max(1);
+    let grad_bytes: usize = (0..nl)
+        .map(|l| (dims[l] * dims[l + 1] + dims[l + 1]) * 4)
+        .sum();
+    let ring_secs_per_batch = net.ring_allreduce_secs(grad_bytes, k);
+    let ring_sent_per_batch = NetworkModel::ring_bytes_sent(grad_bytes, k);
+
+    let shared = Shared {
+        views: &views,
+        assign: &parts.assign,
+        owner_row: &owner_row,
+        rank_of: &rank_of,
+        ctx: &ctx,
+        labels: &ds.labels,
+        dims: &dims,
+        pol,
+    };
+
+    std::thread::scope(|scope| {
+        for r in 0..k {
+            let (lo, hi) = (r * s_count / k, (r + 1) * s_count / k);
+            let shared = &shared;
+            let (slots, barrier, log) = (&slots, &barrier, &log);
+            let (stores, snaps) = (&stores, &snaps);
+            let (params0, opt0, train_seeds) = (&params0, &opt0, &train_seeds);
+            scope.spawn(move || {
+                let mut params = params0.clone();
+                let mut opt = opt0.clone();
+                let mut scratch = SamplerScratch::new(ds.spec.nodes);
+                let mut seeds = Vec::new();
+                let mut sub = Vec::new();
+                for e in 0..cfg.epochs {
+                    let epoch = (e + 1) as u64; // engine numbering: first epoch is 1
+                    barrier.wait();
+                    let t_epoch = Instant::now();
+                    for s in lo..hi {
+                        let mut slot =
+                            slots[s].lock().expect("a rank worker panicked mid-epoch");
+                        slot.reset_epoch();
+                    }
+                    if let (Some(stores), Some(snaps)) = (stores, snaps) {
+                        for s in lo..hi {
+                            let st =
+                                stores[s].lock().expect("a rank worker panicked mid-epoch");
+                            *snaps[s].lock().expect("a rank worker panicked mid-epoch") =
+                                st.clone();
+                        }
+                    }
+                    barrier.wait();
+                    // Replicated per-worker state: the epoch gate (from the
+                    // shard snapshots) and the global batch schedule.
+                    let gate = snaps.as_ref().map(|sn| {
+                        build_gate(sn, shared.views, epoch, nl - 1, ds.spec.nodes)
+                    });
+                    seeds.clear();
+                    seeds.extend_from_slice(train_seeds);
+                    Rng::new(mix64(cfg.seed ^ 0x5EED, epoch)).shuffle(&mut seeds);
+                    for chunk in seeds.chunks(batch_size) {
+                        let inv_n = 1.0f32 / chunk.len() as f32;
+                        for s in lo..hi {
+                            sub.clear();
+                            sub.extend(
+                                chunk
+                                    .iter()
+                                    .copied()
+                                    .filter(|&u| shared.assign[u as usize] == s as u32),
+                            );
+                            let mut slot =
+                                slots[s].lock().expect("a rank worker panicked mid-epoch");
+                            if sub.is_empty() {
+                                slot.zero_partials();
+                                continue;
+                            }
+                            let t = Instant::now();
+                            run_shard_batch(
+                                s,
+                                &sub,
+                                epoch,
+                                inv_n,
+                                shared,
+                                &mut scratch,
+                                gate.as_ref(),
+                                &params,
+                                stores.as_ref().map(|st| &st[s]),
+                                snaps.as_deref(),
+                                &mut slot,
+                            );
+                            slot.compute_secs += t.elapsed().as_secs_f64();
+                        }
+                        barrier.wait();
+                        // Replicated ordered fold over ALL shard partials +
+                        // one replicated step: the fold order is the shard
+                        // order, so every replica computes identical bits.
+                        params.zero_grads();
+                        for slot_m in slots.iter() {
+                            let slot =
+                                slot_m.lock().expect("a rank worker panicked mid-epoch");
+                            for l in 0..nl {
+                                for (gv, lv) in
+                                    params.layers[l].dw.data.iter_mut().zip(&slot.dw[l].data)
+                                {
+                                    *gv += lv;
+                                }
+                                for (gv, lv) in
+                                    params.layers[l].db.iter_mut().zip(&slot.db[l])
+                                {
+                                    *gv += lv;
+                                }
+                            }
+                        }
+                        opt.step(&mut params);
+                        barrier.wait();
+                    }
+                    // ---- epoch bookkeeping (worker 0) ----
+                    if r == 0 {
+                        let mut lg = log.lock().expect("a rank worker panicked mid-epoch");
+                        let mut loss_sum = 0.0f64;
+                        let mut rows = 0u64;
+                        let mut cache_tot = CacheEpochStats::default();
+                        let mut rank_compute = vec![0.0f64; k];
+                        let mut rank_halo = vec![HaloStats::default(); k];
+                        for s in 0..s_count {
+                            let slot =
+                                slots[s].lock().expect("a rank worker panicked mid-epoch");
+                            loss_sum += slot.loss_sum;
+                            rows += slot.rows;
+                            cache_tot.hits += slot.cache.hits;
+                            cache_tot.candidates += slot.cache.candidates;
+                            cache_tot.staleness_sum += slot.cache.staleness_sum;
+                            rank_compute[rank_of_shard(s, s_count, k)] += slot.compute_secs;
+                            rank_halo[rank_of_shard(s, s_count, k)].add(slot.halo);
+                        }
+                        lg.losses.push(loss_sum / rows.max(1) as f64);
+                        let ring_total = ring_secs_per_batch * n_batches as f64;
+                        let mut modeled = 0.0f64;
+                        for p in 0..k {
+                            let comm =
+                                net.halo_secs(rank_halo[p].wire_bytes, rank_halo[p].wire_msgs);
+                            modeled = modeled.max(rank_compute[p] + comm);
+                            lg.exposed[p] += comm + ring_total;
+                            lg.sent[p] +=
+                                rank_halo[p].wire_bytes + ring_sent_per_batch * n_batches;
+                        }
+                        lg.modeled_epoch_secs.push(modeled + ring_total);
+                        lg.epoch_secs.push(t_epoch.elapsed().as_secs_f64());
+                        if cfg.cache.is_some() {
+                            lg.cache = Some(cache_tot);
+                        }
+                    }
+                    barrier.wait();
+                }
+                if r == 0 {
+                    log.lock()
+                        .expect("a rank worker panicked mid-epoch")
+                        .params = Some(params);
+                }
+            });
+        }
+    });
+
+    let log = log
+        .into_inner()
+        .expect("a rank worker panicked; run log is poisoned");
+    let ranks: Vec<RankStats> = (0..k)
+        .map(|r| {
+            let mine = (r * s_count / k)..((r + 1) * s_count / k);
+            RankStats {
+                rank: r,
+                n_local: views[mine.clone()].iter().map(|v| v.n_local()).sum(),
+                n_ghost: views[mine.clone()].iter().map(|v| v.n_ghost()).sum(),
+                local_edges: views[mine].iter().map(|v| v.local_edges()).sum(),
+                bytes_sent: log.sent[r],
+                exposed_comm_secs: log.exposed[r],
+            }
+        })
+        .collect();
+
+    DistReport {
+        losses: log.losses,
+        epoch_secs: log.epoch_secs,
+        modeled_epoch_secs: log.modeled_epoch_secs,
+        partition_strategy,
+        mode: "sampled",
+        world: k,
+        shards: s_count,
+        ranks,
+        cache: log.cache,
+        params: log
+            .params
+            .expect("worker 0 always publishes the final parameters"),
+    }
+}
+
+/// Executing rank of a shard (contiguous ranges; see `rank_of` above).
+fn rank_of_shard(s: usize, s_count: usize, k: usize) -> usize {
+    s * k / s_count
+}
+
+/// Assemble the epoch's global freshness gate from every shard's snapshot:
+/// node `g` is servable at level `l` iff its owner's snapshot says so.
+/// Pure function of the snapshots — every worker builds identical bits.
+fn build_gate(
+    snaps: &[Mutex<HistCache>],
+    views: &[LocalView],
+    epoch: u64,
+    levels: usize,
+    n: usize,
+) -> CacheGate {
+    let mut fresh = vec![vec![false; n]; levels];
+    for (s, v) in views.iter().enumerate() {
+        let snap = snaps[s].lock().expect("a rank worker panicked mid-epoch");
+        for (lv, row) in fresh.iter_mut().enumerate() {
+            for (i, &g) in v.owned_global_ids().iter().enumerate() {
+                if snap.servable(lv, i, epoch) {
+                    row[g as usize] = true;
+                }
+            }
+        }
+    }
+    CacheGate::from_levels(fresh)
+}
+
+/// One shard's sub-batch: sample blocks (global structure, deterministic
+/// per-(seed, epoch, layer, node) RNG), fetch the innermost feature rows
+/// through the coalesced halo, run the GCN forward/backward in exactly the
+/// serial engine's op order, and leave the partial gradients in `slot`.
+#[allow(clippy::too_many_arguments)]
+fn run_shard_batch(
+    shard: usize,
+    sub_seeds: &[u32],
+    epoch: u64,
+    inv_n: f32,
+    sh: &Shared<'_>,
+    scratch: &mut SamplerScratch,
+    gate: Option<&CacheGate>,
+    params: &GnnParams,
+    store: Option<&Mutex<HistCache>>,
+    snaps: Option<&[Mutex<HistCache>]>,
+    slot: &mut ShardSlot,
+) {
+    let nl = sh.dims.len() - 1;
+    let pol = sh.pol;
+    let blocks = sh
+        .ctx
+        .sample_blocks(scratch, sub_seeds, epoch, &sh.ctx.fanouts, gate);
+
+    // Halo per block: one coalesced feature fetch for the innermost src set.
+    let mut x0 = Matrix::zeros(blocks[0].src_nodes.len(), sh.dims[0]);
+    slot.halo.add(fetch_feature_rows(
+        shard,
+        &blocks[0].src_nodes,
+        sh.assign,
+        sh.owner_row,
+        sh.rank_of,
+        sh.views,
+        &mut x0,
+    ));
+
+    // ---- forward (the serial engine's GCN op order, verbatim) ----
+    let mut h: Vec<Matrix> = Vec::with_capacity(nl);
+    for l in 0..nl {
+        let blk = &blocks[l];
+        let dout = sh.dims[l + 1];
+        let is_last = l + 1 == nl;
+        let x_in: &Matrix = if l == 0 { &x0 } else { &h[l - 1] };
+        debug_assert_eq!(x_in.rows, blk.n_src);
+        let mut z = Matrix::zeros(blk.n_src, dout);
+        gemm_ex(x_in, &params.layers[l].w, &mut z, pol);
+        let mut hl = Matrix::zeros(blk.n_dst, dout);
+        spmm_block_ex(&blk.adj, &z, &mut hl, pol);
+        add_bias_ex(&mut hl, &params.layers[l].b, pol);
+        if !is_last {
+            relu_inplace_ex(&mut hl, pol);
+        }
+        if let (Some(store), Some(snaps)) = (store, snaps) {
+            if !is_last {
+                // Owner-filtered push: this shard stores only the dst rows
+                // it owns — single-writer per store, so contents don't
+                // depend on the rank count.
+                {
+                    let mut st =
+                        store.lock().expect("a rank worker panicked mid-epoch");
+                    for (i, &g) in blk.src_nodes[..blk.n_dst].iter().enumerate() {
+                        if sh.assign[g as usize] == shard as u32 {
+                            st.push_row(
+                                l,
+                                sh.owner_row[g as usize] as usize,
+                                hl.row(i),
+                                epoch,
+                            );
+                        }
+                    }
+                }
+                // Stitch the next block's cached tail from the epoch-start
+                // snapshots: coalesced per owning shard, dense rows.
+                let nxt = &blocks[l + 1];
+                if nxt.n_live < nxt.n_src {
+                    debug_assert_eq!(nxt.n_live, hl.rows);
+                    hl.data.resize(nxt.n_src * dout, 0.0);
+                    hl.rows = nxt.n_src;
+                    stitch_from_snapshots(
+                        shard,
+                        l,
+                        &nxt.src_nodes[nxt.n_live..],
+                        nxt.n_live,
+                        epoch,
+                        sh,
+                        snaps,
+                        &mut hl,
+                        slot,
+                    );
+                }
+            }
+        }
+        h.push(hl);
+    }
+    if store.is_some() {
+        for blk in &blocks[1..] {
+            slot.cache.candidates += (blk.n_src - blk.n_dst) as u64;
+            slot.cache.hits += blk.num_cached() as u64;
+        }
+    }
+
+    // ---- loss: per-row softmax/xent with the GLOBAL batch normalizer ----
+    let b = sub_seeds.len();
+    let classes = sh.dims[nl];
+    let mut g = Matrix::zeros(b, classes);
+    for i in 0..b {
+        let y = sh.labels[sub_seeds[i] as usize] as usize;
+        let (l, _) = softmax_xent_row(h[nl - 1].row(i), y, inv_n, Some(g.row_mut(i)));
+        slot.loss_sum += l;
+    }
+    slot.rows += b as u64;
+
+    // ---- backward (serial engine's GCN branch, partials into the slot) ----
+    for l in (0..nl).rev() {
+        let blk = &blocks[l];
+        let (din, dout) = (sh.dims[l], sh.dims[l + 1]);
+        if l + 1 != nl {
+            relu_backward_inplace_ex(&h[l], &mut g, pol);
+        }
+        col_sum(&g, &mut slot.db[l]);
+        debug_assert_eq!((g.rows, g.cols), (blk.n_dst, dout));
+        let mut gz = Matrix::zeros(blk.n_src, dout);
+        spmm_block_ex(&blk.adj_t, &g, &mut gz, pol);
+        let x_in: &Matrix = if l == 0 { &x0 } else { &h[l - 1] };
+        gemm_at_b_ex(x_in, &gz, &mut slot.dw[l], pol);
+        if l > 0 {
+            let mut gprev = Matrix::zeros(blk.n_src, din);
+            gemm_a_bt_ex(&gz, &params.layers[l].w, &mut gprev, pol);
+            block_cached_grad(&mut gprev, blk.n_live);
+            g = gprev;
+            // h[l-1] carried the stitched cache tail through the forward;
+            // shrink it back for the layer-(l-1) ReLU backward shape.
+            let rows = blocks[l - 1].n_dst;
+            let hprev = &mut h[l - 1];
+            if hprev.rows > rows {
+                hprev.data.truncate(rows * din);
+                hprev.rows = rows;
+            }
+        }
+    }
+}
+
+/// Serve the cached tail of a block from the epoch-start shard snapshots:
+/// group the ids per owning shard, pack each group as one dense
+/// [`PeerMsg`] (the coalesced halo payload, priced when it crosses a rank
+/// boundary), and memcpy it into `hl` after the live prefix.
+#[allow(clippy::too_many_arguments)]
+fn stitch_from_snapshots(
+    shard: usize,
+    level: usize,
+    ids: &[u32],
+    at_row: usize,
+    epoch: u64,
+    sh: &Shared<'_>,
+    snaps: &[Mutex<HistCache>],
+    hl: &mut Matrix,
+    slot: &mut ShardSlot,
+) {
+    let dout = hl.cols;
+    let mut groups: Vec<Vec<(u32, u32)>> = vec![Vec::new(); sh.views.len()];
+    for (j, &g) in ids.iter().enumerate() {
+        groups[sh.assign[g as usize] as usize]
+            .push((sh.owner_row[g as usize], (at_row + j) as u32));
+    }
+    let mut dst_rows: Vec<u32> = Vec::new();
+    for (o, grp) in groups.iter().enumerate() {
+        if grp.is_empty() {
+            continue;
+        }
+        let mut msg = PeerMsg::dense(dout);
+        {
+            let snap = snaps[o].lock().expect("a rank worker panicked mid-epoch");
+            for &(src, _) in grp {
+                msg.push_dense_row(snap.row(level, src as usize));
+                slot.cache.staleness_sum +=
+                    epoch.saturating_sub(snap.stamp(level, src as usize));
+            }
+        }
+        dst_rows.clear();
+        dst_rows.extend(grp.iter().map(|&(_, d)| d));
+        unpack_rows(&msg, &dst_rows, hl);
+        if o != shard {
+            slot.halo.remote_rows += grp.len();
+            if sh.rank_of[o] != sh.rank_of[shard] {
+                slot.halo.wire_bytes += msg.nbytes();
+                slot.halo.wire_msgs += 1;
+            }
+        }
+    }
+}

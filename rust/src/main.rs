@@ -12,9 +12,7 @@
 #![allow(clippy::needless_range_loop, clippy::too_many_arguments)]
 
 use anyhow::{anyhow, Result};
-use morphling::coordinator::{run, TrainSpec};
-use morphling::dist::runtime::{train_distributed, DistConfig, PartitionerKind};
-use morphling::dist::NetworkModel;
+use morphling::coordinator::{run, run_dist, DistSpec, TrainSpec};
 use morphling::engine::sparsity::calibrate_gamma_ex;
 use morphling::engine::{EngineKind, RunMode};
 use morphling::kernels::parallel::ExecPolicy;
@@ -171,33 +169,65 @@ fn cmd_partition(args: &Args) -> Result<()> {
 }
 
 fn cmd_dist(args: &Args) -> Result<()> {
-    let name = args.get_or("dataset", "corafull");
-    let ds = datasets::load_by_name(name).ok_or_else(|| anyhow!("unknown dataset {name}"))?;
-    let cfg = DistConfig {
+    // `--dist-sampled` is the short spelling of `--mode minibatch`.
+    let mode = if args.flag("dist-sampled") {
+        RunMode::Minibatch
+    } else {
+        choice(
+            "mode",
+            args.get_or("mode", "full"),
+            RunMode::parse,
+            RunMode::VALID,
+        )
+        .map_err(anyhow::Error::msg)?
+    };
+    let spec = DistSpec {
+        dataset: args.get_or("dataset", "corafull").to_string(),
         world: args.usize_or("world", 4),
         epochs: args.usize_or("epochs", 10),
-        partitioner: if args.flag("chunk") {
-            PartitionerKind::VertexChunk
-        } else {
-            PartitionerKind::Hierarchical
-        },
+        chunk: args.flag("chunk"),
         pipelined: !args.flag("blocking"),
-        network: match args.get_or("network", "infiniband") {
-            "ethernet" => NetworkModel::ethernet(),
-            "ideal" => NetworkModel::ideal(),
-            _ => NetworkModel::infiniband(),
-        },
+        network: args.get_or("network", "infiniband").to_string(),
         seed: args.u64_or("seed", 42),
+        mode,
+        shards: args.usize_or("shards", 0),
+        batch_size: args.usize_or("batch-size", 512),
+        fanouts: usize_list("fanouts", args.get_or("fanouts", "10,25"))
+            .map_err(anyhow::Error::msg)?,
+        threads: args.usize_or("threads", 0),
+        cache: args.flag("cache") || args.get("cache-staleness").is_some(),
+        cache_staleness: args.u64_or("cache-staleness", 1),
     };
-    let r = train_distributed(&ds, &cfg);
+    let r = run_dist(&spec)?;
     println!(
-        "{name} x{} ranks [{}, {}]: final loss {:.4}, sustained epoch {}",
-        cfg.world,
+        "{} x{} ranks [{}, {} mode{}, {}]: final loss {:.4}",
+        spec.dataset,
+        r.world,
         r.partition_strategy,
-        if cfg.pipelined { "pipelined" } else { "blocking" },
+        r.mode,
+        if r.mode == "sampled" {
+            format!(", {} shards", r.shards)
+        } else {
+            String::new()
+        },
+        if spec.pipelined { "pipelined" } else { "blocking" },
         r.final_loss(),
-        fmt_secs(r.sustained_epoch_secs())
     );
+    println!(
+        "sustained epoch: measured {} (wall clock, scales with --world on multi-core) / modeled {} (α–β fabric)",
+        fmt_secs(r.sustained_epoch_secs()),
+        fmt_secs(r.sustained_modeled_secs()),
+    );
+    if let Some(c) = &r.cache {
+        println!(
+            "cache (K={}): hit rate {:.3} ({}/{} frontier rows), mean staleness {:.2} epochs",
+            spec.cache_staleness,
+            c.hit_rate(),
+            c.hits,
+            c.candidates,
+            c.mean_staleness(),
+        );
+    }
     let mut t = Table::new(vec!["rank", "local", "ghosts", "edges", "sent", "exposed-comm"]);
     for s in &r.ranks {
         t.row(vec![
@@ -248,7 +278,13 @@ fn main() -> Result<()> {
                  \u{20}          (minibatch: native engine; fanout 0 = full neighborhood;\n\
                  \u{20}           cache serves stale out-of-batch activations, K=0 exact)\n\
                  partition: --dataset corafull --k 4\n\
-                 dist:      --dataset corafull --world 4 [--blocking] [--chunk] [--network infiniband|ethernet|ideal]\n\
+                 dist:      --dataset corafull --world 4 [--threads N] [--blocking] [--chunk]\n\
+                 \u{20}          [--network infiniband|ethernet|ideal]\n\
+                 \u{20}          --mode full|minibatch (or --dist-sampled) [--shards S] [--batch-size 512]\n\
+                 \u{20}          [--fanouts 10,25] [--cache] [--cache-staleness K]\n\
+                 \u{20}          (rank workers are real threads; epoch time reports measured wall clock\n\
+                 \u{20}           and the modeled fabric column; sampled mode is bitwise-identical at\n\
+                 \u{20}           any --world x --threads)\n\
                  calibrate: [--threads N] [--seed 7]\n\
                  shapes:    --out artifacts/shapes.json [--datasets a,b,c]\n\
                  (kernel threads default to MORPHLING_THREADS, else 1)"

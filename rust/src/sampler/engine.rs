@@ -81,7 +81,7 @@ impl Default for MiniBatchConfig {
 /// (rows `n_live..`) belongs to historical-embedding constants, not to
 /// anything the layer below computed — drop it so only the live prefix
 /// flows further down. No-op with the cache off (`n_live == n_src`).
-fn block_cached_grad(g: &mut Matrix, n_live: usize) {
+pub(crate) fn block_cached_grad(g: &mut Matrix, n_live: usize) {
     if g.rows > n_live {
         g.data.truncate(n_live * g.cols);
         g.rows = n_live;

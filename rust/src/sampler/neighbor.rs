@@ -174,14 +174,39 @@ impl SampleCtx {
         fanouts: &[usize],
         gate: Option<&CacheGate>,
     ) -> MiniBatch {
+        let blocks = self.sample_blocks(scratch, seeds, salt, fanouts, gate);
+        let x0 = gather_rows_ex(feats, &blocks[0].src_nodes, self.policy);
+        let batch_labels = seeds.iter().map(|&s| labels[s as usize]).collect();
+        MiniBatch {
+            blocks,
+            x0,
+            seeds: seeds.to_vec(),
+            labels: batch_labels,
+        }
+    }
+
+    /// The block-construction half of [`SampleCtx::sample_batch`]: layered
+    /// blocks only, no feature gather. The distributed runtime calls this
+    /// directly because its input features live in per-shard slices and
+    /// the gather becomes a coalesced halo exchange. Identical RNG
+    /// derivation, so a given `(seed, salt, seeds)` yields bitwise the
+    /// same blocks here and through `sample_batch`.
+    pub fn sample_blocks(
+        &self,
+        scratch: &mut SamplerScratch,
+        seeds: &[u32],
+        salt: u64,
+        fanouts: &[usize],
+        gate: Option<&CacheGate>,
+    ) -> Vec<super::block::Block> {
         let salt = mix64(self.seed, salt);
         let layers = fanouts.len();
-        let mut blocks = Vec::with_capacity(layers);
+        let mut blocks: Vec<super::block::Block> = Vec::with_capacity(layers);
         for l in (0..layers).rev() {
             let b = {
                 let dst = blocks
                     .first()
-                    .map(|b: &super::block::Block| &b.src_nodes[..b.n_live])
+                    .map(|b| &b.src_nodes[..b.n_live])
                     .unwrap_or(seeds);
                 // Block l's sources are layer-(l-1) outputs = cache level
                 // l-1. The input layer (l = 0) reads raw features, which
@@ -203,14 +228,7 @@ impl SampleCtx {
             };
             blocks.insert(0, b);
         }
-        let x0 = gather_rows_ex(feats, &blocks[0].src_nodes, self.policy);
-        let batch_labels = seeds.iter().map(|&s| labels[s as usize]).collect();
-        MiniBatch {
-            blocks,
-            x0,
-            seeds: seeds.to_vec(),
-            labels: batch_labels,
-        }
+        blocks
     }
 }
 

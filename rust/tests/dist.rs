@@ -1,0 +1,212 @@
+//! Distributed-runtime invariants (PR 6 acceptance criteria):
+//!
+//! 1. **World × threads bitwise invariance** — sampled-mode final
+//!    parameters are bit-identical across `--world` ∈ {1, 2, 4} ×
+//!    `--threads` ∈ {1, 4} (cache on), because the virtual-shard
+//!    decomposition fixes the gradient fold order independently of the
+//!    rank count and the `_ex` kernels are thread-invariant;
+//! 2. **K = 0 exactness** — a zero staleness bound is bitwise identical
+//!    to running with the cache off, per rank;
+//! 3. **Serial equivalence** — `world 1 × shards 1` runs the very op
+//!    sequence of the serial [`MiniBatchEngine`], so final parameters
+//!    agree to f32 equality and the loss curves to f64 round-off;
+//! 4. **Training works** — the sampled distributed loss decreases, and a
+//!    single rank reports zero wire traffic no matter how many virtual
+//!    shards it hosts.
+
+use morphling::dist::runtime::{
+    train_distributed, DistConfig, DistMode, DistReport, PartitionerKind,
+};
+use morphling::dist::NetworkModel;
+use morphling::engine::Engine;
+use morphling::graph::{datasets, Dataset};
+use morphling::model::{Arch, GnnParams};
+use morphling::sampler::{MiniBatchConfig, MiniBatchEngine};
+
+fn tiny_dataset() -> Dataset {
+    let spec = morphling::graph::DatasetSpec {
+        name: "tiny-dist-it",
+        real_nodes: 0,
+        real_edges: 0,
+        real_features: 0,
+        nodes: 300,
+        edges: 2000,
+        features: 40,
+        classes: 5,
+        feat_sparsity: 0.0,
+        gamma: 2.4,
+        components: 1,
+    };
+    datasets::load(&spec)
+}
+
+fn sampled_cfg(world: usize, threads: usize, cache: Option<u64>) -> DistConfig {
+    DistConfig {
+        world,
+        epochs: 3,
+        partitioner: PartitionerKind::Hierarchical,
+        network: NetworkModel::ideal(),
+        seed: 7,
+        mode: DistMode::Sampled,
+        threads,
+        // Fixed shard count: the schedule (and therefore the bits) must
+        // not depend on how many ranks execute it.
+        shards: 4,
+        batch_size: 64,
+        fanouts: vec![4, 4],
+        cache,
+        ..Default::default()
+    }
+}
+
+/// Bit-level equality of two parameter sets (weights and biases; GCN has
+/// no self-path). `f32::to_bits` so `-0.0 != +0.0` and NaN would fail
+/// loudly rather than compare `true`.
+fn params_bits_equal(a: &GnnParams, b: &GnnParams) -> bool {
+    a.layers.len() == b.layers.len()
+        && a.layers.iter().zip(&b.layers).all(|(x, y)| {
+            x.w.data
+                .iter()
+                .zip(&y.w.data)
+                .all(|(u, v)| u.to_bits() == v.to_bits())
+                && x.b
+                    .iter()
+                    .zip(&y.b)
+                    .all(|(u, v)| u.to_bits() == v.to_bits())
+        })
+}
+
+fn run(ds: &Dataset, cfg: &DistConfig) -> DistReport {
+    train_distributed(ds, cfg)
+}
+
+/// Criterion 1: the tentpole determinism property. Every world × threads
+/// combination lands on bit-identical parameters and loss curves.
+#[test]
+fn sampled_params_bitwise_identical_across_world_and_threads() {
+    let ds = tiny_dataset();
+    let reference = run(&ds, &sampled_cfg(1, 1, Some(2)));
+    assert_eq!(reference.mode, "sampled");
+    assert_eq!(reference.shards, 4);
+    for world in [1usize, 2, 4] {
+        for threads in [1usize, 4] {
+            if (world, threads) == (1, 1) {
+                continue;
+            }
+            let r = run(&ds, &sampled_cfg(world, threads, Some(2)));
+            assert_eq!(
+                r.losses, reference.losses,
+                "loss curve diverged at world {world} threads {threads}"
+            );
+            assert!(
+                params_bits_equal(&r.params, &reference.params),
+                "final params not bit-identical at world {world} threads {threads}"
+            );
+        }
+    }
+}
+
+/// Criterion 2: `--cache-staleness 0` is the cache-off path, bitwise —
+/// the gate is empty, so no block is ever truncated and no stitched row
+/// enters the forward.
+#[test]
+fn cache_staleness_zero_is_bitwise_cache_off() {
+    let ds = tiny_dataset();
+    let off = run(&ds, &sampled_cfg(2, 1, None));
+    let k0 = run(&ds, &sampled_cfg(2, 1, Some(0)));
+    assert_eq!(off.losses, k0.losses);
+    assert!(params_bits_equal(&off.params, &k0.params));
+    assert!(off.cache.is_none());
+    // K = 0 still reports its (all-miss) counters.
+    let stats = k0.cache.expect("cache stats present when the store exists");
+    assert_eq!(stats.hits, 0);
+    // And a real bound must actually hit once epoch 2 starts.
+    let k2 = run(&ds, &sampled_cfg(2, 1, Some(2)));
+    let s2 = k2.cache.expect("cache stats present when the store exists");
+    assert!(s2.hits > 0, "K=2 produced no hits over 3 epochs");
+}
+
+/// Criterion 3: `world 1 × shards 1 × threads 1`, cache off, is the
+/// serial mini-batch engine step for step: same replicated init, same
+/// shuffle, same blocks, same kernels, same Adam. Parameters agree to
+/// f32 equality (the gradient fold's `0.0 + g` can flip a zero's sign,
+/// nothing else) and per-epoch losses to f64 round-off.
+#[test]
+fn sampled_world1_matches_minibatch_engine() {
+    let ds = tiny_dataset();
+    let mut cfg = sampled_cfg(1, 1, None);
+    cfg.shards = 1;
+    let r = run(&ds, &cfg);
+
+    let mb = MiniBatchConfig {
+        batch_size: cfg.batch_size,
+        fanouts: cfg.fanouts.clone(),
+        prefetch: false,
+        cache: None,
+    };
+    let mut eng = MiniBatchEngine::paper_default(&ds, Arch::Gcn, mb, cfg.seed)
+        .expect("gcn minibatch engine builds")
+        .with_threads(1);
+    for (e, &dist_loss) in r.losses.iter().enumerate() {
+        let stats = eng.train_epoch(&ds);
+        let err = (stats.loss - dist_loss).abs();
+        assert!(
+            err < 1e-9 * stats.loss.abs().max(1.0),
+            "epoch {e} loss diverged: engine {} vs dist {dist_loss}",
+            stats.loss
+        );
+    }
+    let ep = eng.params();
+    assert_eq!(ep.layers.len(), r.params.layers.len());
+    for (l, (x, y)) in ep.layers.iter().zip(&r.params.layers).enumerate() {
+        assert_eq!(x.w.data, y.w.data, "layer {l} weights diverged");
+        assert_eq!(x.b, y.b, "layer {l} biases diverged");
+    }
+}
+
+/// Criterion 4a: sampled distributed training actually trains.
+#[test]
+fn sampled_loss_decreases_over_epochs() {
+    let ds = tiny_dataset();
+    let mut cfg = sampled_cfg(2, 1, None);
+    cfg.epochs = 6;
+    let r = run(&ds, &cfg);
+    assert_eq!(r.losses.len(), 6);
+    assert!(r.losses.iter().all(|l| l.is_finite()));
+    assert!(
+        r.losses[5] < r.losses[0],
+        "loss did not decrease: {:?}",
+        r.losses
+    );
+}
+
+/// Criterion 4b: one rank hosting all 4 virtual shards moves zero bytes
+/// over the wire — shard-to-shard traffic inside a rank is a local
+/// memcpy, and a world of one has no ring to run.
+#[test]
+fn single_rank_sampled_has_no_wire_traffic() {
+    let ds = tiny_dataset();
+    let r = run(&ds, &sampled_cfg(1, 1, Some(2)));
+    assert_eq!(r.ranks.len(), 1);
+    assert_eq!(r.ranks[0].bytes_sent, 0);
+    assert_eq!(r.ranks[0].exposed_comm_secs, 0.0);
+    // The shard views still tile the whole graph.
+    assert_eq!(r.ranks[0].n_local, 300);
+}
+
+/// The report carries both timing columns and per-rank rows for every
+/// rank, in full and sampled modes alike.
+#[test]
+fn sampled_report_shape() {
+    let ds = tiny_dataset();
+    let r = run(&ds, &sampled_cfg(2, 1, Some(2)));
+    assert_eq!(r.world, 2);
+    assert_eq!(r.ranks.len(), 2);
+    assert_eq!(r.epoch_secs.len(), 3);
+    assert_eq!(r.modeled_epoch_secs.len(), 3);
+    assert!(r.epoch_secs.iter().all(|&s| s > 0.0));
+    assert!(r.modeled_epoch_secs.iter().all(|&s| s >= 0.0));
+    let n_local: usize = r.ranks.iter().map(|s| s.n_local).sum();
+    assert_eq!(n_local, 300, "rank-owned nodes must tile the graph");
+    assert!(r.sustained_epoch_secs() > 0.0);
+}
