@@ -12,7 +12,10 @@
 //! so the speedup columns stay apples-to-apples); `--reps N` pins the
 //! measured epoch count (default: adaptive); `--json PATH` writes every
 //! (dataset, engine, threads) → epoch-seconds record for the perf
-//! trajectory artifact.
+//! trajectory artifact; `--manifest PATH` installs a `morphling tune`
+//! manifest before any engine runs, so the native rows reflect tuned
+//! dispatch. A `morphling-native-generic` row (kernel specialization
+//! forced off at tmax) quantifies the specialized bodies' contribution.
 //!
 //! Expected shape vs the paper (§V-C): Morphling wins everywhere except
 //! dense-feature Reddit-like workloads where the DGL analogue is close;
@@ -25,12 +28,26 @@ use common::{epoch_time, probe, reps_for};
 use morphling::baselines::{GatherScatterEngine, NonFusedEngine};
 use morphling::engine::native::NativeEngine;
 use morphling::graph::datasets;
+use morphling::kernels::dispatch::{self, TuneManifest, VariantChoice};
 use morphling::model::Arch;
 use morphling::util::argparse::Args;
 use morphling::util::table::{fmt_secs, Table};
 
 fn main() {
     let args = Args::from_env();
+    if let Some(path) = args.get("manifest") {
+        match TuneManifest::load(std::path::Path::new(path)) {
+            Ok(m) => {
+                if !dispatch::install_manifest(m) {
+                    eprintln!("warning: dispatcher already initialized; --manifest {path} ignored");
+                }
+            }
+            Err(e) => {
+                eprintln!("failed to load --manifest: {e}");
+                std::process::exit(1);
+            }
+        }
+    }
     let only: Vec<String> = args
         .get("datasets")
         .map(|d| d.split(',').map(str::to_string).collect())
@@ -64,11 +81,12 @@ fn main() {
     let mut spd = Table::new(vec![
         "dataset".to_string(),
         format!("scaling t={tmax}/t={}", threads[0]),
+        "vs generic".to_string(),
         "vs pyg".to_string(),
         "vs dgl".to_string(),
         "sparsity-path".to_string(),
     ]);
-    let (mut geo_pyg, mut geo_dgl, mut n_geo) = (0.0f64, 0.0f64, 0usize);
+    let (mut geo_gen, mut geo_pyg, mut geo_dgl, mut n_geo) = (0.0f64, 0.0f64, 0.0f64, 0usize);
     // JSON records: (dataset, engine, threads, epoch_secs)
     let mut records: Vec<(String, &'static str, usize, f64)> = Vec::new();
 
@@ -89,6 +107,17 @@ fn main() {
             t_native.push(secs);
             drop(native);
         }
+
+        // Same engine, same threads, specialization forced off: the delta
+        // against the native t=tmax row is the kernel-variant contribution.
+        let mut nat_gen = NativeEngine::paper_default(&ds, Arch::Gcn, 42)
+            .with_threads(tmax)
+            .with_variant(VariantChoice::ForceGeneric);
+        let p = probe(&mut nat_gen, &ds);
+        let (w, r) = budget(p);
+        let t_gen = epoch_time(&mut nat_gen, &ds, w, r);
+        records.push((spec.name.to_string(), "morphling-native-generic", tmax, t_gen));
+        drop(nat_gen);
 
         let mut gs = GatherScatterEngine::paper_default(&ds, 42).with_threads(tmax);
         let p = probe(&mut gs, &ds);
@@ -113,10 +142,12 @@ fn main() {
         spd.row(vec![
             spec.name.to_string(),
             format!("{:.2}x", t_native[0] / t_best),
+            format!("{:.2}x", t_gen / t_best),
             format!("{:.2}x", t_gs / t_best),
             format!("{:.2}x", t_nf / t_best),
             mode,
         ]);
+        geo_gen += (t_gen / t_best).ln();
         geo_pyg += (t_gs / t_best).ln();
         geo_dgl += (t_nf / t_best).ln();
         n_geo += 1;
@@ -128,7 +159,8 @@ fn main() {
     print!("{}", spd.render());
     if n_geo > 0 {
         println!(
-            "\ngeomean speedup: {:.2}x vs PyG-analogue, {:.2}x vs DGL-analogue (paper: 20.2x / 8.2x on real hw)",
+            "\ngeomean speedup: {:.2}x vs generic kernels, {:.2}x vs PyG-analogue, {:.2}x vs DGL-analogue (paper: 20.2x / 8.2x on real hw)",
+            (geo_gen / n_geo as f64).exp(),
             (geo_pyg / n_geo as f64).exp(),
             (geo_dgl / n_geo as f64).exp()
         );

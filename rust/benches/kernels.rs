@@ -5,13 +5,17 @@
 //! - implicit-transpose backward vs explicit-transpose SpMM — the paper's
 //!   CUDA memory-vs-contention trade-off (§IV-D-b);
 //! - sparse-feature CSR×dense vs dense GEMM at the bench sparsity;
+//! - generic loops vs the width-monomorphized kernel bodies
+//!   (`kernels::specialized`) across the covered feature widths;
 //! - fused Adam vs an unfused two-pass update.
 //!
 //!     cargo bench --bench kernels
 
 use morphling::graph::generator::{power_law_graph, GraphConfig};
+use morphling::kernels::dispatch::VariantChoice;
 use morphling::kernels::gemm::{gemm, gemm_ex};
 use morphling::kernels::parallel::ExecPolicy;
+use morphling::kernels::specialized;
 use morphling::kernels::sparse_feat::spmm_csr_dense;
 use morphling::kernels::spmm::{spmm_implicit_transpose, spmm_naive, spmm_tiled, spmm_tiled_ex};
 use morphling::kernels::update::{adam_step, AdamParams};
@@ -52,6 +56,44 @@ fn main() {
     }
     println!("SpMM aggregation (Algorithm 2 ablation):");
     print!("{}", t.render());
+
+    // --- generic vs width-specialized bodies (bitwise-identical variants) ---
+    let mut tv = Table::new(vec![
+        "F",
+        "spmm generic",
+        "spmm specialized",
+        "spmm gain",
+        "gemm generic",
+        "gemm specialized",
+        "gemm gain",
+    ]);
+    let vm = 2_000usize; // GEMM row count for the variant sweep
+    for f in [16usize, 32, 64, 128, 256] {
+        let x = Matrix::from_vec(n, f, random_matrix(&mut rng, n, f));
+        let mut y = Matrix::zeros(n, f);
+        let a = Matrix::from_vec(vm, f, random_matrix(&mut rng, vm, f));
+        let w = Matrix::from_vec(f, f, random_matrix(&mut rng, f, f));
+        let mut c = Matrix::zeros(vm, f);
+        let pg = ExecPolicy::serial().with_variant(VariantChoice::ForceGeneric);
+        let ps = ExecPolicy::serial().with_variant(VariantChoice::ForceSpecialized);
+        let (_, a1) = bench_fn(1, 5, || spmm_tiled_ex(&g, &x, &mut y, pg));
+        let (_, a2) = bench_fn(1, 5, || spmm_tiled_ex(&g, &x, &mut y, ps));
+        let (_, b1) = bench_fn(1, 5, || gemm_ex(&a, &w, &mut c, pg));
+        let (_, b2) = bench_fn(1, 5, || gemm_ex(&a, &w, &mut c, ps));
+        let (ta1, ta2, tb1, tb2) = (median(&a1), median(&a2), median(&b1), median(&b2));
+        let tag = if specialized::has_width(f) { "" } else { " (fallback)" };
+        tv.row(vec![
+            format!("{f}{tag}"),
+            fmt_secs(ta1),
+            fmt_secs(ta2),
+            format!("{:.2}x", ta1 / ta2),
+            fmt_secs(tb1),
+            fmt_secs(tb2),
+            format!("{:.2}x", tb1 / tb2),
+        ]);
+    }
+    println!("\nKernel variants (generic vs monomorphized; F=256 has no specialized body):");
+    print!("{}", tv.render());
 
     // --- thread scaling: row-blocked fan-out (the OpenMP-target axis) ---
     let fs = 64usize;

@@ -13,6 +13,7 @@ use crate::engine::native::NativeEngine;
 use crate::engine::sparsity::{calibrate_gamma_ex, decide, SparsityPolicy};
 use crate::engine::{Engine, EngineKind, RunMode};
 use crate::graph::{datasets, Dataset};
+use crate::kernels::dispatch::{self, TuneManifest, VariantChoice};
 use crate::kernels::parallel::ExecPolicy;
 use crate::kernels::update::AdamParams;
 use crate::model::{Arch, ModelConfig};
@@ -58,6 +59,12 @@ pub struct TrainSpec {
     /// Applies to the native and baseline engines (PJRT delegates threading
     /// to the XLA runtime).
     pub threads: Option<usize>,
+    /// Kernel-variant preference (`--kernels auto|generic|specialized`);
+    /// resolved per call by [`crate::kernels::dispatch`].
+    pub variant: VariantChoice,
+    /// Tuning manifest to install process-wide before training
+    /// (`--tune-manifest`, written by `morphling tune`).
+    pub tune_manifest: Option<PathBuf>,
     pub seed: u64,
     pub artifacts_dir: PathBuf,
     pub log: bool,
@@ -81,6 +88,8 @@ impl Default for TrainSpec {
             tau: None,
             calibrate: false,
             threads: None,
+            variant: VariantChoice::Auto,
+            tune_manifest: None,
             seed: 42,
             artifacts_dir: PathBuf::from("artifacts"),
             log: false,
@@ -89,19 +98,25 @@ impl Default for TrainSpec {
 }
 
 impl TrainSpec {
-    /// Resolve the sparsity policy: pinned τ, calibrated γ, or the paper
-    /// default. Calibration runs under the same thread count the engine
+    /// Resolve the sparsity policy: pinned τ, calibrated γ, a γ persisted
+    /// in the installed tuning manifest, or the paper default (in that
+    /// order). Calibration runs under the same thread count the engine
     /// will train with — γ is configuration-dependent (see
     /// [`crate::engine::sparsity`]).
     pub fn policy(&self) -> SparsityPolicy {
+        let pol = self
+            .threads
+            .map(ExecPolicy::with_threads)
+            .unwrap_or_default()
+            .with_variant(self.variant);
         if let Some(tau) = self.tau {
             SparsityPolicy::from_tau(tau)
         } else if self.calibrate {
-            let pol = self
-                .threads
-                .map(ExecPolicy::with_threads)
-                .unwrap_or_default();
             SparsityPolicy::from_gamma(calibrate_gamma_ex(self.seed, pol))
+        } else if let Some(gamma) = dispatch::global().gamma(pol.threads) {
+            // `morphling tune` already measured γ at this thread count —
+            // reuse it instead of re-probing or falling back to the default.
+            SparsityPolicy::from_gamma(gamma)
         } else {
             SparsityPolicy::paper_default()
         }
@@ -139,6 +154,7 @@ pub fn build_engine(spec: &TrainSpec, ds: &Dataset) -> Result<Box<dyn Engine>> {
         if let Some(t) = spec.threads {
             e.set_threads(t);
         }
+        e.set_variant(spec.variant);
         return Ok(Box::new(e));
     }
     Ok(match spec.engine {
@@ -148,6 +164,7 @@ pub fn build_engine(spec: &TrainSpec, ds: &Dataset) -> Result<Box<dyn Engine>> {
             if let Some(t) = spec.threads {
                 e.set_threads(t);
             }
+            e.set_variant(spec.variant);
             Box::new(e)
         }
         EngineKind::GatherScatter => {
@@ -304,8 +321,21 @@ pub struct RunOutcome {
     pub peak_bytes: usize,
 }
 
-/// The full coordinated flow: load → decide → train → report.
+/// The full coordinated flow: load → (install manifest) → decide → train →
+/// report.
 pub fn run(spec: &TrainSpec) -> Result<RunOutcome> {
+    if let Some(path) = &spec.tune_manifest {
+        let manifest = TuneManifest::load(path)
+            .map_err(|e| anyhow!("--tune-manifest {}: {e}", path.display()))?;
+        if !dispatch::install_manifest(manifest) {
+            // Set-once semantics: a manifest (or the env-var default) is
+            // already live for this process; keep it rather than racing.
+            eprintln!(
+                "morphling: tuning manifest already installed; ignoring {}",
+                path.display()
+            );
+        }
+    }
     let ds = datasets::load_by_name(&spec.dataset)
         .ok_or_else(|| anyhow!("unknown dataset '{}' (see `morphling info`)", spec.dataset))?;
     let decision = decide(&ds.features, spec.policy());

@@ -26,6 +26,7 @@ use crate::kernels::activations::{relu_backward_inplace_ex, relu_inplace_ex, sof
 use crate::kernels::gemm::{
     add_bias_ex, col_sum, gemm_a_bt_acc_ex, gemm_a_bt_ex, gemm_at_b_ex, gemm_ex,
 };
+use crate::kernels::dispatch::VariantChoice;
 use crate::kernels::parallel::ExecPolicy;
 use crate::kernels::sparse_feat::{spmm_csc_t_dense_ex, spmm_csr_dense_ex};
 use crate::kernels::spmm::{spmm_max_backward, spmm_max_ex, spmm_tiled_ex};
@@ -202,8 +203,21 @@ impl NativeEngine {
     }
 
     /// Override the kernel execution policy for all subsequent epochs.
+    /// Preserves the current kernel-variant preference.
     pub fn set_threads(&mut self, threads: usize) {
-        self.policy = ExecPolicy::with_threads(threads);
+        self.policy = ExecPolicy::with_threads(threads).with_variant(self.policy.variant);
+    }
+
+    /// Builder-style kernel-variant override (see [`VariantChoice`]).
+    pub fn with_variant(mut self, variant: VariantChoice) -> NativeEngine {
+        self.set_variant(variant);
+        self
+    }
+
+    /// Override the kernel-variant preference for all subsequent epochs.
+    /// Variants are bitwise-identical — this is a speed knob only.
+    pub fn set_variant(&mut self, variant: VariantChoice) {
+        self.policy = self.policy.with_variant(variant);
     }
 
     fn num_layers(&self) -> usize {

@@ -14,16 +14,22 @@
 //! [`ExecPolicy`] the engine will train with ([`calibrate_gamma`] uses the
 //! process default from `MORPHLING_THREADS`).
 
+#![deny(missing_docs)]
+
 use crate::kernels::parallel::ExecPolicy;
 use crate::kernels::{gemm::gemm_ex, sparse_feat::spmm_csr_dense_ex};
 use crate::tensor::{sparsity, CsrMatrix, Matrix};
 use crate::util::proptest::{random_matrix, random_sparse_matrix};
 use crate::util::{timer::bench_fn, Rng};
+use std::collections::BTreeMap;
+use std::sync::{Mutex, OnceLock};
 
 /// Dense vs sparse feature-processing path (paper Algorithm 1).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum ExecutionMode {
+    /// Run `X·W` through the dense GEMM path.
     Dense,
+    /// Run `X·W` through the CSR/CSC sparse-feature kernels.
     Sparse,
 }
 
@@ -80,8 +86,11 @@ impl SparsityPolicy {
 /// Decision record for one dataset (logged by the coordinator).
 #[derive(Clone, Debug)]
 pub struct SparsityDecision {
+    /// Measured feature sparsity `s = 1 − nnz/(N·F)`.
     pub s: f64,
+    /// The γ/τ policy the decision was made under.
     pub policy: SparsityPolicy,
+    /// The selected execution path.
     pub mode: ExecutionMode,
 }
 
@@ -107,7 +116,27 @@ pub fn calibrate_gamma(seed: u64) -> f64 {
 
 /// [`calibrate_gamma`] under an explicit execution policy: both kernels are
 /// timed at the same thread count the engine will train with.
+///
+/// The probe workload is fixed (256×256×64 at 1/8 density), so the result
+/// depends only on `(seed, threads, kernel variant)` — it is memoized per
+/// that key, and repeated engine constructions or bench sweeps pay the
+/// ~10-iteration microbenchmark once per configuration instead of every
+/// time. A tuning manifest can skip the probe entirely: the coordinator
+/// prefers the manifest's persisted gamma when one is installed.
 pub fn calibrate_gamma_ex(seed: u64, pol: ExecPolicy) -> f64 {
+    static CACHE: OnceLock<Mutex<BTreeMap<(u64, usize, u8), f64>>> = OnceLock::new();
+    let key = (seed, pol.threads, pol.variant as u8);
+    let cache = CACHE.get_or_init(|| Mutex::new(BTreeMap::new()));
+    if let Some(g) = cache.lock().unwrap().get(&key) {
+        return *g;
+    }
+    let g = calibrate_gamma_probe(seed, pol);
+    cache.lock().unwrap().insert(key, g);
+    g
+}
+
+/// The actual microbenchmark behind [`calibrate_gamma_ex`] (uncached).
+fn calibrate_gamma_probe(seed: u64, pol: ExecPolicy) -> f64 {
     let (n, f, h) = (256, 256, 64);
     let density = 0.125f64;
     let mut rng = Rng::new(seed);
@@ -180,5 +209,16 @@ mod tests {
     fn calibration_threaded_produces_plausible_gamma() {
         let g = calibrate_gamma_ex(7, ExecPolicy::with_threads(4));
         assert!((0.01..=1.0).contains(&g), "gamma={g}");
+    }
+
+    #[test]
+    fn calibration_is_memoized_per_key() {
+        // Two probes of a timing microbenchmark virtually never agree to
+        // the last bit; exact equality means the second call was served
+        // from the (seed, threads, variant) cache.
+        let pol = ExecPolicy::with_threads(2);
+        let a = calibrate_gamma_ex(0xCAFE, pol);
+        let b = calibrate_gamma_ex(0xCAFE, pol);
+        assert_eq!(a.to_bits(), b.to_bits());
     }
 }

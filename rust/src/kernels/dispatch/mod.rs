@@ -1,0 +1,662 @@
+//! Runtime kernel-variant selection — the paper's input-statistics-driven
+//! execution engine, generalized from the sparsity engine's single gamma
+//! crossover into one dispatcher that picks kernel variant
+//! (generic vs width-specialized), the dense/sparse feature path (via the
+//! persisted gamma), and the GEMM k-panel height from input statistics.
+//!
+//! Selection has three layers, cheapest first:
+//!
+//! 1. **Policy override** — [`VariantChoice::ForceGeneric`] /
+//!    [`VariantChoice::ForceSpecialized`] on the
+//!    [`ExecPolicy`](super::parallel::ExecPolicy) pin the variant
+//!    unconditionally (used by tests, benches, and the tuner itself).
+//! 2. **Tuning manifest** — a [`TuneManifest`] produced by `morphling
+//!    tune` records the measured winner per (op, graph-size bucket,
+//!    feature width, threads). When a manifest is installed (via
+//!    [`install_manifest`] or the `MORPHLING_TUNE_MANIFEST` env var) and
+//!    has a matching entry, that entry decides.
+//! 3. **Heuristic fallback** — specialized bodies exist only for widths
+//!    in [`specialized::WIDTHS`], and on every machine we have measured
+//!    they win or tie at those widths, so the default is: specialized if
+//!    the width is covered, generic otherwise.
+//!
+//! Either way the result is *only* a speed choice: every specialized body
+//! is bitwise-identical to its generic counterpart (see
+//! [`specialized`](super::specialized)), so dispatch decisions never
+//! change training numerics.
+//!
+//! The manifest JSON schema is documented in `docs/KERNELS.md`; see
+//! [`TuneManifest`] for the programmatic form and [`tune`] for the
+//! autotuner that produces it.
+
+use super::specialized;
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::sync::OnceLock;
+
+pub mod tune;
+
+/// Default k-panel height for the blocked generic GEMM inner loop.
+/// The tuner may override it per bucket via [`TuneEntry::kblock`];
+/// specialized GEMM bodies keep the whole output row in registers and
+/// ignore it. (Results are bitwise-independent of the panel height — the
+/// per-element accumulation order never changes.)
+pub const DEFAULT_KBLOCK: usize = 64;
+
+/// A tunable kernel entry point. One value per `_ex` family that has both
+/// a generic and a specialized body.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Op {
+    /// Tiled SpMM forward/backward (`spmm_tiled_ex`, block variants).
+    SpmmTiled,
+    /// Un-tiled SpMM ablation baseline (`spmm_naive_ex`).
+    SpmmNaive,
+    /// Max-aggregation SpMM with argmax provenance (`spmm_max_ex`).
+    SpmmMax,
+    /// Dense `C = A·B` (`gemm_ex`).
+    Gemm,
+    /// Dense `C = Aᵀ·B` weight-gradient GEMM (`gemm_at_b_ex`).
+    GemmAtB,
+    /// Dense `C (+)= A·Bᵀ` input-gradient GEMM (`gemm_a_bt_ex`).
+    GemmABt,
+    /// Sparse-feature forward `Y = X_csr·W` (`spmm_csr_dense_ex`).
+    CsrDense,
+    /// Sparse-feature backward `dW = X_cscᵀ·G` (`spmm_csc_t_dense_ex`).
+    CscTDense,
+}
+
+impl Op {
+    /// Every tunable op, in manifest order.
+    pub const ALL: [Op; 8] = [
+        Op::SpmmTiled,
+        Op::SpmmNaive,
+        Op::SpmmMax,
+        Op::Gemm,
+        Op::GemmAtB,
+        Op::GemmABt,
+        Op::CsrDense,
+        Op::CscTDense,
+    ];
+
+    /// Stable manifest identifier for this op.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Op::SpmmTiled => "spmm_tiled",
+            Op::SpmmNaive => "spmm_naive",
+            Op::SpmmMax => "spmm_max",
+            Op::Gemm => "gemm",
+            Op::GemmAtB => "gemm_at_b",
+            Op::GemmABt => "gemm_a_bt",
+            Op::CsrDense => "csr_dense",
+            Op::CscTDense => "csc_t_dense",
+        }
+    }
+
+    /// Inverse of [`Op::as_str`].
+    pub fn parse(s: &str) -> Option<Op> {
+        Op::ALL.into_iter().find(|op| op.as_str() == s)
+    }
+}
+
+/// Which body a resolved dispatch runs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KernelVariant {
+    /// The width-agnostic loop (always available).
+    Generic,
+    /// The monomorphized fixed-width body (only for widths in
+    /// [`specialized::WIDTHS`]).
+    Specialized,
+}
+
+impl KernelVariant {
+    /// Stable manifest identifier for this variant.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            KernelVariant::Generic => "generic",
+            KernelVariant::Specialized => "specialized",
+        }
+    }
+
+    /// Inverse of [`KernelVariant::as_str`].
+    pub fn parse(s: &str) -> Option<KernelVariant> {
+        match s {
+            "generic" => Some(KernelVariant::Generic),
+            "specialized" => Some(KernelVariant::Specialized),
+            _ => None,
+        }
+    }
+}
+
+/// Caller-side variant preference, carried on
+/// [`ExecPolicy`](super::parallel::ExecPolicy) (CLI `--kernels`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum VariantChoice {
+    /// Let the dispatcher decide (manifest, then heuristic). The default.
+    #[default]
+    Auto,
+    /// Always run the generic loops (baseline / ablation mode).
+    ForceGeneric,
+    /// Run specialized bodies wherever the width is covered; widths
+    /// outside [`specialized::WIDTHS`] still fall back to generic.
+    ForceSpecialized,
+}
+
+impl VariantChoice {
+    /// Accepted `--kernels` spellings, for CLI error messages.
+    pub const VALID: [&'static str; 3] = ["auto", "generic", "specialized"];
+
+    /// Parse a CLI spelling from [`VariantChoice::VALID`].
+    pub fn parse(s: &str) -> Option<VariantChoice> {
+        match s {
+            "auto" => Some(VariantChoice::Auto),
+            "generic" => Some(VariantChoice::ForceGeneric),
+            "specialized" => Some(VariantChoice::ForceSpecialized),
+            _ => None,
+        }
+    }
+
+    /// The CLI spelling of this choice.
+    pub fn name(self) -> &'static str {
+        match self {
+            VariantChoice::Auto => "auto",
+            VariantChoice::ForceGeneric => "generic",
+            VariantChoice::ForceSpecialized => "specialized",
+        }
+    }
+}
+
+/// Coarse graph-size bucket used as a manifest key: relative variant cost
+/// depends on whether the streamed operand fits in cache, not on the exact
+/// row count, so the tuner measures one representative per bucket.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum SizeBucket {
+    /// Fewer than 4096 streamed rows (mini-batch blocks, tiny graphs).
+    Small,
+    /// 4096 to 32767 streamed rows (mid-size full-batch graphs).
+    Medium,
+    /// 32768 streamed rows or more (large full-batch graphs).
+    Large,
+}
+
+impl SizeBucket {
+    /// Bucket for a streamed row count.
+    pub fn from_rows(rows: usize) -> SizeBucket {
+        if rows < 4096 {
+            SizeBucket::Small
+        } else if rows < 32768 {
+            SizeBucket::Medium
+        } else {
+            SizeBucket::Large
+        }
+    }
+
+    /// Stable manifest identifier for this bucket.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            SizeBucket::Small => "small",
+            SizeBucket::Medium => "medium",
+            SizeBucket::Large => "large",
+        }
+    }
+
+    /// Inverse of [`SizeBucket::as_str`].
+    pub fn parse(s: &str) -> Option<SizeBucket> {
+        match s {
+            "small" => Some(SizeBucket::Small),
+            "medium" => Some(SizeBucket::Medium),
+            "large" => Some(SizeBucket::Large),
+            _ => None,
+        }
+    }
+}
+
+/// Input statistics an `_ex` entry point hands the dispatcher.
+///
+/// Convention: `rows` is the *streamed node dimension* `n` for every op —
+/// the SpMM target-row count, GEMM's `a.rows`, `a.rows` for `Aᵀ·B` (not
+/// the f×f output), the CSR row count, and the CSC's dense operand rows —
+/// so runtime lookups land in the same bucket the tuner keyed its
+/// measurements on.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct InputStats {
+    /// Streamed node dimension (see type-level convention note).
+    pub rows: usize,
+    /// Nonzeros streamed (graph edges or sparse-matrix nnz; `rows *
+    /// inner` for dense GEMM).
+    pub nnz: usize,
+    /// Feature width the inner loop runs over — the monomorphization key.
+    pub width: usize,
+}
+
+impl InputStats {
+    /// Bundle the statistics for a dispatch call.
+    pub fn new(rows: usize, nnz: usize, width: usize) -> InputStats {
+        InputStats { rows, nnz, width }
+    }
+
+    /// The manifest size bucket these statistics fall into.
+    pub fn bucket(self) -> SizeBucket {
+        SizeBucket::from_rows(self.rows)
+    }
+}
+
+/// One measured tuning decision: the winning variant for an (op, bucket,
+/// width, threads) cell, with the timings that justified it.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TuneEntry {
+    /// Which kernel family was measured.
+    pub op: Op,
+    /// Graph-size bucket of the representative workload.
+    pub bucket: SizeBucket,
+    /// Feature width measured (must be in [`specialized::WIDTHS`] for the
+    /// specialized column to exist).
+    pub width: usize,
+    /// Thread count measured.
+    pub threads: usize,
+    /// The faster variant — what the dispatcher will run.
+    pub variant: KernelVariant,
+    /// Winning GEMM k-panel height, if this cell swept one
+    /// (only [`Op::Gemm`] cells; `None` elsewhere).
+    pub kblock: Option<usize>,
+    /// Median seconds per call for the generic body.
+    pub generic_secs: f64,
+    /// Median seconds per call for the specialized body.
+    pub specialized_secs: f64,
+}
+
+/// A persisted autotuning result: per-cell variant winners plus the
+/// sparsity engine's dense/sparse gamma crossover per thread count.
+///
+/// Serialized as deterministic JSON (`version` = [`MANIFEST_VERSION`];
+/// schema worked example in `docs/KERNELS.md`). Produced by `morphling
+/// tune`, consumed via `--tune-manifest` / `MORPHLING_TUNE_MANIFEST`.
+#[derive(Clone, Debug, PartialEq, Default)]
+pub struct TuneManifest {
+    /// Measured gamma (sparse/dense throughput crossover) per thread
+    /// count, reused by the sparsity engine instead of re-probing.
+    pub gammas: BTreeMap<usize, f64>,
+    /// Per-(op, bucket, width, threads) winners.
+    pub entries: Vec<TuneEntry>,
+}
+
+/// Schema version written to and required from manifest files.
+pub const MANIFEST_VERSION: usize = 1;
+
+impl TuneManifest {
+    /// An empty manifest (no gammas, no entries).
+    pub fn new() -> TuneManifest {
+        TuneManifest::default()
+    }
+
+    /// The entry for an exact (op, bucket, width, threads) cell, if any.
+    pub fn lookup(
+        &self,
+        op: Op,
+        bucket: SizeBucket,
+        width: usize,
+        threads: usize,
+    ) -> Option<&TuneEntry> {
+        self.entries.iter().find(|e| {
+            e.op == op && e.bucket == bucket && e.width == width && e.threads == threads
+        })
+    }
+
+    /// The manifest as a JSON value (deterministic key order).
+    pub fn to_json(&self) -> Json {
+        let mut root = BTreeMap::new();
+        root.insert("version".to_string(), Json::Num(MANIFEST_VERSION as f64));
+        let gammas: BTreeMap<String, Json> = self
+            .gammas
+            .iter()
+            .map(|(t, g)| (t.to_string(), Json::Num(*g)))
+            .collect();
+        root.insert("gammas".to_string(), Json::Obj(gammas));
+        let entries: Vec<Json> = self
+            .entries
+            .iter()
+            .map(|e| {
+                let mut o = BTreeMap::new();
+                o.insert("op".to_string(), Json::Str(e.op.as_str().to_string()));
+                o.insert(
+                    "bucket".to_string(),
+                    Json::Str(e.bucket.as_str().to_string()),
+                );
+                o.insert("width".to_string(), Json::Num(e.width as f64));
+                o.insert("threads".to_string(), Json::Num(e.threads as f64));
+                o.insert(
+                    "variant".to_string(),
+                    Json::Str(e.variant.as_str().to_string()),
+                );
+                if let Some(kb) = e.kblock {
+                    o.insert("kblock".to_string(), Json::Num(kb as f64));
+                }
+                o.insert("generic_secs".to_string(), Json::Num(e.generic_secs));
+                o.insert(
+                    "specialized_secs".to_string(),
+                    Json::Num(e.specialized_secs),
+                );
+                Json::Obj(o)
+            })
+            .collect();
+        root.insert("entries".to_string(), Json::Arr(entries));
+        Json::Obj(root)
+    }
+
+    /// Parse a manifest from its JSON form, validating the schema version.
+    pub fn from_json(v: &Json) -> Result<TuneManifest, String> {
+        let version = v
+            .get("version")
+            .and_then(Json::as_usize)
+            .ok_or("manifest missing 'version'")?;
+        if version != MANIFEST_VERSION {
+            return Err(format!(
+                "manifest version {version} unsupported (expected {MANIFEST_VERSION})"
+            ));
+        }
+        let mut gammas = BTreeMap::new();
+        if let Some(obj) = v.get("gammas").and_then(Json::as_obj) {
+            for (k, g) in obj {
+                let t: usize = k
+                    .parse()
+                    .map_err(|_| format!("bad gamma thread key '{k}'"))?;
+                let g = g.as_f64().ok_or("gamma value must be a number")?;
+                gammas.insert(t, g);
+            }
+        }
+        let mut entries = Vec::new();
+        if let Some(arr) = v.get("entries").and_then(Json::as_arr) {
+            for e in arr {
+                let op_s = e.get("op").and_then(Json::as_str).ok_or("entry missing 'op'")?;
+                let op = Op::parse(op_s).ok_or_else(|| format!("unknown op '{op_s}'"))?;
+                let b_s = e
+                    .get("bucket")
+                    .and_then(Json::as_str)
+                    .ok_or("entry missing 'bucket'")?;
+                let bucket =
+                    SizeBucket::parse(b_s).ok_or_else(|| format!("unknown bucket '{b_s}'"))?;
+                let width = e
+                    .get("width")
+                    .and_then(Json::as_usize)
+                    .ok_or("entry missing 'width'")?;
+                let threads = e
+                    .get("threads")
+                    .and_then(Json::as_usize)
+                    .ok_or("entry missing 'threads'")?;
+                let v_s = e
+                    .get("variant")
+                    .and_then(Json::as_str)
+                    .ok_or("entry missing 'variant'")?;
+                let variant = KernelVariant::parse(v_s)
+                    .ok_or_else(|| format!("unknown variant '{v_s}'"))?;
+                let kblock = e.get("kblock").and_then(Json::as_usize);
+                let generic_secs = e.get("generic_secs").and_then(Json::as_f64).unwrap_or(0.0);
+                let specialized_secs = e
+                    .get("specialized_secs")
+                    .and_then(Json::as_f64)
+                    .unwrap_or(0.0);
+                entries.push(TuneEntry {
+                    op,
+                    bucket,
+                    width,
+                    threads,
+                    variant,
+                    kblock,
+                    generic_secs,
+                    specialized_secs,
+                });
+            }
+        }
+        Ok(TuneManifest { gammas, entries })
+    }
+
+    /// Write the manifest to `path` as JSON.
+    pub fn save(&self, path: &Path) -> Result<(), String> {
+        std::fs::write(path, format!("{}\n", self.to_json()))
+            .map_err(|e| format!("write {}: {e}", path.display()))
+    }
+
+    /// Load a manifest from a JSON file written by [`TuneManifest::save`].
+    pub fn load(path: &Path) -> Result<TuneManifest, String> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| format!("read {}: {e}", path.display()))?;
+        let v = Json::parse(&text).map_err(|e| format!("parse {}: {e}", path.display()))?;
+        TuneManifest::from_json(&v)
+    }
+}
+
+/// The runtime selector: resolves a [`KernelVariant`] (and GEMM k-panel
+/// height) from input statistics, an optional [`TuneManifest`], and the
+/// caller's [`VariantChoice`].
+///
+/// `_ex` entry points consult the process-wide instance ([`global`]) once
+/// per call and then run serial and threaded paths through the same
+/// resolved body, so a decision can never differ between row blocks.
+#[derive(Clone, Debug, Default)]
+pub struct Dispatcher {
+    manifest: Option<TuneManifest>,
+}
+
+impl Dispatcher {
+    /// A dispatcher with no manifest: pure width heuristic.
+    pub fn heuristic() -> Dispatcher {
+        Dispatcher { manifest: None }
+    }
+
+    /// A dispatcher that prefers `manifest` entries over the heuristic.
+    pub fn with_manifest(manifest: TuneManifest) -> Dispatcher {
+        Dispatcher {
+            manifest: Some(manifest),
+        }
+    }
+
+    /// The installed manifest, if any.
+    pub fn manifest(&self) -> Option<&TuneManifest> {
+        self.manifest.as_ref()
+    }
+
+    fn lookup(&self, op: Op, stats: InputStats, threads: usize) -> Option<&TuneEntry> {
+        self.manifest
+            .as_ref()
+            .and_then(|m| m.lookup(op, stats.bucket(), stats.width, threads))
+    }
+
+    /// Resolve the variant to run for one `_ex` call.
+    ///
+    /// Overrides beat the manifest, the manifest beats the heuristic, and
+    /// a width outside [`specialized::WIDTHS`] always resolves to
+    /// [`KernelVariant::Generic`] regardless of what asked for it.
+    pub fn resolve(
+        &self,
+        op: Op,
+        stats: InputStats,
+        choice: VariantChoice,
+        threads: usize,
+    ) -> KernelVariant {
+        let width_ok = specialized::has_width(stats.width);
+        match choice {
+            VariantChoice::ForceGeneric => KernelVariant::Generic,
+            VariantChoice::ForceSpecialized => {
+                if width_ok {
+                    KernelVariant::Specialized
+                } else {
+                    KernelVariant::Generic
+                }
+            }
+            VariantChoice::Auto => {
+                if !width_ok {
+                    return KernelVariant::Generic;
+                }
+                if let Some(e) = self.lookup(op, stats, threads) {
+                    return e.variant;
+                }
+                KernelVariant::Specialized
+            }
+        }
+    }
+
+    /// The GEMM k-panel height for these statistics: the manifest's tuned
+    /// [`Op::Gemm`] value if present, [`DEFAULT_KBLOCK`] otherwise.
+    pub fn kblock(&self, stats: InputStats, threads: usize) -> usize {
+        self.lookup(Op::Gemm, stats, threads)
+            .and_then(|e| e.kblock)
+            .unwrap_or(DEFAULT_KBLOCK)
+    }
+
+    /// The manifest's measured dense/sparse gamma for `threads`, if the
+    /// manifest recorded one — lets the sparsity engine skip its
+    /// calibration probe entirely.
+    pub fn gamma(&self, threads: usize) -> Option<f64> {
+        self.manifest.as_ref().and_then(|m| m.gammas.get(&threads).copied())
+    }
+}
+
+static GLOBAL: OnceLock<Dispatcher> = OnceLock::new();
+
+/// The process-wide dispatcher used by every `_ex` entry point.
+///
+/// First access wins: either an explicit [`install_manifest`] call, or
+/// lazy initialization from the `MORPHLING_TUNE_MANIFEST` env var (path
+/// to a manifest JSON; unset, empty, or unreadable falls back to the
+/// heuristic with a warning on stderr).
+pub fn global() -> &'static Dispatcher {
+    GLOBAL.get_or_init(|| match std::env::var("MORPHLING_TUNE_MANIFEST") {
+        Ok(path) if !path.is_empty() => match TuneManifest::load(Path::new(&path)) {
+            Ok(m) => Dispatcher::with_manifest(m),
+            Err(e) => {
+                eprintln!("warning: ignoring MORPHLING_TUNE_MANIFEST: {e}");
+                Dispatcher::heuristic()
+            }
+        },
+        _ => Dispatcher::heuristic(),
+    })
+}
+
+/// Install `manifest` as the process-wide dispatcher. Returns `false` if
+/// the global was already initialized (the earlier dispatcher stays —
+/// set-once semantics keep every `_ex` call in a run consistent).
+pub fn install_manifest(manifest: TuneManifest) -> bool {
+    GLOBAL.set(Dispatcher::with_manifest(manifest)).is_ok()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn entry(op: Op, bucket: SizeBucket, width: usize, threads: usize, v: KernelVariant) -> TuneEntry {
+        TuneEntry {
+            op,
+            bucket,
+            width,
+            threads,
+            variant: v,
+            kblock: if op == Op::Gemm { Some(32) } else { None },
+            generic_secs: 2.0e-3,
+            specialized_secs: 1.0e-3,
+        }
+    }
+
+    #[test]
+    fn heuristic_resolution() {
+        let d = Dispatcher::heuristic();
+        let s32 = InputStats::new(1000, 8000, 32);
+        let s100 = InputStats::new(1000, 8000, 100);
+        assert_eq!(
+            d.resolve(Op::SpmmTiled, s32, VariantChoice::Auto, 1),
+            KernelVariant::Specialized
+        );
+        assert_eq!(
+            d.resolve(Op::SpmmTiled, s100, VariantChoice::Auto, 1),
+            KernelVariant::Generic
+        );
+        assert_eq!(
+            d.resolve(Op::SpmmTiled, s32, VariantChoice::ForceGeneric, 1),
+            KernelVariant::Generic
+        );
+        assert_eq!(
+            d.resolve(Op::SpmmTiled, s100, VariantChoice::ForceSpecialized, 1),
+            KernelVariant::Generic
+        );
+        assert_eq!(d.kblock(s32, 1), DEFAULT_KBLOCK);
+        assert_eq!(d.gamma(1), None);
+    }
+
+    #[test]
+    fn manifest_beats_heuristic_but_not_forces() {
+        let mut m = TuneManifest::new();
+        m.gammas.insert(1, 0.625);
+        m.entries.push(entry(
+            Op::SpmmTiled,
+            SizeBucket::Small,
+            32,
+            1,
+            KernelVariant::Generic,
+        ));
+        m.entries.push(entry(Op::Gemm, SizeBucket::Small, 32, 1, KernelVariant::Specialized));
+        let d = Dispatcher::with_manifest(m);
+        let s = InputStats::new(1000, 8000, 32);
+        // Manifest says generic for this cell even though the width is covered.
+        assert_eq!(
+            d.resolve(Op::SpmmTiled, s, VariantChoice::Auto, 1),
+            KernelVariant::Generic
+        );
+        // Force overrides the manifest.
+        assert_eq!(
+            d.resolve(Op::SpmmTiled, s, VariantChoice::ForceSpecialized, 1),
+            KernelVariant::Specialized
+        );
+        // Unmeasured cells fall back to the heuristic.
+        assert_eq!(
+            d.resolve(Op::SpmmTiled, s, VariantChoice::Auto, 4),
+            KernelVariant::Specialized
+        );
+        assert_eq!(d.kblock(s, 1), 32);
+        assert_eq!(d.kblock(s, 4), DEFAULT_KBLOCK);
+        assert_eq!(d.gamma(1), Some(0.625));
+    }
+
+    #[test]
+    fn bucket_thresholds() {
+        assert_eq!(SizeBucket::from_rows(0), SizeBucket::Small);
+        assert_eq!(SizeBucket::from_rows(4095), SizeBucket::Small);
+        assert_eq!(SizeBucket::from_rows(4096), SizeBucket::Medium);
+        assert_eq!(SizeBucket::from_rows(32767), SizeBucket::Medium);
+        assert_eq!(SizeBucket::from_rows(32768), SizeBucket::Large);
+    }
+
+    #[test]
+    fn json_roundtrip_preserves_decisions() {
+        let mut m = TuneManifest::new();
+        m.gammas.insert(1, 0.5);
+        m.gammas.insert(4, 0.75);
+        for op in Op::ALL {
+            m.entries.push(entry(op, SizeBucket::Medium, 64, 4, KernelVariant::Specialized));
+        }
+        let text = m.to_json().to_string();
+        let back = TuneManifest::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(m, back);
+    }
+
+    #[test]
+    fn from_json_rejects_bad_input() {
+        assert!(TuneManifest::from_json(&Json::parse("{}").unwrap()).is_err());
+        let bad_version = r#"{"version": 99, "gammas": {}, "entries": []}"#;
+        assert!(TuneManifest::from_json(&Json::parse(bad_version).unwrap()).is_err());
+        let bad_op =
+            r#"{"version": 1, "gammas": {}, "entries": [{"op": "nope", "bucket": "small",
+                "width": 32, "threads": 1, "variant": "generic"}]}"#;
+        assert!(TuneManifest::from_json(&Json::parse(bad_op).unwrap()).is_err());
+    }
+
+    #[test]
+    fn op_and_choice_parse_are_inverses() {
+        for op in Op::ALL {
+            assert_eq!(Op::parse(op.as_str()), Some(op));
+        }
+        for s in VariantChoice::VALID {
+            assert_eq!(VariantChoice::parse(s).unwrap().name(), s);
+        }
+        assert_eq!(VariantChoice::default(), VariantChoice::Auto);
+        assert!(Op::parse("bogus").is_none());
+    }
+}

@@ -1,0 +1,322 @@
+//! The autotuner behind `morphling tune` — measured, not guessed,
+//! dispatch (the operation-level-benchmarking recipe): for every
+//! (op, graph-size bucket, feature width, threads) cell it times the
+//! generic body against the monomorphized one on a representative
+//! synthetic power-law workload, sweeps the GEMM k-panel height, probes
+//! the sparsity engine's gamma per thread count, and persists the winners
+//! as a [`TuneManifest`] the dispatcher consults at runtime.
+//!
+//! Both variants are timed through the public `_ex` entry points under
+//! [`VariantChoice::ForceGeneric`] / [`VariantChoice::ForceSpecialized`],
+//! so the tuner measures exactly the code paths training will run — and
+//! because forces bypass the manifest, a tuning run is unaffected by any
+//! manifest already installed in the process.
+
+use super::{
+    install_manifest, DEFAULT_KBLOCK, KernelVariant, Op, SizeBucket, TuneEntry, TuneManifest,
+    VariantChoice,
+};
+use crate::engine::sparsity::calibrate_gamma_ex;
+use crate::graph::generator::{power_law_graph, GraphConfig};
+use crate::graph::Graph;
+use crate::kernels::gemm::{gemm_a_bt_ex, gemm_at_b_ex, gemm_ex, gemm_kblock_ex};
+use crate::kernels::parallel::ExecPolicy;
+use crate::kernels::sparse_feat::{spmm_csc_t_dense_ex, spmm_csr_dense_ex};
+use crate::kernels::specialized;
+use crate::kernels::spmm::{spmm_max_ex, spmm_naive_ex, spmm_tiled_ex};
+use crate::tensor::{CscMatrix, CsrMatrix, Matrix};
+use crate::util::proptest::{random_matrix, random_sparse_matrix};
+use crate::util::timer::{bench_fn, median};
+use crate::util::Rng;
+
+/// k-panel heights the GEMM sweep tries (bitwise-equivalent choices; only
+/// speed differs).
+pub const KBLOCK_CANDIDATES: [usize; 3] = [32, 64, 128];
+
+/// Sparse-feature probe: raw feature dimension and sparsity of the
+/// synthetic bag-of-words operand.
+const SPARSE_FEAT_DIM: usize = 256;
+const SPARSE_FEAT_SPARSITY: f64 = 0.9;
+
+/// Knobs for one tuning run (CLI flags of `morphling tune`).
+#[derive(Clone, Debug)]
+pub struct TuneConfig {
+    /// Feature widths to measure (widths without a specialized body are
+    /// skipped with a notice).
+    pub widths: Vec<usize>,
+    /// Thread counts to measure.
+    pub threads: Vec<usize>,
+    /// RNG seed for the synthetic workloads.
+    pub seed: u64,
+    /// Smoke mode: only the small bucket, fewer timing iterations.
+    pub quick: bool,
+}
+
+impl Default for TuneConfig {
+    fn default() -> Self {
+        TuneConfig {
+            widths: specialized::WIDTHS.to_vec(),
+            threads: vec![1, 4],
+            seed: 42,
+            quick: false,
+        }
+    }
+}
+
+impl TuneConfig {
+    fn buckets(&self) -> &'static [SizeBucket] {
+        if self.quick {
+            &[SizeBucket::Small]
+        } else {
+            &[SizeBucket::Small, SizeBucket::Medium, SizeBucket::Large]
+        }
+    }
+
+    fn bench_iters(&self) -> (usize, usize) {
+        if self.quick {
+            (1, 3)
+        } else {
+            (2, 7)
+        }
+    }
+}
+
+/// Representative synthetic workload sizes per bucket — one comfortably
+/// inside each of the dispatcher's [`SizeBucket`] row ranges.
+fn bucket_shape(bucket: SizeBucket) -> (usize, usize) {
+    match bucket {
+        SizeBucket::Small => (1_500, 12_000),
+        SizeBucket::Medium => (8_000, 96_000),
+        SizeBucket::Large => (40_000, 480_000),
+    }
+}
+
+fn time_variant(
+    cfg: &TuneConfig,
+    pol: ExecPolicy,
+    choice: VariantChoice,
+    mut call: impl FnMut(ExecPolicy),
+) -> f64 {
+    let p = pol.with_variant(choice);
+    let (warmup, iters) = cfg.bench_iters();
+    let (_, samples) = bench_fn(warmup, iters, || call(p));
+    median(&samples)
+}
+
+/// Run the full sweep and return the populated manifest.
+///
+/// `progress` receives one human-readable line per measured cell (the CLI
+/// prints them; pass a no-op closure to run silently).
+pub fn run(cfg: &TuneConfig, mut progress: impl FnMut(&str)) -> TuneManifest {
+    let mut manifest = TuneManifest::new();
+    for &t in &cfg.threads {
+        let pol = ExecPolicy::with_threads(t);
+        let gamma = calibrate_gamma_ex(cfg.seed, pol);
+        progress(&format!("gamma[threads={t}] = {gamma:.4}"));
+        manifest.gammas.insert(t, gamma);
+    }
+    for &bucket in cfg.buckets() {
+        let (n, e) = bucket_shape(bucket);
+        let mut rng = Rng::new(cfg.seed ^ n as u64);
+        let graph = power_law_graph(
+            &GraphConfig {
+                num_nodes: n,
+                num_edges: e,
+                power_law_gamma: 2.3,
+                components: 1,
+            },
+            &mut rng,
+        );
+        let xs_dense = Matrix::from_vec(
+            n,
+            SPARSE_FEAT_DIM,
+            random_sparse_matrix(&mut rng, n, SPARSE_FEAT_DIM, SPARSE_FEAT_SPARSITY),
+        );
+        let csr = CsrMatrix::from_dense(&xs_dense);
+        let csc = CscMatrix::from_dense(&xs_dense);
+        for &width in &cfg.widths {
+            if !specialized::has_width(width) {
+                progress(&format!(
+                    "skipping width {width}: no specialized body (generic always runs)"
+                ));
+                continue;
+            }
+            let x = Matrix::from_vec(n, width, random_matrix(&mut rng, n, width));
+            let wsq = Matrix::from_vec(width, width, random_matrix(&mut rng, width, width));
+            let bt = Matrix::from_vec(64, width, random_matrix(&mut rng, 64, width));
+            let wsp = Matrix::from_vec(
+                SPARSE_FEAT_DIM,
+                width,
+                random_matrix(&mut rng, SPARSE_FEAT_DIM, width),
+            );
+            for &t in &cfg.threads {
+                let pol = ExecPolicy::with_threads(t);
+                for op in Op::ALL {
+                    let entry =
+                        tune_cell(cfg, op, bucket, width, pol, &graph, &x, &wsq, &bt, &csr, &csc, &wsp);
+                    progress(&format!(
+                        "{}/{}/F={}/t={}: {} ({:.3}ms generic, {:.3}ms specialized{})",
+                        op.as_str(),
+                        bucket.as_str(),
+                        width,
+                        t,
+                        entry.variant.as_str(),
+                        entry.generic_secs * 1e3,
+                        entry.specialized_secs * 1e3,
+                        entry
+                            .kblock
+                            .map(|kb| format!(", kblock={kb}"))
+                            .unwrap_or_default(),
+                    ));
+                    manifest.entries.push(entry);
+                }
+            }
+        }
+    }
+    manifest
+}
+
+/// Measure one (op, bucket, width, threads) cell.
+#[allow(clippy::too_many_arguments)]
+fn tune_cell(
+    cfg: &TuneConfig,
+    op: Op,
+    bucket: SizeBucket,
+    width: usize,
+    pol: ExecPolicy,
+    graph: &Graph,
+    x: &Matrix,
+    wsq: &Matrix,
+    bt: &Matrix,
+    csr: &CsrMatrix,
+    csc: &CscMatrix,
+    wsp: &Matrix,
+) -> TuneEntry {
+    let n = x.rows;
+    let mut kblock = None;
+    let (generic_secs, specialized_secs) = match op {
+        Op::SpmmTiled => {
+            let mut y = Matrix::zeros(n, width);
+            let mut t = |c| time_variant(cfg, pol, c, |p| spmm_tiled_ex(graph, x, &mut y, p));
+            (t(VariantChoice::ForceGeneric), t(VariantChoice::ForceSpecialized))
+        }
+        Op::SpmmNaive => {
+            let mut y = Matrix::zeros(n, width);
+            let mut t = |c| time_variant(cfg, pol, c, |p| spmm_naive_ex(graph, x, &mut y, p));
+            (t(VariantChoice::ForceGeneric), t(VariantChoice::ForceSpecialized))
+        }
+        Op::SpmmMax => {
+            let mut y = Matrix::zeros(n, width);
+            let mut am = vec![0u32; n * width];
+            let mut t =
+                |c| time_variant(cfg, pol, c, |p| spmm_max_ex(graph, x, &mut y, &mut am, p));
+            (t(VariantChoice::ForceGeneric), t(VariantChoice::ForceSpecialized))
+        }
+        Op::Gemm => {
+            let mut c = Matrix::zeros(n, width);
+            let g = {
+                let mut t = |ch| time_variant(cfg, pol, ch, |p| gemm_ex(x, wsq, &mut c, p));
+                (t(VariantChoice::ForceGeneric), t(VariantChoice::ForceSpecialized))
+            };
+            // Sweep the generic body's k-panel height on the same operands;
+            // any candidate is bitwise-equivalent, so this is pure speed.
+            let mut best = (DEFAULT_KBLOCK, f64::INFINITY);
+            for kb in KBLOCK_CANDIDATES {
+                let (warmup, iters) = cfg.bench_iters();
+                let (_, samples) =
+                    bench_fn(warmup, iters, || gemm_kblock_ex(x, wsq, &mut c, pol, kb));
+                let m = median(&samples);
+                if m < best.1 {
+                    best = (kb, m);
+                }
+            }
+            kblock = Some(best.0);
+            g
+        }
+        Op::GemmAtB => {
+            let g2 = Matrix::from_vec(n, width, x.data.clone());
+            let mut c = Matrix::zeros(width, width);
+            let mut t = |ch| time_variant(cfg, pol, ch, |p| gemm_at_b_ex(x, &g2, &mut c, p));
+            (t(VariantChoice::ForceGeneric), t(VariantChoice::ForceSpecialized))
+        }
+        Op::GemmABt => {
+            let mut c = Matrix::zeros(n, bt.rows);
+            let mut t = |ch| time_variant(cfg, pol, ch, |p| gemm_a_bt_ex(x, bt, &mut c, p));
+            (t(VariantChoice::ForceGeneric), t(VariantChoice::ForceSpecialized))
+        }
+        Op::CsrDense => {
+            let mut y = Matrix::zeros(n, width);
+            let mut t = |ch| time_variant(cfg, pol, ch, |p| spmm_csr_dense_ex(csr, wsp, &mut y, p));
+            (t(VariantChoice::ForceGeneric), t(VariantChoice::ForceSpecialized))
+        }
+        Op::CscTDense => {
+            let mut dw = Matrix::zeros(SPARSE_FEAT_DIM, width);
+            let mut t =
+                |ch| time_variant(cfg, pol, ch, |p| spmm_csc_t_dense_ex(csc, x, &mut dw, p));
+            (t(VariantChoice::ForceGeneric), t(VariantChoice::ForceSpecialized))
+        }
+    };
+    TuneEntry {
+        op,
+        bucket,
+        width,
+        threads: pol.threads,
+        variant: if specialized_secs < generic_secs {
+            KernelVariant::Specialized
+        } else {
+            KernelVariant::Generic
+        },
+        kblock,
+        generic_secs,
+        specialized_secs,
+    }
+}
+
+/// Convenience for callers that want to tune and immediately adopt the
+/// result in-process: runs the sweep, then [`install_manifest`]. Returns
+/// the manifest (installed or not — `false` from install means an earlier
+/// dispatcher already claimed the process).
+pub fn run_and_install(cfg: &TuneConfig, progress: impl FnMut(&str)) -> TuneManifest {
+    let m = run(cfg, progress);
+    install_manifest(m.clone());
+    m
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quick_tune_covers_every_op() {
+        let cfg = TuneConfig {
+            widths: vec![16],
+            threads: vec![1],
+            seed: 7,
+            quick: true,
+        };
+        let m = run(&cfg, |_| {});
+        assert_eq!(m.entries.len(), Op::ALL.len());
+        assert_eq!(m.gammas.len(), 1);
+        for op in Op::ALL {
+            let e = m
+                .lookup(op, SizeBucket::Small, 16, 1)
+                .unwrap_or_else(|| panic!("missing entry for {}", op.as_str()));
+            assert!(e.generic_secs > 0.0 && e.specialized_secs > 0.0);
+            assert_eq!(e.kblock.is_some(), op == Op::Gemm);
+        }
+    }
+
+    #[test]
+    fn uncovered_widths_are_skipped() {
+        let cfg = TuneConfig {
+            widths: vec![100],
+            threads: vec![1],
+            seed: 7,
+            quick: true,
+        };
+        let mut notices = Vec::new();
+        let m = run(&cfg, |s| notices.push(s.to_string()));
+        assert!(m.entries.is_empty());
+        assert!(notices.iter().any(|s| s.contains("skipping width 100")));
+    }
+}

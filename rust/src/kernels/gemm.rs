@@ -17,20 +17,23 @@
 //! is unchanged: results are bitwise-identical for any thread count, and
 //! no atomics are needed (paper §IV-B-c's conflict-free argument).
 
+use super::dispatch::{self, InputStats, KernelVariant, Op, DEFAULT_KBLOCK};
 use super::parallel::{par_row_blocks, partition_even, ExecPolicy};
+use super::specialized;
 use crate::tensor::Matrix;
 
-/// k-panel height: 64 rows of B (64·cols·4 B) targets L2 residency.
-const KBLOCK: usize = 64;
-
 /// Serial body of `C = A·B` over one block of C/A rows; `out` is that
-/// block's slice of `c.data`.
-fn gemm_rows(a: &Matrix, b: &Matrix, rows: std::ops::Range<usize>, out: &mut [f32]) {
+/// block's slice of `c.data`. The k-panel height (`kblock`, default
+/// [`DEFAULT_KBLOCK`] — 64 rows of B targets L2 residency) only reorders
+/// which *rows* revisit the panel, never the per-element accumulation
+/// order, so results are bitwise-identical at any panel height.
+fn gemm_rows(a: &Matrix, b: &Matrix, rows: std::ops::Range<usize>, out: &mut [f32], kblock: usize) {
     let (k, n) = (a.cols, b.cols);
+    let kb = kblock.max(1);
     out.iter_mut().for_each(|v| *v = 0.0);
     let base = rows.start;
-    for k0 in (0..k).step_by(KBLOCK) {
-        let k1 = (k0 + KBLOCK).min(k);
+    for k0 in (0..k).step_by(kb) {
+        let k1 = (k0 + kb).min(k);
         for i in rows.clone() {
             let arow = &a.data[i * k..(i + 1) * k];
             let crow = &mut out[(i - base) * n..(i - base + 1) * n];
@@ -55,18 +58,47 @@ pub fn gemm(a: &Matrix, b: &Matrix, c: &mut Matrix) {
     gemm_ex(a, b, c, ExecPolicy::from_env());
 }
 
-/// [`gemm`] with an explicit execution policy (row-blocked over `m`).
+/// [`gemm`] with an explicit execution policy (row-blocked over `m`). The
+/// dispatcher picks the body (generic k-blocked vs register-accumulator
+/// specialized for `b.cols` ∈ [`specialized::WIDTHS`]) and the k-panel
+/// height; both choices are speed-only (bitwise-identical results).
 pub fn gemm_ex(a: &Matrix, b: &Matrix, c: &mut Matrix, pol: ExecPolicy) {
     assert_eq!(a.cols, b.rows, "inner dim");
     assert_eq!((c.rows, c.cols), (a.rows, b.cols), "out shape");
     let m = a.rows;
+    let stats = InputStats::new(m, m * a.cols, b.cols);
+    let disp = dispatch::global();
+    let kblock = disp.kblock(stats, pol.threads);
+    let body: specialized::GemmBody = match disp.resolve(Op::Gemm, stats, pol.variant, pol.threads)
+    {
+        KernelVariant::Specialized => specialized::gemm_body(b.cols).unwrap_or(gemm_rows),
+        KernelVariant::Generic => gemm_rows,
+    };
     if pol.is_serial() {
-        gemm_rows(a, b, 0..m, &mut c.data);
+        body(a, b, 0..m, &mut c.data, kblock);
         return;
     }
     let blocks = partition_even(m, pol.threads);
     par_row_blocks(&blocks, b.cols, &mut c.data, |rows, out| {
-        gemm_rows(a, b, rows, out)
+        body(a, b, rows, out, kblock)
+    });
+}
+
+/// [`gemm_ex`] pinned to the **generic** blocked body with an explicit
+/// k-panel height — the autotuner's probe for the kblock sweep. Results
+/// are bitwise-identical to [`gemm_ex`] at any `kblock` (see
+/// `gemm_rows`'s order argument).
+pub fn gemm_kblock_ex(a: &Matrix, b: &Matrix, c: &mut Matrix, pol: ExecPolicy, kblock: usize) {
+    assert_eq!(a.cols, b.rows, "inner dim");
+    assert_eq!((c.rows, c.cols), (a.rows, b.cols), "out shape");
+    let m = a.rows;
+    if pol.is_serial() {
+        gemm_rows(a, b, 0..m, &mut c.data, kblock);
+        return;
+    }
+    let blocks = partition_even(m, pol.threads);
+    par_row_blocks(&blocks, b.cols, &mut c.data, |rows, out| {
+        gemm_rows(a, b, rows, out, kblock)
     });
 }
 
@@ -107,14 +139,22 @@ pub fn gemm_at_b_ex(a: &Matrix, b: &Matrix, c: &mut Matrix, pol: ExecPolicy) {
     assert_eq!(a.rows, b.rows, "outer dim");
     assert_eq!((c.rows, c.cols), (a.cols, b.cols), "out shape");
     let k = a.cols;
+    // Stats key on the *streamed* node dimension (a.rows), not the f×h
+    // output, so runtime lookups land in the tuner's bucket.
+    let stats = InputStats::new(a.rows, a.rows * a.cols, b.cols);
+    let body: specialized::GemmAtBBody =
+        match dispatch::global().resolve(Op::GemmAtB, stats, pol.variant, pol.threads) {
+            KernelVariant::Specialized => {
+                specialized::gemm_at_b_body(b.cols).unwrap_or(gemm_at_b_cols)
+            }
+            KernelVariant::Generic => gemm_at_b_cols,
+        };
     if pol.is_serial() {
-        gemm_at_b_cols(a, b, 0..k, &mut c.data);
+        body(a, b, 0..k, &mut c.data);
         return;
     }
     let blocks = partition_even(k, pol.threads);
-    par_row_blocks(&blocks, b.cols, &mut c.data, |ks, out| {
-        gemm_at_b_cols(a, b, ks, out)
-    });
+    par_row_blocks(&blocks, b.cols, &mut c.data, |ks, out| body(a, b, ks, out));
 }
 
 /// Serial body of `C (+)= A·Bᵀ` over one block of C/A rows.
@@ -154,17 +194,7 @@ pub fn gemm_a_bt(a: &Matrix, b: &Matrix, c: &mut Matrix) {
 
 /// [`gemm_a_bt`] with an explicit execution policy (row-blocked over `m`).
 pub fn gemm_a_bt_ex(a: &Matrix, b: &Matrix, c: &mut Matrix, pol: ExecPolicy) {
-    assert_eq!(a.cols, b.cols, "inner dim");
-    assert_eq!((c.rows, c.cols), (a.rows, b.rows), "out shape");
-    let m = a.rows;
-    if pol.is_serial() {
-        gemm_a_bt_rows(a, b, 0..m, &mut c.data, false);
-        return;
-    }
-    let blocks = partition_even(m, pol.threads);
-    par_row_blocks(&blocks, b.rows, &mut c.data, |rows, out| {
-        gemm_a_bt_rows(a, b, rows, out, false)
-    });
+    gemm_a_bt_dispatch(a, b, c, pol, false);
 }
 
 /// `C += A·Bᵀ` — accumulating variant of [`gemm_a_bt`], used where two
@@ -175,16 +205,31 @@ pub fn gemm_a_bt_acc(a: &Matrix, b: &Matrix, c: &mut Matrix) {
 
 /// [`gemm_a_bt_acc`] with an explicit execution policy.
 pub fn gemm_a_bt_acc_ex(a: &Matrix, b: &Matrix, c: &mut Matrix, pol: ExecPolicy) {
+    gemm_a_bt_dispatch(a, b, c, pol, true);
+}
+
+/// Shared overwrite/accumulate dispatch for `C (+)= A·Bᵀ`. The
+/// specialization key is the *inner* width `a.cols` (the dot-product trip
+/// count the monomorphized body unrolls).
+fn gemm_a_bt_dispatch(a: &Matrix, b: &Matrix, c: &mut Matrix, pol: ExecPolicy, accumulate: bool) {
     assert_eq!(a.cols, b.cols, "inner dim");
     assert_eq!((c.rows, c.cols), (a.rows, b.rows), "out shape");
     let m = a.rows;
+    let stats = InputStats::new(m, m * b.rows, a.cols);
+    let body: specialized::GemmABtBody =
+        match dispatch::global().resolve(Op::GemmABt, stats, pol.variant, pol.threads) {
+            KernelVariant::Specialized => {
+                specialized::gemm_a_bt_body(a.cols).unwrap_or(gemm_a_bt_rows)
+            }
+            KernelVariant::Generic => gemm_a_bt_rows,
+        };
     if pol.is_serial() {
-        gemm_a_bt_rows(a, b, 0..m, &mut c.data, true);
+        body(a, b, 0..m, &mut c.data, accumulate);
         return;
     }
     let blocks = partition_even(m, pol.threads);
     par_row_blocks(&blocks, b.rows, &mut c.data, |rows, out| {
-        gemm_a_bt_rows(a, b, rows, out, true)
+        body(a, b, rows, out, accumulate)
     });
 }
 
@@ -369,8 +414,8 @@ mod tests {
 
     #[test]
     fn kblock_boundary() {
-        // k exactly at and above KBLOCK
-        for k in [KBLOCK, KBLOCK + 3] {
+        // k exactly at and above the default k-panel height
+        for k in [DEFAULT_KBLOCK, DEFAULT_KBLOCK + 3] {
             let a = Matrix::from_vec(2, k, (0..2 * k).map(|i| i as f32 * 0.01).collect());
             let b = Matrix::from_vec(k, 2, (0..2 * k).map(|i| i as f32 * 0.02).collect());
             let mut c = Matrix::zeros(2, 2);

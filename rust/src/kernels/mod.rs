@@ -16,6 +16,12 @@
 //!   and the row-blocked `std::thread` fan-out behind the kernels' `_ex`
 //!   entry points — the native analogue of the OpenMP `parallel for` the
 //!   paper synthesizes for CPU targets (§IV-C).
+//! - [`specialized`] — feature-width-monomorphized bodies for the hot
+//!   kernels (F ∈ 16/32/64/128), bitwise-identical to the generic loops.
+//! - [`dispatch`] — the runtime variant selector + autotuner
+//!   (`morphling tune`) and persisted tuning manifest that generalize the
+//!   sparsity engine's gamma crossover into input-statistics dispatch
+//!   (paper §IV-B's execution engine).
 //!
 //! Threading invariants (pinned by tests/threads.rs):
 //! - every parallel kernel partitions its **output rows** into contiguous
@@ -28,6 +34,11 @@
 //!   serial code path, preserving the seed behavior exactly; outputs below
 //!   [`parallel::PAR_MIN_ELEMS`] skip the spawn even at higher thread
 //!   counts (spawn/join would dwarf the work).
+//!
+//! The kernel-variant contract (`_ex` semantics, row ownership, variant
+//! registration, manifest schema) is documented in `docs/KERNELS.md`.
+
+#![deny(missing_docs)]
 
 pub mod parallel;
 pub mod spmm;
@@ -35,6 +46,8 @@ pub mod gemm;
 pub mod sparse_feat;
 pub mod activations;
 pub mod update;
+pub mod specialized;
+pub mod dispatch;
 
 /// Feature tile width, the paper's compile-time `T = 32` (fp32): 128 bytes,
 /// two AVX-512 vectors, resolved at compile time so the reduction loop fully

@@ -23,6 +23,7 @@
 //! [`std::thread::scope`] workers. The process-wide default comes from the
 //! `MORPHLING_THREADS` environment variable (read once, cached).
 
+use super::dispatch::VariantChoice;
 use std::ops::Range;
 use std::sync::OnceLock;
 
@@ -43,18 +44,26 @@ fn env_threads() -> usize {
 pub struct ExecPolicy {
     /// Worker count for row-blocked kernels; `1` = the serial code path.
     pub threads: usize,
+    /// Kernel-variant preference the dispatcher honors before consulting
+    /// its manifest/heuristic (see [`super::dispatch`]). `Auto` everywhere
+    /// except tests, benches, and explicit `--kernels` overrides.
+    pub variant: VariantChoice,
 }
 
 impl ExecPolicy {
     /// Single-threaded execution (the seed behavior).
     pub fn serial() -> ExecPolicy {
-        ExecPolicy { threads: 1 }
+        ExecPolicy {
+            threads: 1,
+            variant: VariantChoice::Auto,
+        }
     }
 
     /// Explicit worker count (clamped to at least 1).
     pub fn with_threads(threads: usize) -> ExecPolicy {
         ExecPolicy {
             threads: threads.max(1),
+            variant: VariantChoice::Auto,
         }
     }
 
@@ -62,7 +71,14 @@ impl ExecPolicy {
     pub fn from_env() -> ExecPolicy {
         ExecPolicy {
             threads: env_threads(),
+            variant: VariantChoice::Auto,
         }
+    }
+
+    /// This policy with a different kernel-variant preference.
+    pub fn with_variant(mut self, variant: VariantChoice) -> ExecPolicy {
+        self.variant = variant;
+        self
     }
 
     /// True when the kernel should take the serial code path.

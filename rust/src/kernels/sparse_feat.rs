@@ -18,7 +18,9 @@
 //! its output rows exclusively and results stay bitwise-identical to the
 //! serial kernel.
 
+use super::dispatch::{self, InputStats, KernelVariant, Op};
 use super::parallel::{par_row_blocks, partition_rows_balanced, ExecPolicy};
+use super::specialized;
 use crate::tensor::{CscMatrix, CsrMatrix, Matrix};
 
 /// Serial body of the CSR forward over one block of sparse rows.
@@ -50,14 +52,18 @@ pub fn spmm_csr_dense(x: &CsrMatrix, w: &Matrix, y: &mut Matrix) {
 pub fn spmm_csr_dense_ex(x: &CsrMatrix, w: &Matrix, y: &mut Matrix, pol: ExecPolicy) {
     assert_eq!(x.cols, w.rows, "inner dim");
     assert_eq!((y.rows, y.cols), (x.rows, w.cols), "out shape");
+    let stats = InputStats::new(x.rows, x.vals.len(), w.cols);
+    let body: specialized::CsrBody =
+        match dispatch::global().resolve(Op::CsrDense, stats, pol.variant, pol.threads) {
+            KernelVariant::Specialized => specialized::csr_body(w.cols).unwrap_or(csr_dense_rows),
+            KernelVariant::Generic => csr_dense_rows,
+        };
     if pol.is_serial() {
-        csr_dense_rows(x, w, 0..x.rows, &mut y.data);
+        body(x, w, 0..x.rows, &mut y.data);
         return;
     }
     let blocks = partition_rows_balanced(&x.row_ptr, pol.threads);
-    par_row_blocks(&blocks, w.cols, &mut y.data, |rows, out| {
-        csr_dense_rows(x, w, rows, out)
-    });
+    par_row_blocks(&blocks, w.cols, &mut y.data, |rows, out| body(x, w, rows, out));
 }
 
 /// Serial body of the CSC backward over one block of feature columns.
@@ -91,14 +97,20 @@ pub fn spmm_csc_t_dense(x: &CscMatrix, g: &Matrix, dw: &mut Matrix) {
 pub fn spmm_csc_t_dense_ex(x: &CscMatrix, g: &Matrix, dw: &mut Matrix, pol: ExecPolicy) {
     assert_eq!(x.rows, g.rows, "outer dim");
     assert_eq!((dw.rows, dw.cols), (x.cols, g.cols), "out shape");
+    // Stats key on the streamed node dimension (x.rows = g.rows), matching
+    // the tuner's bucket convention, not the f×h output.
+    let stats = InputStats::new(x.rows, x.vals.len(), g.cols);
+    let body: specialized::CscBody =
+        match dispatch::global().resolve(Op::CscTDense, stats, pol.variant, pol.threads) {
+            KernelVariant::Specialized => specialized::csc_body(g.cols).unwrap_or(csc_t_dense_cols),
+            KernelVariant::Generic => csc_t_dense_cols,
+        };
     if pol.is_serial() {
-        csc_t_dense_cols(x, g, 0..x.cols, &mut dw.data);
+        body(x, g, 0..x.cols, &mut dw.data);
         return;
     }
     let blocks = partition_rows_balanced(&x.col_ptr, pol.threads);
-    par_row_blocks(&blocks, g.cols, &mut dw.data, |cols, out| {
-        csc_t_dense_cols(x, g, cols, out)
-    });
+    par_row_blocks(&blocks, g.cols, &mut dw.data, |cols, out| body(x, g, cols, out));
 }
 
 #[cfg(test)]

@@ -1,0 +1,440 @@
+//! Feature-width-specialized kernel bodies — the paper's backend-specialized
+//! kernel *instantiation* (§IV-B-c), applied FeatGraph-style: a small
+//! library of monomorphized inner loops behind a runtime dispatcher.
+//!
+//! Each hot kernel's serial body is monomorphized over the feature width
+//! for the widths the training loop actually hits ([`WIDTHS`] =
+//! 16/32/64/128): rows are viewed as `[f32; F]` fixed-size arrays
+//! (`try_into` per row), so the compiler sees the trip count at compile
+//! time, drops every bounds check, keeps the accumulator in registers, and
+//! fully unrolls the reduction into the packed-FMA stream the generic body
+//! only reaches through the autovectorizer's runtime-width loop.
+//!
+//! **Bitwise contract** (pinned by `tests/specialized.rs`): every
+//! specialized body performs *exactly* the same IEEE-754 operation sequence
+//! per output element as its generic counterpart — same neighbor/k
+//! ascending accumulation order, same single-accumulator dot products, same
+//! strict `>` max comparisons — so specialized and generic results are
+//! bit-identical, at any thread count. The dispatcher
+//! ([`super::dispatch`]) may therefore switch variants freely without
+//! perturbing training numerics.
+//!
+//! These are *bodies*, not entry points: the `_ex` wrappers in
+//! [`super::spmm`], [`super::gemm`], and [`super::sparse_feat`] resolve a
+//! body through [`super::dispatch::Dispatcher::resolve`] and run it under
+//! the usual row-blocked fan-out (each body computes one block of output
+//! rows, exactly like the generic serial bodies). A new width registers by
+//! extending [`WIDTHS`] and the `match` in each `*_body` lookup — see
+//! `docs/KERNELS.md` for the walkthrough.
+
+use super::spmm::prefetch_row;
+use super::PREFETCH_DIST;
+use crate::graph::Graph;
+use crate::tensor::{CscMatrix, CsrMatrix, Matrix};
+use std::ops::Range;
+
+/// Feature widths with monomorphized bodies. The paper-default hidden
+/// width is 32 and the synthetic datasets use 16–128-wide features, so
+/// these four instantiations cover every hot shape; other widths fall back
+/// to the generic loops.
+pub const WIDTHS: [usize; 4] = [16, 32, 64, 128];
+
+/// Whether `width` has monomorphized bodies (i.e. is in [`WIDTHS`]).
+pub fn has_width(width: usize) -> bool {
+    WIDTHS.contains(&width)
+}
+
+/// Serial SpMM-family body over one block of target rows: `(graph, x,
+/// rows, out)` where `out` is the block's slice of the output.
+pub type SpmmBody = fn(&Graph, &Matrix, Range<usize>, &mut [f32]);
+
+/// Serial max-aggregation body: like [`SpmmBody`] plus the block's argmax
+/// slice.
+pub type SpmmMaxBody = fn(&Graph, &Matrix, Range<usize>, &mut [f32], &mut [u32]);
+
+/// Serial `C = A·B` body over one block of C/A rows; the trailing `usize`
+/// is the k-panel height (ignored by specialized bodies, which keep the
+/// whole accumulator row in registers).
+pub type GemmBody = fn(&Matrix, &Matrix, Range<usize>, &mut [f32], usize);
+
+/// Serial `C = Aᵀ·B` body over one block of C rows (= columns of A).
+pub type GemmAtBBody = fn(&Matrix, &Matrix, Range<usize>, &mut [f32]);
+
+/// Serial `C (+)= A·Bᵀ` body over one block of C/A rows; the trailing
+/// `bool` selects accumulate (`+=`) vs overwrite (`=`).
+pub type GemmABtBody = fn(&Matrix, &Matrix, Range<usize>, &mut [f32], bool);
+
+/// Serial sparse-feature forward body (`Y = X_csr · W`) over one block of
+/// sparse rows.
+pub type CsrBody = fn(&CsrMatrix, &Matrix, Range<usize>, &mut [f32]);
+
+/// Serial sparse-feature backward body (`dW = X_cscᵀ · G`) over one block
+/// of feature columns.
+pub type CscBody = fn(&CscMatrix, &Matrix, Range<usize>, &mut [f32]);
+
+/// Tiled-SpMM body monomorphized for `F = x.cols`: register-width inner
+/// FMA sweep plus the same degree-guarded software prefetch as the generic
+/// kernel. Accumulation order per output element is neighbor-ascending —
+/// identical to the generic body.
+fn spmm_rows_w<const F: usize>(g: &Graph, x: &Matrix, rows: Range<usize>, out: &mut [f32]) {
+    debug_assert_eq!(x.cols, F);
+    out.iter_mut().for_each(|v| *v = 0.0);
+    let base = rows.start;
+    for u in rows {
+        let start = g.row_ptr[u] as usize;
+        let end = g.row_ptr[u + 1] as usize;
+        let deg = end - start;
+        let yo = (u - base) * F;
+        let yrow: &mut [f32; F] = (&mut out[yo..yo + F]).try_into().unwrap();
+        let use_prefetch = deg > PREFETCH_DIST;
+        for ei in start..end {
+            if use_prefetch && ei + PREFETCH_DIST < end {
+                prefetch_row(x, g.col_idx[ei + PREFETCH_DIST] as usize);
+            }
+            let v = g.col_idx[ei] as usize;
+            let w = g.weights[ei];
+            let xo = v * F;
+            let xrow: &[f32; F] = x.data[xo..xo + F].try_into().unwrap();
+            for k in 0..F {
+                yrow[k] += w * xrow[k];
+            }
+        }
+    }
+}
+
+/// Naive-SpMM body monomorphized for `F` (no prefetch — it is the un-tiled
+/// ablation baseline); same accumulation order as the generic naive body.
+fn spmm_naive_rows_w<const F: usize>(g: &Graph, x: &Matrix, rows: Range<usize>, out: &mut [f32]) {
+    debug_assert_eq!(x.cols, F);
+    out.iter_mut().for_each(|v| *v = 0.0);
+    let base = rows.start;
+    for u in rows {
+        let yo = (u - base) * F;
+        let yrow: &mut [f32; F] = (&mut out[yo..yo + F]).try_into().unwrap();
+        for ei in g.row_ptr[u] as usize..g.row_ptr[u + 1] as usize {
+            let v = g.col_idx[ei] as usize;
+            let w = g.weights[ei];
+            let xo = v * F;
+            let xrow: &[f32; F] = x.data[xo..xo + F].try_into().unwrap();
+            for k in 0..F {
+                yrow[k] += w * xrow[k];
+            }
+        }
+    }
+}
+
+/// Max-aggregation body monomorphized for `F`: same strict-`>` elementwise
+/// comparisons and first-neighbor initialization as the generic body, so
+/// both values and argmax provenance are bit-identical.
+fn spmm_max_rows_w<const F: usize>(
+    g: &Graph,
+    x: &Matrix,
+    rows: Range<usize>,
+    out: &mut [f32],
+    am: &mut [u32],
+) {
+    debug_assert_eq!(x.cols, F);
+    let base = rows.start;
+    for u in rows {
+        let start = g.row_ptr[u] as usize;
+        let end = g.row_ptr[u + 1] as usize;
+        let yo = (u - base) * F;
+        let yrow: &mut [f32; F] = (&mut out[yo..yo + F]).try_into().unwrap();
+        let arow: &mut [u32; F] = (&mut am[yo..yo + F]).try_into().unwrap();
+        if start == end {
+            *yrow = [0.0; F];
+            *arow = [u32::MAX; F];
+            continue;
+        }
+        let v0 = g.col_idx[start] as usize;
+        let xo0 = v0 * F;
+        yrow.copy_from_slice(&x.data[xo0..xo0 + F]);
+        *arow = [v0 as u32; F];
+        for ei in start + 1..end {
+            let v = g.col_idx[ei] as usize;
+            let xo = v * F;
+            let xrow: &[f32; F] = x.data[xo..xo + F].try_into().unwrap();
+            for k in 0..F {
+                if xrow[k] > yrow[k] {
+                    yrow[k] = xrow[k];
+                    arow[k] = v as u32;
+                }
+            }
+        }
+    }
+}
+
+/// `C = A·B` body monomorphized for `N = b.cols`: the output row lives in
+/// a `[f32; N]` register accumulator across the whole k sweep (the
+/// classic register-tiled GEMM inner loop). Per output element the adds
+/// happen in the same ascending-k order as the generic k-blocked body, so
+/// results are bit-identical at any k-panel height — `_kblock` is ignored.
+fn gemm_rows_w<const N: usize>(
+    a: &Matrix,
+    b: &Matrix,
+    rows: Range<usize>,
+    out: &mut [f32],
+    _kblock: usize,
+) {
+    debug_assert_eq!(b.cols, N);
+    let k = a.cols;
+    let base = rows.start;
+    for i in rows {
+        let arow = &a.data[i * k..(i + 1) * k];
+        let mut acc = [0.0f32; N];
+        for (kk, &av) in arow.iter().enumerate() {
+            let bo = kk * N;
+            let brow: &[f32; N] = b.data[bo..bo + N].try_into().unwrap();
+            for j in 0..N {
+                acc[j] += av * brow[j];
+            }
+        }
+        let co = (i - base) * N;
+        out[co..co + N].copy_from_slice(&acc);
+    }
+}
+
+/// `C = Aᵀ·B` body monomorphized for `N = b.cols`; i-ascending rank-1
+/// accumulation, same order as the generic body.
+fn gemm_at_b_cols_w<const N: usize>(a: &Matrix, b: &Matrix, ks: Range<usize>, out: &mut [f32]) {
+    debug_assert_eq!(b.cols, N);
+    let (m, k) = (a.rows, a.cols);
+    out.iter_mut().for_each(|v| *v = 0.0);
+    let base = ks.start;
+    for i in 0..m {
+        let arow = &a.data[i * k..(i + 1) * k];
+        let bo = i * N;
+        let brow: &[f32; N] = b.data[bo..bo + N].try_into().unwrap();
+        for kk in ks.clone() {
+            let av = arow[kk];
+            let co = (kk - base) * N;
+            let crow: &mut [f32; N] = (&mut out[co..co + N]).try_into().unwrap();
+            for j in 0..N {
+                crow[j] += av * brow[j];
+            }
+        }
+    }
+}
+
+/// `C (+)= A·Bᵀ` body monomorphized for `K = a.cols`: fully-unrolled
+/// fixed-length dot product per output element, kept as a *single*
+/// accumulator in ascending-k order (multiple partial accumulators would
+/// re-associate the sum and break the bitwise contract).
+fn gemm_a_bt_rows_w<const K: usize>(
+    a: &Matrix,
+    b: &Matrix,
+    rows: Range<usize>,
+    out: &mut [f32],
+    accumulate: bool,
+) {
+    debug_assert_eq!(a.cols, K);
+    debug_assert_eq!(b.cols, K);
+    let n = b.rows;
+    let base = rows.start;
+    for i in rows {
+        let ao = i * K;
+        let arow: &[f32; K] = a.data[ao..ao + K].try_into().unwrap();
+        let crow = &mut out[(i - base) * n..(i - base + 1) * n];
+        for j in 0..n {
+            let bo = j * K;
+            let brow: &[f32; K] = b.data[bo..bo + K].try_into().unwrap();
+            let mut acc = 0.0f32;
+            for kk in 0..K {
+                acc += arow[kk] * brow[kk];
+            }
+            if accumulate {
+                crow[j] += acc;
+            } else {
+                crow[j] = acc;
+            }
+        }
+    }
+}
+
+/// Sparse-feature forward body monomorphized for `H = w.cols`: fixed-width
+/// row AXPYs in nonzero order, same as the generic body.
+fn csr_dense_rows_w<const H: usize>(
+    x: &CsrMatrix,
+    w: &Matrix,
+    rows: Range<usize>,
+    out: &mut [f32],
+) {
+    debug_assert_eq!(w.cols, H);
+    out.iter_mut().for_each(|v| *v = 0.0);
+    let base = rows.start;
+    for r in rows {
+        let yo = (r - base) * H;
+        let yrow: &mut [f32; H] = (&mut out[yo..yo + H]).try_into().unwrap();
+        for e in x.row_ptr[r] as usize..x.row_ptr[r + 1] as usize {
+            let c = x.col_idx[e] as usize;
+            let v = x.vals[e];
+            let wo = c * H;
+            let wrow: &[f32; H] = w.data[wo..wo + H].try_into().unwrap();
+            for j in 0..H {
+                yrow[j] += v * wrow[j];
+            }
+        }
+    }
+}
+
+/// Sparse-feature backward body monomorphized for `H = g.cols`; nonzero
+/// order per output row is unchanged from the generic body.
+fn csc_t_dense_cols_w<const H: usize>(
+    x: &CscMatrix,
+    g: &Matrix,
+    cols: Range<usize>,
+    out: &mut [f32],
+) {
+    debug_assert_eq!(g.cols, H);
+    out.iter_mut().for_each(|v| *v = 0.0);
+    let base = cols.start;
+    for c in cols {
+        let yo = (c - base) * H;
+        let dwrow: &mut [f32; H] = (&mut out[yo..yo + H]).try_into().unwrap();
+        for e in x.col_ptr[c] as usize..x.col_ptr[c + 1] as usize {
+            let r = x.row_idx[e] as usize;
+            let v = x.vals[e];
+            let go = r * H;
+            let grow: &[f32; H] = g.data[go..go + H].try_into().unwrap();
+            for j in 0..H {
+                dwrow[j] += v * grow[j];
+            }
+        }
+    }
+}
+
+/// Monomorphized tiled-SpMM body for `width`, if one exists.
+pub fn spmm_body(width: usize) -> Option<SpmmBody> {
+    match width {
+        16 => Some(spmm_rows_w::<16>),
+        32 => Some(spmm_rows_w::<32>),
+        64 => Some(spmm_rows_w::<64>),
+        128 => Some(spmm_rows_w::<128>),
+        _ => None,
+    }
+}
+
+/// Monomorphized naive-SpMM body for `width`, if one exists.
+pub fn spmm_naive_body(width: usize) -> Option<SpmmBody> {
+    match width {
+        16 => Some(spmm_naive_rows_w::<16>),
+        32 => Some(spmm_naive_rows_w::<32>),
+        64 => Some(spmm_naive_rows_w::<64>),
+        128 => Some(spmm_naive_rows_w::<128>),
+        _ => None,
+    }
+}
+
+/// Monomorphized max-aggregation body for `width`, if one exists.
+pub fn spmm_max_body(width: usize) -> Option<SpmmMaxBody> {
+    match width {
+        16 => Some(spmm_max_rows_w::<16>),
+        32 => Some(spmm_max_rows_w::<32>),
+        64 => Some(spmm_max_rows_w::<64>),
+        128 => Some(spmm_max_rows_w::<128>),
+        _ => None,
+    }
+}
+
+/// Monomorphized `C = A·B` body for output width `b.cols`, if one exists.
+pub fn gemm_body(width: usize) -> Option<GemmBody> {
+    match width {
+        16 => Some(gemm_rows_w::<16>),
+        32 => Some(gemm_rows_w::<32>),
+        64 => Some(gemm_rows_w::<64>),
+        128 => Some(gemm_rows_w::<128>),
+        _ => None,
+    }
+}
+
+/// Monomorphized `C = Aᵀ·B` body for output width `b.cols`, if one exists.
+pub fn gemm_at_b_body(width: usize) -> Option<GemmAtBBody> {
+    match width {
+        16 => Some(gemm_at_b_cols_w::<16>),
+        32 => Some(gemm_at_b_cols_w::<32>),
+        64 => Some(gemm_at_b_cols_w::<64>),
+        128 => Some(gemm_at_b_cols_w::<128>),
+        _ => None,
+    }
+}
+
+/// Monomorphized `C (+)= A·Bᵀ` body for inner width `a.cols`, if one
+/// exists.
+pub fn gemm_a_bt_body(width: usize) -> Option<GemmABtBody> {
+    match width {
+        16 => Some(gemm_a_bt_rows_w::<16>),
+        32 => Some(gemm_a_bt_rows_w::<32>),
+        64 => Some(gemm_a_bt_rows_w::<64>),
+        128 => Some(gemm_a_bt_rows_w::<128>),
+        _ => None,
+    }
+}
+
+/// Monomorphized sparse-feature forward body for `w.cols`, if one exists.
+pub fn csr_body(width: usize) -> Option<CsrBody> {
+    match width {
+        16 => Some(csr_dense_rows_w::<16>),
+        32 => Some(csr_dense_rows_w::<32>),
+        64 => Some(csr_dense_rows_w::<64>),
+        128 => Some(csr_dense_rows_w::<128>),
+        _ => None,
+    }
+}
+
+/// Monomorphized sparse-feature backward body for `g.cols`, if one exists.
+pub fn csc_body(width: usize) -> Option<CscBody> {
+    match width {
+        16 => Some(csc_t_dense_cols_w::<16>),
+        32 => Some(csc_t_dense_cols_w::<32>),
+        64 => Some(csc_t_dense_cols_w::<64>),
+        128 => Some(csc_t_dense_cols_w::<128>),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::random_matrix;
+    use crate::util::Rng;
+
+    #[test]
+    fn width_lookup_covers_exactly_the_specialized_set() {
+        for w in WIDTHS {
+            assert!(has_width(w));
+            assert!(spmm_body(w).is_some(), "width {w}");
+            assert!(spmm_naive_body(w).is_some(), "width {w}");
+            assert!(spmm_max_body(w).is_some(), "width {w}");
+            assert!(gemm_body(w).is_some(), "width {w}");
+            assert!(gemm_at_b_body(w).is_some(), "width {w}");
+            assert!(gemm_a_bt_body(w).is_some(), "width {w}");
+            assert!(csr_body(w).is_some(), "width {w}");
+            assert!(csc_body(w).is_some(), "width {w}");
+        }
+        for w in [0usize, 1, 8, 31, 100, 256] {
+            assert!(!has_width(w));
+            assert!(spmm_body(w).is_none(), "width {w}");
+            assert!(gemm_body(w).is_none(), "width {w}");
+        }
+    }
+
+    #[test]
+    fn specialized_gemm_body_bitwise_matches_entry_point() {
+        // Direct body call vs the public generic entry (serial): the
+        // register-accumulator body must reproduce the generic bits.
+        use crate::kernels::dispatch::VariantChoice;
+        use crate::kernels::gemm::gemm_ex;
+        use crate::kernels::parallel::ExecPolicy;
+        let mut rng = Rng::new(11);
+        let (m, k, n) = (23usize, 37usize, 32usize);
+        let a = Matrix::from_vec(m, k, random_matrix(&mut rng, m, k));
+        let b = Matrix::from_vec(k, n, random_matrix(&mut rng, k, n));
+        let mut c = Matrix::zeros(m, n);
+        let pol = ExecPolicy::serial().with_variant(VariantChoice::ForceGeneric);
+        gemm_ex(&a, &b, &mut c, pol);
+        let body = gemm_body(n).unwrap();
+        let mut out = vec![0.0f32; m * n];
+        body(&a, &b, 0..m, &mut out, 64);
+        assert_eq!(c.data, out);
+    }
+}

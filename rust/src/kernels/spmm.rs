@@ -6,8 +6,8 @@
 //!
 //! 1. the outer loop streams target nodes (rows of `A`);
 //! 2. per neighbor, the feature row is consumed in compile-time tiles of
-//!    [`TILE`] = 32 f32 (128 B — two 512-bit vectors), so the inner
-//!    reduction fully unrolls into packed FMAs;
+//!    [`TILE`](super::TILE) = 32 f32 (128 B — two 512-bit vectors), so the
+//!    inner reduction fully unrolls into packed FMAs;
 //! 3. a software prefetch of neighbor `i + D`'s feature row hides the
 //!    irregular DRAM latency ([`PREFETCH_DIST`] = 8), degree-guarded to
 //!    avoid cache pollution on low-degree nodes.
@@ -28,14 +28,23 @@
 //!   original CSR and scatters into `Y[v]` (the paper's `atomicAdd`
 //!   strategy). Scatter targets are not row-owned, so this variant stays
 //!   serial on the CPU backend (plain `+=` in place of the atomics).
+//!
+//! Every `_ex` entry here additionally resolves a kernel *variant* through
+//! [`super::dispatch`]: for feature widths in
+//! [`super::specialized::WIDTHS`] the dispatcher may substitute a
+//! monomorphized fixed-width body (bitwise-identical, just faster). The
+//! body is resolved once per call and shared by the serial and fanned-out
+//! paths, so a decision can never differ between row blocks.
 
+use super::dispatch::{self, InputStats, KernelVariant, Op};
 use super::parallel::{par_row_blocks, partition_rows_balanced, ExecPolicy, PAR_MIN_ELEMS};
-use super::PREFETCH_DIST;
+use super::{specialized, PREFETCH_DIST};
 use crate::graph::Graph;
 use crate::tensor::Matrix;
 
+/// Software-prefetch one feature row (shared with the specialized bodies).
 #[inline(always)]
-fn prefetch_row(x: &Matrix, row: usize) {
+pub(crate) fn prefetch_row(x: &Matrix, row: usize) {
     #[cfg(target_arch = "x86_64")]
     unsafe {
         let off = row * x.cols;
@@ -122,14 +131,20 @@ pub fn spmm_block_ex(g: &Graph, x: &Matrix, y: &mut Matrix, pol: ExecPolicy) {
 fn spmm_tiled_dispatch(g: &Graph, x: &Matrix, y: &mut Matrix, pol: ExecPolicy) {
     assert_eq!(y.rows, g.num_nodes);
     assert_eq!(y.cols, x.cols);
+    let stats = InputStats::new(g.num_nodes, g.col_idx.len(), x.cols);
+    let body: specialized::SpmmBody =
+        match dispatch::global().resolve(Op::SpmmTiled, stats, pol.variant, pol.threads) {
+            KernelVariant::Specialized => {
+                specialized::spmm_body(x.cols).unwrap_or(spmm_tiled_rows)
+            }
+            KernelVariant::Generic => spmm_tiled_rows,
+        };
     if pol.is_serial() {
-        spmm_tiled_rows(g, x, 0..g.num_nodes, &mut y.data);
+        body(g, x, 0..g.num_nodes, &mut y.data);
         return;
     }
     let blocks = partition_rows_balanced(&g.row_ptr, pol.threads);
-    par_row_blocks(&blocks, x.cols, &mut y.data, |rows, out| {
-        spmm_tiled_rows(g, x, rows, out)
-    });
+    par_row_blocks(&blocks, x.cols, &mut y.data, |rows, out| body(g, x, rows, out));
 }
 
 /// Serial body of the naive kernel over one block of target rows.
@@ -160,14 +175,20 @@ pub fn spmm_naive(g: &Graph, x: &Matrix, y: &mut Matrix) {
 /// [`spmm_naive`] with an explicit execution policy (row-blocked fan-out).
 pub fn spmm_naive_ex(g: &Graph, x: &Matrix, y: &mut Matrix, pol: ExecPolicy) {
     assert_eq!(g.num_nodes, x.rows);
+    let stats = InputStats::new(g.num_nodes, g.col_idx.len(), x.cols);
+    let body: specialized::SpmmBody =
+        match dispatch::global().resolve(Op::SpmmNaive, stats, pol.variant, pol.threads) {
+            KernelVariant::Specialized => {
+                specialized::spmm_naive_body(x.cols).unwrap_or(spmm_naive_rows)
+            }
+            KernelVariant::Generic => spmm_naive_rows,
+        };
     if pol.is_serial() {
-        spmm_naive_rows(g, x, 0..g.num_nodes, &mut y.data);
+        body(g, x, 0..g.num_nodes, &mut y.data);
         return;
     }
     let blocks = partition_rows_balanced(&g.row_ptr, pol.threads);
-    par_row_blocks(&blocks, x.cols, &mut y.data, |rows, out| {
-        spmm_naive_rows(g, x, rows, out)
-    });
+    par_row_blocks(&blocks, x.cols, &mut y.data, |rows, out| body(g, x, rows, out));
 }
 
 /// `Y += Aᵀ·X` streamed over the **original** CSR — the paper's CUDA
@@ -269,14 +290,22 @@ fn spmm_max_dispatch(g: &Graph, x: &Matrix, y: &mut Matrix, argmax: &mut [u32], 
     assert_eq!(y.rows, g.num_nodes);
     assert_eq!(y.cols, x.cols);
     assert_eq!(argmax.len(), y.rows * y.cols);
+    let stats = InputStats::new(g.num_nodes, g.col_idx.len(), x.cols);
+    let body: specialized::SpmmMaxBody =
+        match dispatch::global().resolve(Op::SpmmMax, stats, pol.variant, pol.threads) {
+            KernelVariant::Specialized => {
+                specialized::spmm_max_body(x.cols).unwrap_or(spmm_max_rows)
+            }
+            KernelVariant::Generic => spmm_max_rows,
+        };
     if pol.is_serial() || y.data.len() < PAR_MIN_ELEMS {
-        spmm_max_rows(g, x, 0..g.num_nodes, &mut y.data, argmax);
+        body(g, x, 0..g.num_nodes, &mut y.data, argmax);
         return;
     }
     let f = x.cols;
     let blocks = partition_rows_balanced(&g.row_ptr, pol.threads);
     if blocks.len() <= 1 {
-        spmm_max_rows(g, x, 0..g.num_nodes, &mut y.data, argmax);
+        body(g, x, 0..g.num_nodes, &mut y.data, argmax);
         return;
     }
     let mut yslices = Vec::with_capacity(blocks.len());
@@ -296,9 +325,9 @@ fn spmm_max_dispatch(g: &Graph, x: &Matrix, y: &mut Matrix, argmax: &mut [u32], 
         let mut iter = blocks.iter().cloned().zip(yslices.into_iter().zip(aslices));
         let (b0, (y0, a0)) = iter.next().unwrap();
         for (b, (yh, ah)) in iter {
-            s.spawn(move || spmm_max_rows(g, x, b, yh, ah));
+            s.spawn(move || body(g, x, b, yh, ah));
         }
-        spmm_max_rows(g, x, b0, y0, a0);
+        body(g, x, b0, y0, a0);
     });
 }
 

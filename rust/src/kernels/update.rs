@@ -5,9 +5,13 @@
 /// Hyper-parameters for Adam/AdamW.
 #[derive(Clone, Copy, Debug)]
 pub struct AdamParams {
+    /// Learning rate.
     pub lr: f32,
+    /// First-moment (momentum) decay.
     pub beta1: f32,
+    /// Second-moment (variance) decay.
     pub beta2: f32,
+    /// Denominator fuzz guarding against division by zero.
     pub eps: f32,
     /// Decoupled weight decay (AdamW); 0 for plain Adam.
     pub weight_decay: f32,

@@ -7,6 +7,7 @@
 //! - `partition`  — run the hierarchical partitioner and report quality
 //! - `dist`       — simulated multi-rank distributed training
 //! - `calibrate`  — measure the machine's efficiency ratio γ (Eq. 1)
+//! - `tune`       — benchmark kernel variants and write a tuning manifest
 
 // Same style-lint baseline as lib.rs (see the rationale there).
 #![allow(clippy::needless_range_loop, clippy::too_many_arguments)]
@@ -15,6 +16,7 @@ use anyhow::{anyhow, Result};
 use morphling::coordinator::{run, run_dist, DistSpec, TrainSpec};
 use morphling::engine::sparsity::calibrate_gamma_ex;
 use morphling::engine::{EngineKind, RunMode};
+use morphling::kernels::dispatch::{tune, VariantChoice};
 use morphling::kernels::parallel::ExecPolicy;
 use morphling::graph::datasets;
 use morphling::model::Arch;
@@ -110,6 +112,14 @@ fn cmd_train(args: &Args) -> Result<()> {
         tau: args.get("tau").and_then(|v| v.parse().ok()),
         calibrate: args.flag("calibrate"),
         threads: args.get("threads").and_then(|v| v.parse().ok()),
+        variant: choice(
+            "kernels",
+            args.get_or("kernels", "auto"),
+            VariantChoice::parse,
+            &VariantChoice::VALID,
+        )
+        .map_err(anyhow::Error::msg)?,
+        tune_manifest: args.get("tune-manifest").map(std::path::PathBuf::from),
         seed: args.u64_or("seed", 42),
         artifacts_dir: args.get_or("artifacts", "artifacts").into(),
         log: !args.flag("quiet"),
@@ -243,6 +253,42 @@ fn cmd_dist(args: &Args) -> Result<()> {
     Ok(())
 }
 
+fn cmd_tune(args: &Args) -> Result<()> {
+    let defaults = tune::TuneConfig::default();
+    let cfg = tune::TuneConfig {
+        widths: match args.get("widths") {
+            Some(raw) => usize_list("widths", raw).map_err(anyhow::Error::msg)?,
+            None => defaults.widths,
+        },
+        threads: match args.get("threads") {
+            Some(raw) => usize_list("threads", raw).map_err(anyhow::Error::msg)?,
+            None => defaults.threads,
+        },
+        seed: args.u64_or("seed", defaults.seed),
+        quick: args.flag("quick"),
+    };
+    if cfg.threads.iter().any(|&t| t == 0) {
+        return Err(anyhow!("--threads entries must be at least 1"));
+    }
+    let out = args.get_or("out", "artifacts/tune.json").to_string();
+    let manifest = tune::run(&cfg, |msg| println!("{msg}"));
+    if let Some(parent) = std::path::Path::new(&out).parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    manifest
+        .save(std::path::Path::new(&out))
+        .map_err(anyhow::Error::msg)?;
+    println!(
+        "wrote {} tuned entries and {} gamma measurement(s) to {out}",
+        manifest.entries.len(),
+        manifest.gammas.len()
+    );
+    println!(
+        "apply with `morphling train --tune-manifest {out}` or MORPHLING_TUNE_MANIFEST={out}"
+    );
+    Ok(())
+}
+
 fn main() -> Result<()> {
     let args = Args::from_env();
     match args.positional.first().map(String::as_str) {
@@ -254,6 +300,7 @@ fn main() -> Result<()> {
         Some("train") => cmd_train(&args),
         Some("partition") => cmd_partition(&args),
         Some("dist") => cmd_dist(&args),
+        Some("tune") => cmd_tune(&args),
         Some("calibrate") => {
             let pol = args
                 .get("threads")
@@ -271,10 +318,11 @@ fn main() -> Result<()> {
         }
         _ => {
             eprintln!(
-                "usage: morphling <info|shapes|train|partition|dist|calibrate> [--flags]\n\
+                "usage: morphling <info|shapes|train|partition|dist|calibrate|tune> [--flags]\n\
                  train:     --dataset corafull --engine native|pyg|dgl|pjrt --arch gcn|sage|sage-max|gin --epochs 100 [--threads N]\n\
                  \u{20}          --mode full|minibatch [--batch-size 512] [--fanouts 10,25] [--no-prefetch]\n\
                  \u{20}          [--cache] [--cache-staleness K]\n\
+                 \u{20}          [--kernels auto|generic|specialized] [--tune-manifest artifacts/tune.json]\n\
                  \u{20}          (minibatch: native engine; fanout 0 = full neighborhood;\n\
                  \u{20}           cache serves stale out-of-batch activations, K=0 exact)\n\
                  partition: --dataset corafull --k 4\n\
@@ -286,6 +334,11 @@ fn main() -> Result<()> {
                  \u{20}           and the modeled fabric column; sampled mode is bitwise-identical at\n\
                  \u{20}           any --world x --threads)\n\
                  calibrate: [--threads N] [--seed 7]\n\
+                 tune:      [--out artifacts/tune.json] [--widths 16,32,64,128] [--threads 1,4]\n\
+                 \u{20}          [--quick] [--seed 42]\n\
+                 \u{20}          (benchmarks generic vs specialized kernel bodies per size bucket and\n\
+                 \u{20}           writes the manifest the dispatcher reads via --tune-manifest or\n\
+                 \u{20}           MORPHLING_TUNE_MANIFEST)\n\
                  shapes:    --out artifacts/shapes.json [--datasets a,b,c]\n\
                  (kernel threads default to MORPHLING_THREADS, else 1)"
             );

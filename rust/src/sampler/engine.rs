@@ -37,6 +37,7 @@ use crate::cache::{CacheEpochStats, CacheGate, HistCache};
 use crate::engine::{Engine, Mask};
 use crate::graph::Dataset;
 use crate::kernels::activations::{relu_backward_inplace_ex, relu_inplace_ex, softmax_xent};
+use crate::kernels::dispatch::VariantChoice;
 use crate::kernels::gemm::{add_bias_ex, col_sum, gemm_a_bt_ex, gemm_at_b_ex, gemm_ex};
 use crate::kernels::parallel::ExecPolicy;
 use crate::kernels::spmm::{spmm_block_ex, spmm_max_backward, spmm_max_block_ex};
@@ -204,11 +205,26 @@ impl MiniBatchEngine {
         self
     }
 
-    /// Override the kernel + gather execution policy.
+    /// Override the kernel + gather execution policy (keeps the current
+    /// kernel-variant preference).
     pub fn set_threads(&mut self, threads: usize) {
-        let pol = ExecPolicy::with_threads(threads);
+        let pol = ExecPolicy::with_threads(threads).with_variant(self.st.policy.variant);
         self.st.policy = pol;
         self.ctx.policy = pol;
+    }
+
+    /// Builder-style kernel-variant override (see
+    /// [`crate::kernels::dispatch`]).
+    pub fn with_variant(mut self, variant: VariantChoice) -> MiniBatchEngine {
+        self.set_variant(variant);
+        self
+    }
+
+    /// Override the kernel-variant preference for both the training kernels
+    /// and the sampling/gather context.
+    pub fn set_variant(&mut self, variant: VariantChoice) {
+        self.st.policy = self.st.policy.with_variant(variant);
+        self.ctx.policy = self.ctx.policy.with_variant(variant);
     }
 
     /// Trained parameters (bit-compared by the determinism tests).

@@ -1,0 +1,330 @@
+//! The kernel-variant contract (docs/KERNELS.md), pinned end to end:
+//!
+//! 1. every width-specialized body is **bitwise-identical** to its generic
+//!    counterpart through the public `_ex` entry points, across the covered
+//!    widths, an uncovered fallback width, and serial/threaded execution;
+//! 2. full training epochs are bit-deterministic across variant choices
+//!    (generic vs specialized vs auto) for GCN / SAGE-mean / SAGE-max at
+//!    1 and 4 threads;
+//! 3. a fixed tuning manifest yields stable dispatcher decisions, and a
+//!    manifest survives a save → load round trip with identical decisions.
+
+use morphling::engine::native::NativeEngine;
+use morphling::engine::Engine;
+use morphling::graph::datasets;
+use morphling::graph::generator::{power_law_graph, GraphConfig};
+use morphling::kernels::dispatch::{
+    Dispatcher, InputStats, KernelVariant, Op, SizeBucket, TuneEntry, TuneManifest, VariantChoice,
+};
+use morphling::kernels::gemm::{gemm_a_bt_acc_ex, gemm_a_bt_ex, gemm_at_b_ex, gemm_ex};
+use morphling::kernels::parallel::ExecPolicy;
+use morphling::kernels::sparse_feat::{spmm_csc_t_dense_ex, spmm_csr_dense_ex};
+use morphling::kernels::specialized;
+use morphling::kernels::spmm::{spmm_max_ex, spmm_naive_ex, spmm_tiled_ex};
+use morphling::model::Arch;
+use morphling::tensor::{CscMatrix, CsrMatrix, Matrix};
+use morphling::util::proptest::{random_matrix, random_sparse_matrix};
+use morphling::util::Rng;
+
+/// Covered widths plus one uncovered width (100 → generic fallback even
+/// under ForceSpecialized), at serial and threaded execution.
+const WIDTHS: [usize; 5] = [16, 32, 64, 128, 100];
+const THREADS: [usize; 2] = [1, 4];
+
+fn policies(threads: usize) -> (ExecPolicy, ExecPolicy, ExecPolicy) {
+    let base = ExecPolicy::with_threads(threads);
+    (
+        base.with_variant(VariantChoice::ForceGeneric),
+        base.with_variant(VariantChoice::ForceSpecialized),
+        base.with_variant(VariantChoice::Auto),
+    )
+}
+
+/// Every SpMM-family `_ex` entry produces bit-identical values (and argmax
+/// provenance) under generic, specialized, and auto variants.
+#[test]
+fn spmm_family_bitwise_across_variants() {
+    let mut rng = Rng::new(0xA11CE);
+    let n = 400usize;
+    let g = power_law_graph(
+        &GraphConfig {
+            num_nodes: n,
+            num_edges: 3_200,
+            power_law_gamma: 2.3,
+            components: 1,
+        },
+        &mut rng,
+    );
+    for f in WIDTHS {
+        let x = Matrix::from_vec(n, f, random_matrix(&mut rng, n, f));
+        for t in THREADS {
+            let (pg, ps, pa) = policies(t);
+            let mut yg = Matrix::zeros(n, f);
+            let mut ys = Matrix::zeros(n, f);
+            let mut ya = Matrix::zeros(n, f);
+            spmm_tiled_ex(&g, &x, &mut yg, pg);
+            spmm_tiled_ex(&g, &x, &mut ys, ps);
+            spmm_tiled_ex(&g, &x, &mut ya, pa);
+            assert_eq!(yg.data, ys.data, "spmm_tiled F={f} t={t}");
+            assert_eq!(yg.data, ya.data, "spmm_tiled auto F={f} t={t}");
+
+            spmm_naive_ex(&g, &x, &mut yg, pg);
+            spmm_naive_ex(&g, &x, &mut ys, ps);
+            assert_eq!(yg.data, ys.data, "spmm_naive F={f} t={t}");
+
+            let mut ag = vec![0u32; n * f];
+            let mut as_ = vec![0u32; n * f];
+            spmm_max_ex(&g, &x, &mut yg, &mut ag, pg);
+            spmm_max_ex(&g, &x, &mut ys, &mut as_, ps);
+            assert_eq!(yg.data, ys.data, "spmm_max values F={f} t={t}");
+            assert_eq!(ag, as_, "spmm_max argmax F={f} t={t}");
+        }
+    }
+}
+
+/// The dense GEMM family is bit-identical across variants: `A·B` (output
+/// width key), `Aᵀ·B` (output width key), and `A·Bᵀ` overwrite +
+/// accumulate (inner width key).
+#[test]
+fn gemm_family_bitwise_across_variants() {
+    let mut rng = Rng::new(0xB0B);
+    let m = 150usize;
+    for f in WIDTHS {
+        let a = Matrix::from_vec(m, f, random_matrix(&mut rng, m, f));
+        let w = Matrix::from_vec(f, f, random_matrix(&mut rng, f, f));
+        let gr = Matrix::from_vec(m, f, random_matrix(&mut rng, m, f));
+        let bt = Matrix::from_vec(48, f, random_matrix(&mut rng, 48, f));
+        let seed = random_matrix(&mut rng, m, 48);
+        for t in THREADS {
+            let (pg, ps, _) = policies(t);
+            let mut cg = Matrix::zeros(m, f);
+            let mut cs = Matrix::zeros(m, f);
+            gemm_ex(&a, &w, &mut cg, pg);
+            gemm_ex(&a, &w, &mut cs, ps);
+            assert_eq!(cg.data, cs.data, "gemm F={f} t={t}");
+
+            let mut dwg = Matrix::zeros(f, f);
+            let mut dws = Matrix::zeros(f, f);
+            gemm_at_b_ex(&a, &gr, &mut dwg, pg);
+            gemm_at_b_ex(&a, &gr, &mut dws, ps);
+            assert_eq!(dwg.data, dws.data, "gemm_at_b F={f} t={t}");
+
+            let mut dg = Matrix::zeros(m, 48);
+            let mut dsp = Matrix::zeros(m, 48);
+            gemm_a_bt_ex(&a, &bt, &mut dg, pg);
+            gemm_a_bt_ex(&a, &bt, &mut dsp, ps);
+            assert_eq!(dg.data, dsp.data, "gemm_a_bt F={f} t={t}");
+
+            let mut accg = Matrix::from_vec(m, 48, seed.clone());
+            let mut accs = Matrix::from_vec(m, 48, seed.clone());
+            gemm_a_bt_acc_ex(&a, &bt, &mut accg, pg);
+            gemm_a_bt_acc_ex(&a, &bt, &mut accs, ps);
+            assert_eq!(accg.data, accs.data, "gemm_a_bt_acc F={f} t={t}");
+        }
+    }
+}
+
+/// The sparse-feature forward/backward pair is bit-identical across
+/// variants (specialization key = the dense output width).
+#[test]
+fn sparse_feat_bitwise_across_variants() {
+    let mut rng = Rng::new(0xC0DE);
+    let (n, fin) = (220usize, 180usize);
+    let xd = Matrix::from_vec(n, fin, random_sparse_matrix(&mut rng, n, fin, 0.9));
+    let csr = CsrMatrix::from_dense(&xd);
+    let csc = CscMatrix::from_dense(&xd);
+    for h in WIDTHS {
+        let w = Matrix::from_vec(fin, h, random_matrix(&mut rng, fin, h));
+        let gr = Matrix::from_vec(n, h, random_matrix(&mut rng, n, h));
+        for t in THREADS {
+            let (pg, ps, _) = policies(t);
+            let mut yg = Matrix::zeros(n, h);
+            let mut ys = Matrix::zeros(n, h);
+            spmm_csr_dense_ex(&csr, &w, &mut yg, pg);
+            spmm_csr_dense_ex(&csr, &w, &mut ys, ps);
+            assert_eq!(yg.data, ys.data, "csr_dense H={h} t={t}");
+
+            let mut dwg = Matrix::zeros(fin, h);
+            let mut dws = Matrix::zeros(fin, h);
+            spmm_csc_t_dense_ex(&csc, &gr, &mut dwg, pg);
+            spmm_csc_t_dense_ex(&csc, &gr, &mut dws, ps);
+            assert_eq!(dwg.data, dws.data, "csc_t_dense H={h} t={t}");
+        }
+    }
+}
+
+fn tiny_spec(name: &'static str, sparsity: f64) -> morphling::graph::DatasetSpec {
+    morphling::graph::DatasetSpec {
+        name,
+        real_nodes: 0,
+        real_edges: 0,
+        real_features: 0,
+        nodes: 180,
+        edges: 1100,
+        // 32 = paper-default hidden width: the whole model runs on
+        // specialized widths, so variant switching touches every layer.
+        features: 32,
+        classes: 4,
+        feat_sparsity: sparsity,
+        gamma: 2.4,
+        components: 1,
+    }
+}
+
+/// Full training epochs are bit-deterministic across variant choices for
+/// every supported architecture, serial and threaded — the acceptance
+/// criterion behind "the dispatcher never changes training numerics".
+#[test]
+fn training_bitwise_identical_across_variants() {
+    for (arch, sparsity) in [
+        (Arch::Gcn, 0.9),
+        (Arch::SageMean, 0.9),
+        (Arch::SageMax, 0.3),
+    ] {
+        let ds = datasets::load(&tiny_spec("variant-det", sparsity));
+        let mut reference = NativeEngine::paper_default(&ds, arch, 17)
+            .with_threads(1)
+            .with_variant(VariantChoice::ForceGeneric);
+        let ref_losses: Vec<f64> = (0..3).map(|_| reference.train_epoch(&ds).loss).collect();
+        for t in THREADS {
+            for choice in [
+                VariantChoice::ForceGeneric,
+                VariantChoice::ForceSpecialized,
+                VariantChoice::Auto,
+            ] {
+                let mut eng = NativeEngine::paper_default(&ds, arch, 17)
+                    .with_threads(t)
+                    .with_variant(choice);
+                for (e, &expect) in ref_losses.iter().enumerate() {
+                    let got = eng.train_epoch(&ds).loss;
+                    assert_eq!(
+                        expect.to_bits(),
+                        got.to_bits(),
+                        "{}: epoch {e} loss diverged at threads={t} kernels={}",
+                        arch.name(),
+                        choice.name()
+                    );
+                }
+                assert_eq!(
+                    reference.params.layers[0].w.data, eng.params.layers[0].w.data,
+                    "{}: weights diverged at threads={t} kernels={}",
+                    arch.name(),
+                    choice.name()
+                );
+            }
+        }
+    }
+}
+
+fn sample_manifest() -> TuneManifest {
+    let mut m = TuneManifest::new();
+    m.gammas.insert(1, 0.21);
+    m.gammas.insert(4, 0.34);
+    // A mixed set of winners so round-trip equality is decision-sensitive.
+    for (i, op) in Op::ALL.into_iter().enumerate() {
+        m.entries.push(TuneEntry {
+            op,
+            bucket: SizeBucket::Small,
+            width: 32,
+            threads: 1,
+            variant: if i % 2 == 0 {
+                KernelVariant::Specialized
+            } else {
+                KernelVariant::Generic
+            },
+            kblock: (op == Op::Gemm).then_some(128),
+            generic_secs: 1.5e-3,
+            specialized_secs: 1.2e-3,
+        });
+    }
+    m
+}
+
+/// For a fixed manifest the dispatcher's decisions are a pure function of
+/// (op, stats, choice, threads): repeated resolution never flips, measured
+/// cells follow the manifest, unmeasured cells follow the heuristic.
+#[test]
+fn dispatcher_decisions_stable_for_fixed_manifest() {
+    let manifest = sample_manifest();
+    let d = Dispatcher::with_manifest(manifest.clone());
+    let stats = InputStats::new(1_000, 8_000, 32);
+    for op in Op::ALL {
+        let expect = manifest.lookup(op, SizeBucket::Small, 32, 1).unwrap().variant;
+        for _ in 0..3 {
+            assert_eq!(
+                d.resolve(op, stats, VariantChoice::Auto, 1),
+                expect,
+                "{} decision flipped",
+                op.as_str()
+            );
+        }
+        // Unmeasured thread count → heuristic (width 32 is covered).
+        assert_eq!(
+            d.resolve(op, stats, VariantChoice::Auto, 4),
+            KernelVariant::Specialized
+        );
+    }
+    assert_eq!(d.kblock(stats, 1), 128);
+    assert_eq!(d.gamma(1), Some(0.21));
+    assert_eq!(d.gamma(2), None);
+}
+
+/// Manifest write → load round trip: the file reproduces the manifest
+/// exactly, and a dispatcher over the loaded copy makes identical decisions
+/// across the full (op × width × choice × threads) grid.
+#[test]
+fn manifest_roundtrip_preserves_decisions() {
+    let manifest = sample_manifest();
+    let path = std::env::temp_dir().join("morphling_tune_roundtrip.json");
+    manifest.save(&path).expect("save manifest");
+    let loaded = TuneManifest::load(&path).expect("load manifest");
+    std::fs::remove_file(&path).ok();
+    assert_eq!(manifest, loaded);
+
+    let d1 = Dispatcher::with_manifest(manifest);
+    let d2 = Dispatcher::with_manifest(loaded);
+    for op in Op::ALL {
+        for rows in [100usize, 5_000, 50_000] {
+            for width in [16usize, 32, 100] {
+                let stats = InputStats::new(rows, rows * 8, width);
+                for choice in [
+                    VariantChoice::Auto,
+                    VariantChoice::ForceGeneric,
+                    VariantChoice::ForceSpecialized,
+                ] {
+                    for threads in [1usize, 4] {
+                        assert_eq!(
+                            d1.resolve(op, stats, choice, threads),
+                            d2.resolve(op, stats, choice, threads),
+                            "{} rows={rows} width={width} threads={threads}",
+                            op.as_str()
+                        );
+                    }
+                }
+                assert_eq!(d1.kblock(stats, 1), d2.kblock(stats, 1));
+            }
+        }
+    }
+}
+
+/// ForceSpecialized on an uncovered width is a silent generic fallback —
+/// never a panic — end to end through an engine epoch (features = 40 and
+/// hidden = 32 mix covered and uncovered widths in one model).
+#[test]
+fn uncovered_width_falls_back_inside_training() {
+    let spec = morphling::graph::DatasetSpec {
+        features: 40,
+        ..tiny_spec("variant-fallback", 0.5)
+    };
+    let ds = datasets::load(&spec);
+    let mut gen = NativeEngine::paper_default(&ds, Arch::Gcn, 5)
+        .with_variant(VariantChoice::ForceGeneric);
+    let mut spec_eng = NativeEngine::paper_default(&ds, Arch::Gcn, 5)
+        .with_variant(VariantChoice::ForceSpecialized);
+    for _ in 0..2 {
+        let a = gen.train_epoch(&ds).loss;
+        let b = spec_eng.train_epoch(&ds).loss;
+        assert_eq!(a.to_bits(), b.to_bits());
+    }
+    assert!(specialized::has_width(32) && !specialized::has_width(40));
+}
