@@ -32,6 +32,14 @@ pub fn probe(engine: &mut dyn Engine, ds: &Dataset) -> f64 {
     t.elapsed().as_secs_f64()
 }
 
+/// Linearly interpolated latency/time percentiles (sorts `samples` in
+/// place) — a thin re-export of [`morphling::util::timer::percentiles`],
+/// which carries the unit tests (bench binaries are `harness = false`, so
+/// `#[cfg(test)]` modules here would never run under `cargo test`).
+pub fn percentiles(samples: &mut [f64], qs: &[f64]) -> Vec<f64> {
+    morphling::util::timer::percentiles(samples, qs)
+}
+
 /// Write `--json` records (pre-formatted JSON objects, one string each) as
 /// a pretty-printed array — the shared tail of every bench's `--json PATH`
 /// flag. Exits non-zero if the file can't be written, so CI catches it.

@@ -26,6 +26,9 @@ use morphling::util::table::{fmt_secs, Table};
 struct Sample {
     /// Measured wall-clock sustained epoch seconds.
     measured: f64,
+    /// p95 of the measured wall-clock epochs (same skip-first-epoch
+    /// convention as `sustained_epoch_secs`) — the tail the mean hides.
+    p95: f64,
     /// α–β modeled sustained epoch seconds.
     modeled: f64,
     /// Mean per-rank exposed (modeled) communication seconds.
@@ -55,8 +58,12 @@ fn run_cfg(
     };
     let r = train_distributed(ds, &cfg);
     let comm: f64 = r.ranks.iter().map(|s| s.exposed_comm_secs).sum();
+    let skip = usize::from(r.epoch_secs.len() > 1);
+    let mut tail = r.epoch_secs[skip..].to_vec();
+    let p95 = common::percentiles(&mut tail, &[0.95])[0];
     Sample {
         measured: r.sustained_epoch_secs(),
+        p95,
         modeled: r.sustained_modeled_secs(),
         comm: comm / world as f64,
     }
@@ -91,6 +98,7 @@ fn main() {
             let mut scale = Table::new(vec![
                 "world",
                 "measured",
+                "p95(wall)",
                 "speedup",
                 "modeled",
                 "exposed-comm",
@@ -112,13 +120,14 @@ fn main() {
                 scale.row(vec![
                     w.to_string(),
                     fmt_secs(s.measured),
+                    fmt_secs(s.p95),
                     format!("{:.2}x", base / s.measured),
                     fmt_secs(s.modeled),
                     fmt_secs(s.comm),
                 ]);
                 records.push(format!(
-                    "{{\"dataset\":\"{name}\",\"mode\":\"{mode_name}\",\"config\":\"hier+pipe\",\"world\":{w},\"epoch_secs\":{:.9},\"modeled_epoch_secs\":{:.9},\"exposed_comm_secs\":{:.9}}}",
-                    s.measured, s.modeled, s.comm
+                    "{{\"dataset\":\"{name}\",\"mode\":\"{mode_name}\",\"config\":\"hier+pipe\",\"world\":{w},\"epoch_secs\":{:.9},\"epoch_secs_p95\":{:.9},\"modeled_epoch_secs\":{:.9},\"exposed_comm_secs\":{:.9}}}",
+                    s.measured, s.p95, s.modeled, s.comm
                 ));
             }
             println!("[{name}] {mode_name} mode (hier+pipe; speedup = measured vs world {}):", worlds.first().copied().unwrap_or(1));
@@ -126,7 +135,7 @@ fn main() {
 
             // --- §V-E2 attribution ablation at the largest world ---
             let mut abl =
-                Table::new(vec!["config", "measured", "modeled", "exposed-comm"]);
+                Table::new(vec!["config", "measured", "p95(wall)", "modeled", "exposed-comm"]);
             for (cfg_name, pk, pipe) in [
                 ("hier+pipe", PartitionerKind::Hierarchical, true),
                 ("hier+block", PartitionerKind::Hierarchical, false),
@@ -137,12 +146,13 @@ fn main() {
                 abl.row(vec![
                     cfg_name.to_string(),
                     fmt_secs(s.measured),
+                    fmt_secs(s.p95),
                     fmt_secs(s.modeled),
                     fmt_secs(s.comm),
                 ]);
                 records.push(format!(
-                    "{{\"dataset\":\"{name}\",\"mode\":\"{mode_name}\",\"config\":\"{cfg_name}\",\"world\":{world_max},\"epoch_secs\":{:.9},\"modeled_epoch_secs\":{:.9},\"exposed_comm_secs\":{:.9}}}",
-                    s.measured, s.modeled, s.comm
+                    "{{\"dataset\":\"{name}\",\"mode\":\"{mode_name}\",\"config\":\"{cfg_name}\",\"world\":{world_max},\"epoch_secs\":{:.9},\"epoch_secs_p95\":{:.9},\"modeled_epoch_secs\":{:.9},\"exposed_comm_secs\":{:.9}}}",
+                    s.measured, s.p95, s.modeled, s.comm
                 ));
             }
             println!("attribution ablation (partitioner x pipeline) at world {world_max}:");

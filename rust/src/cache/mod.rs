@@ -88,6 +88,23 @@ impl HistCache {
         self.staleness
     }
 
+    /// Checked level access: every public entry point takes a `level`
+    /// index that must correspond to a hidden layer the constructor sized.
+    fn level(&self, level: usize) -> &LevelHist {
+        self.levels.get(level).expect(
+            "cache level out of range: levels are sized to the model's hidden layers \
+             (dims[1..num_layers]) at construction",
+        )
+    }
+
+    /// Mutable twin of [`HistCache::level`].
+    fn level_mut(&mut self, level: usize) -> &mut LevelHist {
+        self.levels.get_mut(level).expect(
+            "cache level out of range: levels are sized to the model's hidden layers \
+             (dims[1..num_layers]) at construction",
+        )
+    }
+
     /// Number of cached layer levels.
     pub fn num_levels(&self) -> usize {
         self.levels.len()
@@ -99,9 +116,12 @@ impl HistCache {
     /// per epoch on the training thread; the sampler reads only this.
     pub fn gate(&self, epoch: u64) -> CacheGate {
         CacheGate {
-            fresh: (0..self.levels.len())
-                .map(|l| {
-                    (0..self.levels[l].stamp.len())
+            fresh: self
+                .levels
+                .iter()
+                .enumerate()
+                .map(|(l, lv)| {
+                    (0..lv.stamp.len())
                         .map(|v| self.servable(l, v, epoch))
                         .collect()
                 })
@@ -113,26 +133,26 @@ impl HistCache {
     /// distributed runtime can assemble a *global* [`CacheGate`] from the
     /// union of per-shard stores (each store indexed by shard-local row).
     pub fn servable(&self, level: usize, id: usize, epoch: u64) -> bool {
-        let s = self.levels[level].stamp[id] as u64;
+        let s = self.level(level).stamp[id] as u64;
         s > 0 && s < epoch && epoch - s <= self.staleness
     }
 
     /// Epoch stamp of one stored row (0 = never written).
     pub fn stamp(&self, level: usize, id: usize) -> u64 {
-        self.levels[level].stamp[id] as u64
+        self.level(level).stamp[id] as u64
     }
 
     /// Direct read of one stored row — the distributed halo path packs
     /// these into coalesced per-peer buffers instead of calling
     /// [`HistCache::stitch`] on a foreign store.
     pub fn row(&self, level: usize, id: usize) -> &[f32] {
-        self.levels[level].emb.row(id)
+        self.level(level).emb.row(id)
     }
 
     /// Push a single row (the distributed trainer stores only the rows a
     /// shard *owns*, which are not a prefix of the block's dst set).
     pub fn push_row(&mut self, level: usize, id: usize, row: &[f32], epoch: u64) {
-        let lv = &mut self.levels[level];
+        let lv = self.level_mut(level);
         debug_assert_eq!(row.len(), lv.emb.cols);
         lv.emb.row_mut(id).copy_from_slice(row);
         lv.stamp[id] = epoch as u32;
@@ -142,7 +162,7 @@ impl HistCache {
     /// (the block's live-computed dst rows) as level `level`'s entries for
     /// those global ids, stamped with `epoch`.
     pub fn push(&mut self, level: usize, ids: &[u32], h: &Matrix, epoch: u64) {
-        let lv = &mut self.levels[level];
+        let lv = self.level_mut(level);
         debug_assert_eq!(h.cols, lv.emb.cols);
         debug_assert!(ids.len() <= h.rows);
         for (i, &g) in ids.iter().enumerate() {
@@ -166,7 +186,7 @@ impl HistCache {
         epoch: u64,
         pol: ExecPolicy,
     ) -> u64 {
-        let lv = &self.levels[level];
+        let lv = self.level(level);
         scatter_rows_ex(out, at_row, &lv.emb, ids, pol);
         ids.iter()
             .map(|&g| epoch.saturating_sub(lv.stamp[g as usize] as u64))
@@ -201,12 +221,14 @@ impl CacheGate {
 
     /// Freshness bitmask for one cached level.
     pub fn level(&self, level: usize) -> &[bool] {
-        &self.fresh[level]
+        self.fresh.get(level).expect(
+            "gate level out of range: the gate carries one bitmask per cached hidden layer",
+        )
     }
 
     /// Nodes servable at `level` (diagnostics).
     pub fn fresh_count(&self, level: usize) -> usize {
-        self.fresh[level].iter().filter(|&&f| f).count()
+        self.level(level).iter().filter(|&&f| f).count()
     }
 }
 

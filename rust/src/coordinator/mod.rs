@@ -21,9 +21,16 @@ use crate::optim::OptKind;
 use crate::runtime::engine::PjrtVariant;
 use crate::runtime::PjrtEngine;
 use crate::sampler::{expand_fanouts, MiniBatchConfig, MiniBatchEngine};
+use crate::serve::{
+    random_targets, ServeJob, ServeMode, Server, ServerConfig, ServingSnapshot, SnapshotSlot,
+};
 use crate::train::{train, TrainConfig, TrainReport};
+use crate::util::table::fmt_bytes;
+use crate::util::Rng;
 use anyhow::{anyhow, Result};
 use std::path::PathBuf;
+use std::sync::{mpsc, Arc};
+use std::time::Instant;
 
 /// The DSL-level training specification (Listing 1 analogue).
 #[derive(Clone, Debug)]
@@ -312,6 +319,293 @@ pub fn run_dist(spec: &DistSpec) -> Result<DistReport> {
     Ok(train_distributed(&ds, &cfg))
 }
 
+/// Specification for the `morphling serve` subcommand: train briefly,
+/// freeze a [`ServingSnapshot`], and drive a request stream through the
+/// concurrent [`Server`].
+#[derive(Clone, Debug)]
+pub struct ServeSpec {
+    pub dataset: String,
+    /// Model architecture (GIN is rejected, as in every sampled path).
+    pub arch: Arch,
+    /// Total requests to submit.
+    pub requests: usize,
+    /// Distinct target nodes per request.
+    pub batch_size: usize,
+    /// Server worker threads (0 = the `MORPHLING_THREADS` policy count).
+    pub workers: usize,
+    /// Bounded request-queue depth (0 = `2 × workers`).
+    pub queue_cap: usize,
+    /// `--serve-exact`: full fanout recursion instead of the snapshot
+    /// store (the accuracy-delta baseline).
+    pub exact: bool,
+    /// Warmup training epochs before the first snapshot is frozen.
+    pub train_epochs: usize,
+    /// Rebuild-and-swap a fresh snapshot every this many requests
+    /// (0 = never refresh; each refresh trains one more epoch first).
+    pub refresh_every: usize,
+    /// Last-layer serving fanout (0 = full neighborhood — the
+    /// exactness-preserving default).
+    pub serve_fanout: usize,
+    /// Fanout schedule for the warmup training engine.
+    pub fanouts: Vec<usize>,
+    /// Kernel threads per worker (0 = `MORPHLING_THREADS` env).
+    pub threads: usize,
+    pub seed: u64,
+    pub log: bool,
+}
+
+impl Default for ServeSpec {
+    fn default() -> Self {
+        ServeSpec {
+            dataset: "corafull".to_string(),
+            arch: Arch::SageMean,
+            requests: 256,
+            batch_size: 32,
+            workers: 0,
+            queue_cap: 0,
+            exact: false,
+            train_epochs: 2,
+            refresh_every: 0,
+            serve_fanout: 0,
+            fanouts: vec![10, 25],
+            threads: 0,
+            seed: 42,
+            log: false,
+        }
+    }
+}
+
+/// Outcome of a serving run: per-request latencies plus the aggregate
+/// work/cache/accuracy counters the CLI and benches report.
+#[derive(Clone, Debug)]
+pub struct ServeReport {
+    /// `"snapshot"` or `"exact"`.
+    pub mode: &'static str,
+    /// Requests answered (equals the spec's request count unless the
+    /// server died).
+    pub served: usize,
+    /// Worker threads that served the stream.
+    pub workers: usize,
+    /// Submit → completion seconds, in request-id order.
+    pub latencies_secs: Vec<f64>,
+    /// First submission → last completion.
+    pub wall_secs: f64,
+    /// Deep-layer store hits over candidates (1.0 in snapshot mode).
+    pub hit_rate: f64,
+    /// Mean edges materialized per request — the snapshot-vs-exact work
+    /// comparison the acceptance bench prints.
+    pub mean_request_edges: f64,
+    /// Resident bytes of the initial snapshot.
+    pub snapshot_bytes: usize,
+    /// Distinct snapshot versions observed across responses (ascending);
+    /// more than one only appears with `refresh_every > 0`.
+    pub versions: Vec<u64>,
+    /// Top-1 accuracy of served logits against the dataset labels.
+    pub accuracy: f64,
+}
+
+impl ServeReport {
+    /// Achieved requests per second over the serving wall-clock.
+    pub fn throughput(&self) -> f64 {
+        self.served as f64 / self.wall_secs
+    }
+}
+
+/// Validate a [`ServeSpec`] and run the serving loop: warmup-train a
+/// [`MiniBatchEngine`], freeze a [`ServingSnapshot`], start the bounded
+/// [`Server`], and stream requests — optionally rebuilding + swapping
+/// fresh snapshots mid-stream from a refresher thread.
+pub fn run_serve(spec: &ServeSpec) -> Result<ServeReport> {
+    if spec.requests == 0 {
+        return Err(anyhow!("--requests must be at least 1"));
+    }
+    if spec.batch_size == 0 {
+        return Err(anyhow!("--batch-size must be at least 1"));
+    }
+    let ds = datasets::load_by_name(&spec.dataset)
+        .ok_or_else(|| anyhow!("unknown dataset '{}' (see `morphling info`)", spec.dataset))?;
+    if spec.batch_size > ds.spec.nodes {
+        return Err(anyhow!(
+            "--batch-size {} exceeds dataset '{}' node count {}",
+            spec.batch_size,
+            ds.spec.name,
+            ds.spec.nodes
+        ));
+    }
+    let mb = MiniBatchConfig {
+        fanouts: spec.fanouts.clone(),
+        ..Default::default()
+    };
+    let config = ModelConfig::paper_default(spec.arch, ds.spec.features, ds.spec.classes);
+    let mut engine = MiniBatchEngine::new(
+        &ds,
+        &config,
+        OptKind::Adam,
+        AdamParams::default(),
+        mb,
+        spec.seed,
+    )
+    .map_err(|e| anyhow!(e))?;
+    if spec.threads > 0 {
+        engine.set_threads(spec.threads);
+    }
+    for _ in 0..spec.train_epochs {
+        engine.train_epoch(&ds);
+    }
+    let pol = if spec.threads > 0 {
+        ExecPolicy::with_threads(spec.threads)
+    } else {
+        ExecPolicy::from_env()
+    };
+    let snap = ServingSnapshot::build(
+        &ds,
+        engine.params().clone(),
+        spec.serve_fanout,
+        spec.seed,
+        1,
+        pol,
+    )
+    .map_err(anyhow::Error::msg)?;
+    let snapshot_bytes = snap.nbytes();
+    let workers = if spec.workers == 0 {
+        pol.threads.max(1)
+    } else {
+        spec.workers
+    };
+    let queue_cap = if spec.queue_cap == 0 {
+        2 * workers
+    } else {
+        spec.queue_cap
+    };
+    let mode = if spec.exact {
+        ServeMode::Exact
+    } else {
+        ServeMode::Snapshot
+    };
+    if spec.log {
+        println!(
+            "serving {} [{} mode]: {} workers, queue {}, snapshot v1 ({}), {} requests × {} targets",
+            ds.spec.name,
+            mode.name(),
+            workers,
+            queue_cap,
+            fmt_bytes(snapshot_bytes),
+            spec.requests,
+            spec.batch_size
+        );
+    }
+    let slot = Arc::new(SnapshotSlot::new(snap));
+    let server = Server::start(
+        Arc::clone(&slot),
+        &ServerConfig {
+            workers,
+            queue_cap,
+            mode,
+        },
+    );
+    let mut rng = Rng::new(spec.seed ^ 0x5e72_7e57);
+    let mut targets_by_id: Vec<Vec<u32>> = Vec::with_capacity(spec.requests);
+    let mut submit_at: Vec<Instant> = Vec::with_capacity(spec.requests);
+    let t0 = Instant::now();
+    let results = std::thread::scope(|s| {
+        // Refresher: each signal trains one more epoch, rebuilds a
+        // successor snapshot (same graph/features, next version), and
+        // swaps it in — in-flight requests keep their pinned snapshot.
+        let (refresh_tx, refresh_rx) = mpsc::channel::<()>();
+        if spec.refresh_every > 0 {
+            let slot = Arc::clone(&slot);
+            let dsr = &ds;
+            let mut eng = engine;
+            s.spawn(move || {
+                while refresh_rx.recv().is_ok() {
+                    eng.train_epoch(dsr);
+                    let cur = slot.load();
+                    let next = cur.rebuilt(eng.params().clone(), cur.version() + 1);
+                    slot.swap(next);
+                }
+            });
+        }
+        for i in 0..spec.requests {
+            if spec.refresh_every > 0 && i > 0 && i % spec.refresh_every == 0 {
+                // Best-effort: a signal lost to a dead refresher only
+                // skips a refresh, never the request.
+                let _ = refresh_tx.send(());
+            }
+            let targets = random_targets(&mut rng, ds.spec.nodes, spec.batch_size);
+            targets_by_id.push(targets.clone());
+            submit_at.push(Instant::now());
+            if !server.submit(ServeJob {
+                id: i as u64,
+                targets,
+            }) {
+                break;
+            }
+        }
+        drop(refresh_tx);
+        server.finish()
+    });
+    let served = results.len();
+    if served == 0 {
+        return Err(anyhow!("serving produced no responses (workers died?)"));
+    }
+    let mut latencies = Vec::with_capacity(served);
+    let (mut edges, mut hits, mut cands) = (0u64, 0u64, 0u64);
+    let (mut correct, mut total) = (0usize, 0usize);
+    let mut versions: Vec<u64> = Vec::new();
+    let mut last_done = t0;
+    for r in &results {
+        let id = r.id as usize;
+        latencies.push(r.completed_at.duration_since(submit_at[id]).as_secs_f64());
+        edges += r.response.sampled_edges;
+        hits += r.response.cache_hits;
+        cands += r.response.cache_candidates;
+        if r.completed_at > last_done {
+            last_done = r.completed_at;
+        }
+        if !versions.contains(&r.response.version) {
+            versions.push(r.response.version);
+        }
+        for (row, &g) in targets_by_id[id].iter().enumerate() {
+            if argmax(r.response.logits.row(row)) == ds.labels[g as usize] as usize {
+                correct += 1;
+            }
+            total += 1;
+        }
+    }
+    versions.sort_unstable();
+    Ok(ServeReport {
+        mode: mode.name(),
+        served,
+        workers,
+        latencies_secs: latencies,
+        wall_secs: last_done.duration_since(t0).as_secs_f64().max(1e-12),
+        hit_rate: if cands == 0 {
+            0.0
+        } else {
+            hits as f64 / cands as f64
+        },
+        mean_request_edges: edges as f64 / served as f64,
+        snapshot_bytes,
+        versions,
+        accuracy: if total == 0 {
+            0.0
+        } else {
+            correct as f64 / total as f64
+        },
+    })
+}
+
+/// Index of the largest logit (first wins on ties).
+fn argmax(row: &[f32]) -> usize {
+    let mut best = 0;
+    for (i, &v) in row.iter().enumerate() {
+        if v > row[best] {
+            best = i;
+        }
+    }
+    best
+}
+
 /// Outcome of a coordinated run.
 pub struct RunOutcome {
     pub report: TrainReport,
@@ -520,6 +814,76 @@ mod tests {
         assert_eq!(r.losses.len(), 2);
         assert!(r.final_loss().is_finite());
         assert!(r.cache.is_some());
+    }
+
+    #[test]
+    fn serve_snapshot_smoke_with_refresh() {
+        let spec = ServeSpec {
+            dataset: "corafull".into(),
+            requests: 6,
+            batch_size: 16,
+            workers: 2,
+            train_epochs: 1,
+            refresh_every: 3,
+            ..Default::default()
+        };
+        let r = run_serve(&spec).expect("serve smoke run must succeed");
+        assert_eq!(r.mode, "snapshot");
+        assert_eq!(r.served, 6);
+        assert_eq!(r.workers, 2);
+        assert_eq!(r.latencies_secs.len(), 6);
+        assert!(r.latencies_secs.iter().all(|&l| l.is_finite() && l >= 0.0));
+        assert_eq!(r.hit_rate, 1.0, "snapshot mode serves every deep row from the store");
+        assert!(r.mean_request_edges > 0.0);
+        assert!(r.snapshot_bytes > 0);
+        assert!(!r.versions.is_empty());
+        assert!(r.throughput() > 0.0);
+        assert!((0.0..=1.0).contains(&r.accuracy));
+    }
+
+    #[test]
+    fn serve_exact_mode_reports_zero_hits() {
+        let spec = ServeSpec {
+            dataset: "corafull".into(),
+            requests: 2,
+            batch_size: 8,
+            workers: 1,
+            train_epochs: 0,
+            exact: true,
+            ..Default::default()
+        };
+        let r = run_serve(&spec).expect("exact serve smoke run must succeed");
+        assert_eq!(r.mode, "exact");
+        assert_eq!(r.hit_rate, 0.0, "exact mode never consults the store");
+    }
+
+    #[test]
+    fn serve_rejects_bad_specs() {
+        assert!(run_serve(&ServeSpec {
+            requests: 0,
+            ..Default::default()
+        })
+        .is_err());
+        assert!(run_serve(&ServeSpec {
+            batch_size: 0,
+            ..Default::default()
+        })
+        .is_err());
+        assert!(run_serve(&ServeSpec {
+            batch_size: usize::MAX,
+            ..Default::default()
+        })
+        .is_err());
+        assert!(run_serve(&ServeSpec {
+            arch: Arch::Gin,
+            ..Default::default()
+        })
+        .is_err());
+        assert!(run_serve(&ServeSpec {
+            dataset: "nope".into(),
+            ..Default::default()
+        })
+        .is_err());
     }
 
     #[test]

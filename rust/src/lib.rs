@@ -42,6 +42,7 @@ pub mod train;
 pub mod baselines;
 pub mod partition;
 pub mod dist;
+pub mod serve;
 pub mod memtrack;
 pub mod runtime;
 pub mod coordinator;

@@ -6,6 +6,7 @@
 //! - `train`      — train a GNN on one dataset with a chosen engine
 //! - `partition`  — run the hierarchical partitioner and report quality
 //! - `dist`       — simulated multi-rank distributed training
+//! - `serve`      — snapshot-backed online inference over a request stream
 //! - `calibrate`  — measure the machine's efficiency ratio γ (Eq. 1)
 //! - `tune`       — benchmark kernel variants and write a tuning manifest
 
@@ -13,17 +14,18 @@
 #![allow(clippy::needless_range_loop, clippy::too_many_arguments)]
 
 use anyhow::{anyhow, Result};
-use morphling::coordinator::{run, run_dist, DistSpec, TrainSpec};
+use morphling::coordinator::{run, run_dist, run_serve, DistSpec, ServeSpec, TrainSpec};
 use morphling::engine::sparsity::calibrate_gamma_ex;
 use morphling::engine::{EngineKind, RunMode};
+use morphling::graph::datasets;
 use morphling::kernels::dispatch::{tune, VariantChoice};
 use morphling::kernels::parallel::ExecPolicy;
-use morphling::graph::datasets;
 use morphling::model::Arch;
 use morphling::optim::OptKind;
 use morphling::partition::{hierarchical_partition, quality};
 use morphling::util::argparse::{choice, usize_list, Args};
 use morphling::util::table::{fmt_bytes, fmt_secs, Table};
+use morphling::util::timer::percentiles;
 
 fn cmd_info() {
     let mut t = Table::new(vec![
@@ -253,6 +255,51 @@ fn cmd_dist(args: &Args) -> Result<()> {
     Ok(())
 }
 
+fn cmd_serve(args: &Args) -> Result<()> {
+    let spec = ServeSpec {
+        dataset: args.get_or("dataset", "corafull").to_string(),
+        arch: choice("arch", args.get_or("arch", "sage"), Arch::parse, Arch::VALID)
+            .map_err(anyhow::Error::msg)?,
+        requests: args.usize_or("requests", 256),
+        batch_size: args.usize_or("batch-size", 32),
+        workers: args.usize_or("workers", 0),
+        queue_cap: args.usize_or("queue-cap", 0),
+        exact: args.flag("serve-exact"),
+        train_epochs: args.usize_or("train-epochs", 2),
+        refresh_every: args.usize_or("refresh-every", 0),
+        serve_fanout: args.usize_or("serve-fanout", 0),
+        fanouts: usize_list("fanouts", args.get_or("fanouts", "10,25"))
+            .map_err(anyhow::Error::msg)?,
+        threads: args.usize_or("threads", 0),
+        seed: args.u64_or("seed", 42),
+        log: !args.flag("quiet"),
+    };
+    let r = run_serve(&spec)?;
+    let mut lat = r.latencies_secs.clone();
+    let p = percentiles(&mut lat, &[0.50, 0.95, 0.99]);
+    println!(
+        "served {} requests × {} targets on {} [{} mode, {} workers, {} snapshot version(s)]",
+        r.served,
+        spec.batch_size,
+        spec.dataset,
+        r.mode,
+        r.workers,
+        r.versions.len()
+    );
+    println!(
+        "latency p50 {} p95 {} p99 {}  throughput {:.1} req/s  hit-rate {:.3}  edges/req {:.0}  snapshot {}  acc {:.3}",
+        fmt_secs(p[0]),
+        fmt_secs(p[1]),
+        fmt_secs(p[2]),
+        r.throughput(),
+        r.hit_rate,
+        r.mean_request_edges,
+        fmt_bytes(r.snapshot_bytes),
+        r.accuracy,
+    );
+    Ok(())
+}
+
 fn cmd_tune(args: &Args) -> Result<()> {
     let defaults = tune::TuneConfig::default();
     let cfg = tune::TuneConfig {
@@ -300,6 +347,7 @@ fn main() -> Result<()> {
         Some("train") => cmd_train(&args),
         Some("partition") => cmd_partition(&args),
         Some("dist") => cmd_dist(&args),
+        Some("serve") => cmd_serve(&args),
         Some("tune") => cmd_tune(&args),
         Some("calibrate") => {
             let pol = args
@@ -318,7 +366,7 @@ fn main() -> Result<()> {
         }
         _ => {
             eprintln!(
-                "usage: morphling <info|shapes|train|partition|dist|calibrate|tune> [--flags]\n\
+                "usage: morphling <info|shapes|train|partition|dist|serve|calibrate|tune> [--flags]\n\
                  train:     --dataset corafull --engine native|pyg|dgl|pjrt --arch gcn|sage|sage-max|gin --epochs 100 [--threads N]\n\
                  \u{20}          --mode full|minibatch [--batch-size 512] [--fanouts 10,25] [--no-prefetch]\n\
                  \u{20}          [--cache] [--cache-staleness K]\n\
@@ -333,6 +381,13 @@ fn main() -> Result<()> {
                  \u{20}          (rank workers are real threads; epoch time reports measured wall clock\n\
                  \u{20}           and the modeled fabric column; sampled mode is bitwise-identical at\n\
                  \u{20}           any --world x --threads)\n\
+                 serve:     --dataset corafull --arch sage --requests 256 --batch-size 32\n\
+                 \u{20}          [--workers N] [--queue-cap Q] [--serve-exact] [--train-epochs 2]\n\
+                 \u{20}          [--refresh-every R] [--serve-fanout 0] [--fanouts 10,25] [--threads N]\n\
+                 \u{20}          (snapshot-backed inference: deep layers answer from a frozen\n\
+                 \u{20}           historical store — one block + one layer per request; --serve-exact\n\
+                 \u{20}           runs the full recursion; --refresh-every R swaps in a freshly trained\n\
+                 \u{20}           snapshot every R requests without stalling workers)\n\
                  calibrate: [--threads N] [--seed 7]\n\
                  tune:      [--out artifacts/tune.json] [--widths 16,32,64,128] [--threads 1,4]\n\
                  \u{20}          [--quick] [--seed 42]\n\

@@ -105,7 +105,8 @@ mod tests {
     /// Prefetch on/off produce the identical batch sequence.
     #[test]
     fn prefetch_matches_inline() {
-        let ds = datasets::load_by_name("corafull").unwrap();
+        let ds = datasets::load_by_name("corafull")
+            .expect("corafull is a built-in Table-II dataset spec and must always resolve");
         let ctx = SampleCtx::for_arch(
             Arch::SageMean,
             &ds,
@@ -114,7 +115,7 @@ mod tests {
             11,
             ExecPolicy::serial(),
         )
-        .unwrap();
+        .expect("SAGE-mean is a sampled-mode architecture; for_arch only rejects GIN");
         let seeds: Vec<u32> = (0..300u32).collect();
         let collect = |prefetch: bool| {
             let mut out = Vec::new();

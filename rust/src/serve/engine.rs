@@ -1,0 +1,234 @@
+//! Forward-only inference over extracted blocks.
+//!
+//! The serve engine is the training forward pass with everything else
+//! removed: no gradient buffers, no Adam, no loss. It reuses the training
+//! sampler's block extraction, the `_ex` dispatch kernels, and — in
+//! snapshot mode — the historical store's `scatter_rows_ex` stitching, so
+//! served logits are bitwise-deterministic and, on a fresh snapshot,
+//! bitwise-identical to the exact full-neighborhood recursion
+//! (`tests/serve.rs` pins both).
+
+use super::snapshot::{ServingSnapshot, PRECOMPUTE_EPOCH};
+use crate::kernels::activations::relu_inplace_ex;
+use crate::kernels::gemm::{add_bias_ex, gemm_ex};
+use crate::kernels::parallel::ExecPolicy;
+use crate::kernels::spmm::{spmm_block_ex, spmm_max_block_ex};
+use crate::model::{Arch, GnnParams};
+use crate::sampler::extract::gather_rows_ex;
+use crate::sampler::{Block, SamplerScratch, FULL_NEIGHBORHOOD};
+use crate::tensor::Matrix;
+
+/// Salt for the per-request sampling RNG. Irrelevant at full fanout (no
+/// random draws happen) but keeps bounded-fanout serving deterministic
+/// per request batch.
+const SERVE_SALT: u64 = 0x5e72_e002;
+
+/// How a request is answered.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ServeMode {
+    /// Last-layer sampling + one layer of compute; deeper activations are
+    /// served from the frozen store (100% hit rate by construction).
+    Snapshot,
+    /// Full fanout recursion through every layer from raw features — the
+    /// accuracy-delta baseline (`--serve-exact`).
+    Exact,
+}
+
+impl ServeMode {
+    /// Accepted `--modes` names.
+    pub const VALID: &'static [&'static str] = &["snapshot", "exact"];
+
+    /// Parse a mode name (as listed in [`ServeMode::VALID`]).
+    pub fn parse(s: &str) -> Option<ServeMode> {
+        match s {
+            "snapshot" => Some(ServeMode::Snapshot),
+            "exact" => Some(ServeMode::Exact),
+            _ => None,
+        }
+    }
+
+    /// Canonical display name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            ServeMode::Snapshot => "snapshot",
+            ServeMode::Exact => "exact",
+        }
+    }
+}
+
+/// One answered request: per-target logits plus the work/cache counters
+/// the benches aggregate.
+#[derive(Clone, Debug)]
+pub struct ServeResponse {
+    /// Version of the snapshot that served this request (every response
+    /// is attributable to exactly one snapshot).
+    pub version: u64,
+    /// Row `i` holds the logits of the `i`-th requested target node.
+    pub logits: Matrix,
+    /// Edges materialized in this request's block(s).
+    pub sampled_edges: u64,
+    /// Frontier activations served from the frozen store.
+    pub cache_hits: u64,
+    /// Frontier activations that *could* have been served from a store
+    /// (deep-layer source rows); in snapshot mode `hits == candidates`.
+    pub cache_candidates: u64,
+}
+
+impl ServeResponse {
+    /// Store hits over candidates (1.0 in snapshot mode, 0.0 in exact
+    /// mode or when no deep layers exist).
+    pub fn hit_rate(&self) -> f64 {
+        if self.cache_candidates == 0 {
+            0.0
+        } else {
+            self.cache_hits as f64 / self.cache_candidates as f64
+        }
+    }
+}
+
+/// One layer of the forward pass over a rectangular block — the exact op
+/// sequence (and therefore the exact IEEE-754 accumulation order) of the
+/// training engine's forward, shared by the precompute pass and both
+/// serve paths.
+pub(crate) fn layer_forward(
+    params: &GnnParams,
+    l: usize,
+    is_last: bool,
+    blk: &Block,
+    x_in: &Matrix,
+    pol: ExecPolicy,
+) -> Matrix {
+    let arch = params.config.arch;
+    let (din, dout) = (params.config.dims[l], params.config.dims[l + 1]);
+    debug_assert_eq!(x_in.rows, blk.n_src, "layer input must cover the block source set");
+    debug_assert_eq!(x_in.cols, din, "layer input width must match dims[l]");
+    // Destination rows are the source prefix — the self-path operand for
+    // the SAGE archs.
+    let xdl = if arch.has_self_weight() {
+        Matrix::from_vec(blk.n_dst, din, x_in.data[..blk.n_dst * din].to_vec())
+    } else {
+        Matrix::zeros(0, 0)
+    };
+    let mut hl;
+    match arch {
+        Arch::Gcn => {
+            let mut z = Matrix::zeros(blk.n_src, dout);
+            gemm_ex(x_in, &params.layers[l].w, &mut z, pol);
+            hl = Matrix::zeros(blk.n_dst, dout);
+            spmm_block_ex(&blk.adj, &z, &mut hl, pol);
+        }
+        Arch::SageMean => {
+            let mut z = Matrix::zeros(blk.n_src, dout);
+            gemm_ex(x_in, &params.layers[l].w, &mut z, pol);
+            hl = Matrix::zeros(blk.n_dst, dout);
+            spmm_block_ex(&blk.adj, &z, &mut hl, pol);
+            let mut zs = Matrix::zeros(blk.n_dst, dout);
+            let ws = params.layers[l].w_self.as_ref().expect(
+                "w_self missing: SAGE-mean layers always carry a self-path weight \
+                 (Arch::has_self_weight invariant)",
+            );
+            gemm_ex(&xdl, ws, &mut zs, pol);
+            for (hv, zv) in hl.data.iter_mut().zip(&zs.data) {
+                *hv += zv;
+            }
+        }
+        Arch::SageMax => {
+            let mut ml = Matrix::zeros(blk.n_dst, din);
+            let mut am = vec![0u32; blk.n_dst * din];
+            spmm_max_block_ex(&blk.adj, x_in, &mut ml, &mut am, pol);
+            let mut z = Matrix::zeros(blk.n_dst, dout);
+            gemm_ex(&ml, &params.layers[l].w, &mut z, pol);
+            hl = Matrix::zeros(blk.n_dst, dout);
+            let ws = params.layers[l].w_self.as_ref().expect(
+                "w_self missing: SAGE-max layers always carry a self-path weight \
+                 (Arch::has_self_weight invariant)",
+            );
+            gemm_ex(&xdl, ws, &mut hl, pol);
+            for (hv, zv) in hl.data.iter_mut().zip(&z.data) {
+                *hv += zv;
+            }
+        }
+        Arch::Gin => unreachable!("SampleCtx::for_arch rejects GIN before any snapshot exists"),
+    }
+    add_bias_ex(&mut hl, &params.layers[l].b, pol);
+    if !is_last {
+        relu_inplace_ex(&mut hl, pol);
+    }
+    hl
+}
+
+impl ServingSnapshot {
+    /// Answer one request: per-node logits for `targets` (which must be
+    /// distinct node ids — the block extractor's destination contract).
+    ///
+    /// Snapshot mode samples one last-layer block and stitches every
+    /// source row from the frozen store; exact mode (and any single-layer
+    /// model, which has no deep layers to cache) runs the full recursion
+    /// from raw features.
+    pub fn serve(
+        &self,
+        targets: &[u32],
+        mode: ServeMode,
+        scratch: &mut SamplerScratch,
+    ) -> ServeResponse {
+        match mode {
+            ServeMode::Snapshot if self.params.config.num_layers() > 1 => {
+                self.serve_snapshot(targets, scratch)
+            }
+            _ => self.serve_exact(targets, scratch),
+        }
+    }
+
+    /// Snapshot path: one block, one layer of compute, 100% deep-layer
+    /// hits.
+    fn serve_snapshot(&self, targets: &[u32], scratch: &mut SamplerScratch) -> ServeResponse {
+        let nl = self.params.config.num_layers();
+        let pol = self.ctx.policy;
+        let blocks = self
+            .ctx
+            .sample_blocks(scratch, targets, SERVE_SALT, &[self.last_fanout], None);
+        let blk = &blocks[0];
+        // Every source row — targets and frontier alike — is a frozen
+        // level-(nl-2) activation; stitch them in block-local order.
+        let mut x = Matrix::zeros(blk.n_src, self.params.config.dims[nl - 1]);
+        self.hist
+            .stitch(nl - 2, &blk.src_nodes, &mut x, 0, PRECOMPUTE_EPOCH, pol);
+        let logits = layer_forward(&self.params, nl - 1, true, blk, &x, pol);
+        ServeResponse {
+            version: self.version,
+            logits,
+            sampled_edges: blk.num_edges() as u64,
+            cache_hits: blk.n_src as u64,
+            cache_candidates: blk.n_src as u64,
+        }
+    }
+
+    /// Exact path: full fanout recursion through every layer from raw
+    /// features. Nothing is served from the store (`hits = 0`); the
+    /// candidate count — deep-block frontier rows beyond the destination
+    /// prefix — is what snapshot mode would have answered from it.
+    fn serve_exact(&self, targets: &[u32], scratch: &mut SamplerScratch) -> ServeResponse {
+        let nl = self.params.config.num_layers();
+        let full = vec![FULL_NEIGHBORHOOD; nl];
+        let blocks = self
+            .ctx
+            .sample_blocks(scratch, targets, SERVE_SALT, &full, None);
+        let pol = self.ctx.policy;
+        let mut x = gather_rows_ex(&self.feats, &blocks[0].src_nodes, pol);
+        for (l, blk) in blocks.iter().enumerate() {
+            x = layer_forward(&self.params, l, l + 1 == nl, blk, &x, pol);
+        }
+        let sampled_edges = blocks.iter().map(|b| b.num_edges() as u64).sum();
+        let cache_candidates = blocks[1..]
+            .iter()
+            .map(|b| (b.n_src - b.n_dst) as u64)
+            .sum();
+        ServeResponse {
+            version: self.version,
+            logits: x,
+            sampled_edges,
+            cache_hits: 0,
+            cache_candidates,
+        }
+    }
+}

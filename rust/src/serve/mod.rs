@@ -1,0 +1,39 @@
+//! Online inference serving: snapshot-backed low-latency forward passes.
+//!
+//! Everything else in the crate trains; this subsystem answers queries. The
+//! design inverts the historical-embedding cache ([`crate::cache`]) for
+//! inference, GNNAutoScale-style: a one-time precompute pass runs every
+//! hidden layer over *all* nodes at full neighborhood and freezes the
+//! outputs into a per-layer [`crate::cache::HistCache`]. A request for a
+//! batch of target nodes then needs only last-layer sampling + one layer of
+//! compute — every deeper activation resolves as a cache hit against the
+//! frozen store, so per-request work is one rectangular block instead of a
+//! multi-hop fanout recursion.
+//!
+//! The pieces:
+//!
+//! - [`ServingSnapshot`] ([`snapshot`]): an immutable, `Arc`-shareable
+//!   bundle of trained [`crate::model::GnnParams`], the aggregation CSR,
+//!   the feature store, and the precomputed per-layer activations.
+//! - the forward-only serve engine ([`engine`]): block extraction via the
+//!   training sampler, stitching via `scatter_rows_ex`, compute via the
+//!   same `_ex` dispatch kernels — no Adam, no backward, deterministic
+//!   logits. [`ServeMode::Exact`] runs the full fanout recursion instead
+//!   (the accuracy-delta baseline; bitwise-identical on a fresh snapshot).
+//! - [`Server`] ([`server`]): a bounded request queue feeding N worker
+//!   threads that share the snapshot read-only through a [`SnapshotSlot`] —
+//!   an `arc_swap`-style atomic pointer cell built on `std::sync` (deps are
+//!   vendored), so a refresher can rebuild-and-swap a new snapshot without
+//!   stalling in-flight requests.
+//!
+//! Driven by the `morphling serve` CLI subcommand
+//! ([`crate::coordinator::run_serve`]) and measured open-loop by
+//! `benches/serve_bench.rs`.
+
+pub mod engine;
+pub mod server;
+pub mod snapshot;
+
+pub use engine::{ServeMode, ServeResponse};
+pub use server::{random_targets, JobResult, ServeJob, Server, ServerConfig};
+pub use snapshot::{ServingSnapshot, SnapshotSlot};

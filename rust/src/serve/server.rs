@@ -1,0 +1,182 @@
+//! The concurrent server loop: a bounded request queue feeding worker
+//! threads that share the snapshot read-only.
+//!
+//! Workers pull jobs from one bounded `sync_channel` (backpressure: a
+//! submitter blocks while the queue is full), pin the current snapshot
+//! once per request via [`SnapshotSlot::load`], serve, and push a
+//! [`JobResult`] to the collector channel. Because each request computes
+//! against a single pinned `Arc`, a concurrent snapshot swap can never
+//! tear a response — every result is attributable to exactly one snapshot
+//! version. Determinism: served logits depend only on (snapshot version,
+//! target batch), never on which worker ran the request or how many
+//! workers exist (`tests/serve.rs` pins worker-count invariance).
+
+use super::engine::{ServeMode, ServeResponse};
+use super::snapshot::SnapshotSlot;
+use crate::sampler::SamplerScratch;
+use crate::util::Rng;
+use std::collections::HashSet;
+use std::sync::mpsc::{self, Receiver, SyncSender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+/// Server shape: worker count, queue depth, and the serve path.
+#[derive(Clone, Copy, Debug)]
+pub struct ServerConfig {
+    /// Worker threads sharing the request queue (min 1).
+    pub workers: usize,
+    /// Bounded request-queue depth (min 1); a full queue blocks
+    /// submission — open-loop drivers measure that as queueing delay.
+    pub queue_cap: usize,
+    /// Snapshot (store-backed) or exact (full recursion) serving.
+    pub mode: ServeMode,
+}
+
+impl Default for ServerConfig {
+    fn default() -> ServerConfig {
+        ServerConfig {
+            workers: 1,
+            queue_cap: 64,
+            mode: ServeMode::Snapshot,
+        }
+    }
+}
+
+/// One request: an id (echoed in the result) and the distinct target
+/// node ids to classify.
+#[derive(Clone, Debug)]
+pub struct ServeJob {
+    /// Caller-assigned request id.
+    pub id: u64,
+    /// Distinct target node ids (the block extractor's destination
+    /// contract; see [`random_targets`]).
+    pub targets: Vec<u32>,
+}
+
+/// One completed request.
+#[derive(Clone, Debug)]
+pub struct JobResult {
+    /// The submitting side's request id.
+    pub id: u64,
+    /// Logits + work counters + the serving snapshot's version.
+    pub response: ServeResponse,
+    /// When the worker finished (latency = this minus the arrival time
+    /// the driver recorded for the id).
+    pub completed_at: Instant,
+    /// Pure service time: dequeue → response, excluding queueing.
+    pub service_secs: f64,
+}
+
+/// A running server: submit jobs, then [`finish`](Server::finish) to
+/// drain results and join the workers.
+pub struct Server {
+    tx: Option<SyncSender<ServeJob>>,
+    results: Receiver<JobResult>,
+    handles: Vec<JoinHandle<()>>,
+}
+
+impl Server {
+    /// Spawn the worker pool against a shared snapshot slot.
+    pub fn start(slot: Arc<SnapshotSlot>, cfg: &ServerConfig) -> Server {
+        let workers = cfg.workers.max(1);
+        let (tx, rx) = mpsc::sync_channel::<ServeJob>(cfg.queue_cap.max(1));
+        let rx = Arc::new(Mutex::new(rx));
+        let (res_tx, results) = mpsc::channel::<JobResult>();
+        let mode = cfg.mode;
+        let handles = (0..workers)
+            .map(|_| {
+                let rx = Arc::clone(&rx);
+                let res_tx = res_tx.clone();
+                let slot = Arc::clone(&slot);
+                std::thread::spawn(move || {
+                    // Scratch is reusable across requests as long as the
+                    // node count is stable (refresh keeps the graph).
+                    let mut scratch: Option<(usize, SamplerScratch)> = None;
+                    loop {
+                        let job = {
+                            let q = rx.lock().expect(
+                                "server queue poisoned: a worker panicked while holding the \
+                                 receiver",
+                            );
+                            match q.recv() {
+                                Ok(j) => j,
+                                Err(_) => break, // queue closed and drained
+                            }
+                        };
+                        let t = Instant::now();
+                        // Pin once per request: the whole response computes
+                        // against this one snapshot even if a swap lands
+                        // mid-request.
+                        let snap = slot.load();
+                        let n = snap.num_nodes();
+                        if scratch.as_ref().map(|(sn, _)| *sn) != Some(n) {
+                            scratch = Some((n, SamplerScratch::new(n)));
+                        }
+                        let (_, sc) = scratch
+                            .as_mut()
+                            .expect("scratch initialized just above for this node count");
+                        let response = snap.serve(&job.targets, mode, sc);
+                        let done = Instant::now();
+                        let out = JobResult {
+                            id: job.id,
+                            response,
+                            completed_at: done,
+                            service_secs: done.duration_since(t).as_secs_f64(),
+                        };
+                        if res_tx.send(out).is_err() {
+                            break; // collector dropped
+                        }
+                    }
+                })
+            })
+            .collect();
+        // Workers hold their own clones; dropping the original lets the
+        // collector's iterator terminate once every worker exits.
+        drop(res_tx);
+        Server {
+            tx: Some(tx),
+            results,
+            handles,
+        }
+    }
+
+    /// Submit one job; blocks while the bounded queue is full
+    /// (backpressure). Returns `false` only if every worker has exited.
+    pub fn submit(&self, job: ServeJob) -> bool {
+        self.tx
+            .as_ref()
+            .expect("submit after finish: the job queue is already closed")
+            .send(job)
+            .is_ok()
+    }
+
+    /// Close the queue, drain every result, join the workers, and return
+    /// results sorted by request id.
+    pub fn finish(mut self) -> Vec<JobResult> {
+        drop(self.tx.take());
+        let mut out: Vec<JobResult> = self.results.iter().collect();
+        for h in self.handles.drain(..) {
+            h.join().expect("server worker panicked");
+        }
+        out.sort_by_key(|r| r.id);
+        out
+    }
+}
+
+/// Draw `k` *distinct* target node ids from `[0, num_nodes)` (capped at
+/// `num_nodes` when `k` exceeds it) — request batches must be
+/// duplicate-free because a block's destination set is a set (the
+/// extractor's contract).
+pub fn random_targets(rng: &mut Rng, num_nodes: usize, k: usize) -> Vec<u32> {
+    let k = k.min(num_nodes);
+    let mut out = Vec::with_capacity(k);
+    let mut seen = HashSet::with_capacity(k * 2);
+    while out.len() < k {
+        let v = rng.below(num_nodes) as u32;
+        if seen.insert(v) {
+            out.push(v);
+        }
+    }
+    out
+}

@@ -1,0 +1,234 @@
+//! The immutable serving snapshot and its atomic swap slot.
+//!
+//! A [`ServingSnapshot`] is built once from trained parameters: a
+//! full-neighborhood block over *all* nodes drives every hidden layer
+//! forward and freezes the outputs into a per-layer
+//! [`HistCache`](crate::cache::HistCache). After that the snapshot is
+//! never mutated — workers share it through an `Arc` and requests read the
+//! store concurrently without locks. Refresh is rebuild-and-swap: train
+//! some more, [`ServingSnapshot::rebuilt`] a successor (new version, same
+//! graph/features), and [`SnapshotSlot::swap`] it in. In-flight requests
+//! keep their pinned `Arc`, so a swap never tears a response.
+
+use crate::cache::HistCache;
+use crate::graph::Dataset;
+use crate::kernels::parallel::ExecPolicy;
+use crate::model::{Arch, GnnParams};
+use crate::sampler::{SampleCtx, SamplerScratch, FULL_NEIGHBORHOOD};
+use crate::tensor::Matrix;
+use std::sync::{Arc, RwLock};
+
+/// The epoch stamp written by the precompute pass and presented by every
+/// stitch. `epoch - stamp = 0` for all rows: the frozen store is always
+/// "fresh" by construction, which is exactly the bounded-staleness
+/// invariant that makes snapshot serving bitwise-exact on a fresh
+/// snapshot.
+pub(crate) const PRECOMPUTE_EPOCH: u64 = 1;
+
+/// Salt for the precompute pass's (unused at full fanout) sampling RNG.
+const PRECOMPUTE_SALT: u64 = 0x5e72_e001;
+
+/// An immutable bundle of everything one forward pass needs: trained
+/// parameters, the aggregation operand + sampling context, the feature
+/// store, and the frozen per-layer activation cache.
+///
+/// Cheap to share (`Arc<ServingSnapshot>`), never mutated after
+/// construction. `Clone` deep-copies (used by benches to run the same
+/// snapshot under several server configurations).
+#[derive(Clone, Debug)]
+pub struct ServingSnapshot {
+    /// Monotonic version, assigned by the builder/refresher.
+    pub(crate) version: u64,
+    /// Trained parameters (read-only; no gradient buffers are touched).
+    pub(crate) params: GnnParams,
+    /// Sampling context: aggregation CSR + weight rule + policy. Fanouts
+    /// are per-request, so the context's own schedule is all-full.
+    pub(crate) ctx: SampleCtx,
+    /// Input feature matrix (exact mode gathers layer-0 inputs from it).
+    pub(crate) feats: Matrix,
+    /// Frozen per-hidden-layer activations for every node.
+    pub(crate) hist: HistCache,
+    /// Last-layer serving fanout (0 = full neighborhood).
+    pub(crate) last_fanout: usize,
+}
+
+impl ServingSnapshot {
+    /// Build a snapshot from a dataset and trained parameters: construct
+    /// the architecture's sampling context, then run the precompute pass.
+    ///
+    /// `last_fanout` bounds the per-request last-layer neighbor draw
+    /// (0 = full neighborhood, the exactness-preserving default). Errors
+    /// on architecture/dataset mismatches (GIN, wrong feature width).
+    pub fn build(
+        ds: &Dataset,
+        params: GnnParams,
+        last_fanout: usize,
+        seed: u64,
+        version: u64,
+        pol: ExecPolicy,
+    ) -> Result<ServingSnapshot, String> {
+        let nl = params.config.num_layers();
+        if params.config.dims[0] != ds.spec.features {
+            return Err(format!(
+                "serving snapshot: params expect {} input features but dataset '{}' has {}",
+                params.config.dims[0], ds.spec.name, ds.spec.features
+            ));
+        }
+        let ctx = SampleCtx::for_arch(
+            params.config.arch,
+            ds,
+            &vec![FULL_NEIGHBORHOOD; nl],
+            nl,
+            seed,
+            pol,
+        )?;
+        Ok(ServingSnapshot::from_parts(
+            ctx,
+            ds.features.clone(),
+            params,
+            last_fanout,
+            version,
+        ))
+    }
+
+    /// A successor snapshot with fresh parameters: reuses this snapshot's
+    /// sampling context and feature store (the graph did not change) and
+    /// re-runs the precompute pass. This is the refresh path — it needs no
+    /// `&Dataset`, so a refresher thread can own it outright.
+    pub fn rebuilt(&self, params: GnnParams, version: u64) -> ServingSnapshot {
+        ServingSnapshot::from_parts(
+            self.ctx.clone(),
+            self.feats.clone(),
+            params,
+            self.last_fanout,
+            version,
+        )
+    }
+
+    /// The precompute pass: one full-neighborhood block covering every
+    /// node (its source set is exactly `0..N`, so layer 0 reads the
+    /// feature matrix directly), driven through all hidden layers with
+    /// each output pushed into the store. The logits layer is never
+    /// precomputed — it runs per request.
+    fn from_parts(
+        ctx: SampleCtx,
+        feats: Matrix,
+        params: GnnParams,
+        last_fanout: usize,
+        version: u64,
+    ) -> ServingSnapshot {
+        let nl = params.config.num_layers();
+        let n = ctx.agg.num_nodes;
+        let mut hist = HistCache::new(n, &params.config.dims[1..nl], 0);
+        if nl > 1 {
+            let all: Vec<u32> = (0..n as u32).collect();
+            let mut scratch = SamplerScratch::new(n);
+            let blocks =
+                ctx.sample_blocks(&mut scratch, &all, PRECOMPUTE_SALT, &[FULL_NEIGHBORHOOD], None);
+            let blk = &blocks[0];
+            debug_assert_eq!(blk.n_src, n, "all-nodes full-fanout block must cover every node");
+            let mut x: Option<Matrix> = None;
+            for l in 0..nl - 1 {
+                let x_in = x.as_ref().unwrap_or(&feats);
+                let h = super::engine::layer_forward(&params, l, false, blk, x_in, ctx.policy);
+                hist.push(l, &blk.src_nodes, &h, PRECOMPUTE_EPOCH);
+                x = Some(h);
+            }
+        }
+        ServingSnapshot {
+            version,
+            params,
+            ctx,
+            feats,
+            hist,
+            last_fanout,
+        }
+    }
+
+    /// The snapshot's monotonic version.
+    pub fn version(&self) -> u64 {
+        self.version
+    }
+
+    /// Number of nodes covered by the snapshot.
+    pub fn num_nodes(&self) -> usize {
+        self.ctx.agg.num_nodes
+    }
+
+    /// Number of model layers.
+    pub fn num_layers(&self) -> usize {
+        self.params.config.num_layers()
+    }
+
+    /// The architecture this snapshot serves.
+    pub fn arch(&self) -> Arch {
+        self.params.config.arch
+    }
+
+    /// The trained parameters bundled in this snapshot.
+    pub fn params(&self) -> &GnnParams {
+        &self.params
+    }
+
+    /// Bytes held by the frozen activation store alone.
+    pub fn hist_bytes(&self) -> usize {
+        self.hist.nbytes()
+    }
+
+    /// Total resident bytes: parameters + aggregation CSR + features +
+    /// frozen activation store.
+    pub fn nbytes(&self) -> usize {
+        self.params.nbytes() + self.ctx.agg.nbytes() + self.feats.nbytes() + self.hist.nbytes()
+    }
+}
+
+/// An `arc_swap`-style shared snapshot cell built on `std::sync` (the
+/// dependency set is vendored, so no external atomics crate).
+///
+/// Readers [`load`](SnapshotSlot::load) to pin the current snapshot — a
+/// read lock held only long enough to clone the `Arc` — and then serve
+/// from the pinned value lock-free. A refresher [`swap`](SnapshotSlot::swap)s
+/// in a successor; requests already pinned to the old snapshot finish
+/// against it unchanged, so every response is attributable to exactly one
+/// snapshot version (the no-torn-reads invariant pinned by
+/// `tests/serve.rs`).
+#[derive(Debug)]
+pub struct SnapshotSlot {
+    cur: RwLock<Arc<ServingSnapshot>>,
+}
+
+impl SnapshotSlot {
+    /// Wrap an initial snapshot.
+    pub fn new(snap: ServingSnapshot) -> SnapshotSlot {
+        SnapshotSlot {
+            cur: RwLock::new(Arc::new(snap)),
+        }
+    }
+
+    /// Pin the current snapshot. The lock is held only for the `Arc`
+    /// clone; the caller serves from the returned pointer without further
+    /// synchronization.
+    pub fn load(&self) -> Arc<ServingSnapshot> {
+        Arc::clone(
+            &self
+                .cur
+                .read()
+                .expect("snapshot slot poisoned: a thread panicked while holding the lock"),
+        )
+    }
+
+    /// Atomically replace the current snapshot, returning the previous
+    /// one (still alive for any request that pinned it).
+    pub fn swap(&self, next: ServingSnapshot) -> Arc<ServingSnapshot> {
+        let mut cur = self
+            .cur
+            .write()
+            .expect("snapshot slot poisoned: a thread panicked while holding the lock");
+        std::mem::replace(&mut *cur, Arc::new(next))
+    }
+
+    /// Version of the currently installed snapshot.
+    pub fn version(&self) -> u64 {
+        self.load().version
+    }
+}

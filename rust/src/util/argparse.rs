@@ -116,6 +116,24 @@ pub fn usize_list(key: &str, raw: &str) -> Result<Vec<usize>, String> {
         .collect()
 }
 
+/// Parse an `f64` flag value with a `[min, max]` range check, producing an
+/// error that names the flag and the accepted range. NaN never compares
+/// inside a range, but it *does* parse (`"NaN".parse::<f64>()` succeeds),
+/// so non-finite values are rejected explicitly — the helper behind
+/// `--offered-rate`, where a NaN or negative rate would silently break the
+/// open-loop arrival schedule.
+pub fn f64_in(key: &str, raw: &str, min: f64, max: f64) -> Result<f64, String> {
+    let v: f64 = raw
+        .parse()
+        .map_err(|_| format!("invalid --{key} '{raw}' (expected a number)"))?;
+    if !v.is_finite() || v < min || v > max {
+        return Err(format!(
+            "invalid --{key} '{raw}' (expected a finite value in [{min}, {max}])"
+        ));
+    }
+    Ok(v)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -174,6 +192,32 @@ mod tests {
         assert!(err.contains("--mode"), "{err}");
         assert!(err.contains("zzz"), "{err}");
         assert!(err.contains("a|b"), "{err}");
+    }
+
+    #[test]
+    fn f64_in_accepts_values_in_range() {
+        assert_eq!(f64_in("offered-rate", "128", 0.0, 1e9), Ok(128.0));
+        assert_eq!(f64_in("offered-rate", "0.5", 0.0, 1.0), Ok(0.5));
+        // Endpoints are inclusive.
+        assert_eq!(f64_in("offered-rate", "0", 0.0, 1.0), Ok(0.0));
+        assert_eq!(f64_in("offered-rate", "1", 0.0, 1.0), Ok(1.0));
+    }
+
+    #[test]
+    fn f64_in_rejects_nan_naming_the_flag() {
+        // "NaN" parses as f64, so the range check must catch it explicitly.
+        let err = f64_in("offered-rate", "NaN", 0.0, 1e9).unwrap_err();
+        assert!(err.contains("--offered-rate"), "{err}");
+        assert!(f64_in("offered-rate", "inf", 0.0, 1e9).is_err());
+    }
+
+    #[test]
+    fn f64_in_rejects_out_of_range_and_garbage() {
+        let err = f64_in("offered-rate", "-3", 0.0, 1e9).unwrap_err();
+        assert!(err.contains("--offered-rate") && err.contains("-3"), "{err}");
+        let err = f64_in("offered-rate", "abc", 0.0, 1e9).unwrap_err();
+        assert!(err.contains("--offered-rate") && err.contains("abc"), "{err}");
+        assert!(f64_in("rate", "1e10", 0.0, 1e9).is_err());
     }
 
     #[test]

@@ -107,6 +107,31 @@ pub fn median(samples: &[f64]) -> f64 {
     v[v.len() / 2]
 }
 
+/// Linearly interpolated percentiles of `samples` at each quantile in
+/// `qs` (0.0 ≤ q ≤ 1.0, clamped). Sorts `samples` in place; an empty
+/// sample set yields 0.0 for every quantile (matching [`median`]'s
+/// convention). Uses the rank `q·(n−1)` definition, so `q = 0`/`q = 1`
+/// are the min/max and a singleton answers itself at every quantile.
+pub fn percentiles(samples: &mut [f64], qs: &[f64]) -> Vec<f64> {
+    if samples.is_empty() {
+        return vec![0.0; qs.len()];
+    }
+    samples.sort_by(|a, b| {
+        a.partial_cmp(b)
+            .expect("percentiles: NaN sample — latency/time samples must be finite")
+    });
+    let n = samples.len();
+    qs.iter()
+        .map(|&q| {
+            let rank = q.clamp(0.0, 1.0) * (n - 1) as f64;
+            let lo = rank.floor() as usize;
+            let hi = rank.ceil() as usize;
+            let frac = rank - lo as f64;
+            samples[lo] + (samples[hi] - samples[lo]) * frac
+        })
+        .collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -134,5 +159,32 @@ mod tests {
     fn median_odd_even() {
         assert_eq!(median(&[3.0, 1.0, 2.0]), 2.0);
         assert_eq!(median(&[]), 0.0);
+    }
+
+    #[test]
+    fn percentiles_empty_yields_zeros() {
+        assert_eq!(percentiles(&mut [], &[0.5, 0.99]), vec![0.0, 0.0]);
+        assert_eq!(percentiles(&mut [1.0], &[]), Vec::<f64>::new());
+    }
+
+    #[test]
+    fn percentiles_singleton_answers_itself() {
+        assert_eq!(percentiles(&mut [7.5], &[0.0, 0.5, 0.95, 1.0]), vec![7.5; 4]);
+    }
+
+    #[test]
+    fn percentiles_interpolates_between_ranks() {
+        // rank q·(n−1): p50 of [1,2,3,4] sits halfway between 2 and 3.
+        let mut v = [4.0, 1.0, 3.0, 2.0];
+        let p = percentiles(&mut v, &[0.0, 0.5, 0.75, 1.0]);
+        assert_eq!(p, vec![1.0, 2.5, 3.25, 4.0]);
+        // Input is sorted in place.
+        assert_eq!(v, [1.0, 2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn percentiles_clamps_out_of_range_quantiles() {
+        let mut v = [2.0, 1.0];
+        assert_eq!(percentiles(&mut v, &[-0.5, 1.5]), vec![1.0, 2.0]);
     }
 }

@@ -1,0 +1,262 @@
+//! Serving-subsystem invariants (ISSUE 8 acceptance criteria):
+//!
+//! 1. **Fresh-snapshot exactness** — snapshot-served logits are
+//!    bitwise-identical to the exact full-neighborhood recursion for
+//!    GCN / SAGE-mean / SAGE-max, and reproduce `MiniBatchEngine`'s
+//!    `evaluate()` loss/accuracy to the last bit;
+//! 2. **100% deep-layer hit-rate** — snapshot mode answers every deep
+//!    source row from the frozen store and materializes strictly fewer
+//!    edges than exact mode;
+//! 3. **Worker-count determinism** — served logits depend only on
+//!    (snapshot version, target batch), not on how many server workers
+//!    raced over the queue;
+//! 4. **No torn reads** — under concurrent snapshot swaps, every response
+//!    matches exactly one snapshot version's serial output.
+
+use morphling::engine::{Engine, Mask};
+use morphling::graph::datasets;
+use morphling::kernels::activations::softmax_xent;
+use morphling::kernels::parallel::ExecPolicy;
+use morphling::model::Arch;
+use morphling::sampler::{MiniBatchConfig, MiniBatchEngine, SamplerScratch};
+use morphling::serve::{ServeJob, ServeMode, Server, ServerConfig, ServingSnapshot, SnapshotSlot};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+fn tiny_spec() -> morphling::graph::DatasetSpec {
+    morphling::graph::DatasetSpec {
+        name: "tiny-serve-it",
+        real_nodes: 0,
+        real_edges: 0,
+        real_features: 0,
+        nodes: 230,
+        edges: 1500,
+        features: 40,
+        classes: 5,
+        feat_sparsity: 0.0,
+        gamma: 2.4,
+        components: 1,
+    }
+}
+
+/// Train a small engine for `epochs` and freeze a snapshot of it.
+fn trained_snapshot(
+    ds: &morphling::graph::Dataset,
+    arch: Arch,
+    epochs: usize,
+    version: u64,
+) -> ServingSnapshot {
+    let cfg = MiniBatchConfig {
+        batch_size: ds.spec.nodes, // evaluate() runs as a single batch
+        fanouts: vec![3, 5],
+        prefetch: false,
+        cache: None,
+    };
+    let mut eng = MiniBatchEngine::paper_default(ds, arch, cfg, 17)
+        .expect("sampled-mode arch must construct");
+    for _ in 0..epochs {
+        eng.train_epoch(ds);
+    }
+    ServingSnapshot::build(ds, eng.params().clone(), 0, 17, version, ExecPolicy::serial())
+        .expect("snapshot build over a sampled-mode arch must succeed")
+}
+
+/// Ascending ids selected by a mask.
+fn mask_ids(mask: &[bool]) -> Vec<u32> {
+    mask.iter()
+        .enumerate()
+        .filter(|(_, &m)| m)
+        .map(|(u, _)| u as u32)
+        .collect()
+}
+
+#[test]
+fn snapshot_serving_is_bitwise_exact_per_arch() {
+    let ds = datasets::load(&tiny_spec());
+    for arch in [Arch::Gcn, Arch::SageMean, Arch::SageMax] {
+        let snap = trained_snapshot(&ds, arch, 2, 1);
+        let mut scratch = SamplerScratch::new(ds.spec.nodes);
+        let targets = mask_ids(&ds.val_mask);
+        assert!(!targets.is_empty(), "tiny dataset must have val nodes");
+
+        let served = snap.serve(&targets, ServeMode::Snapshot, &mut scratch);
+        let exact = snap.serve(&targets, ServeMode::Exact, &mut scratch);
+
+        // 1. bitwise-identical logits on a fresh snapshot
+        assert_eq!(served.logits.rows, targets.len());
+        assert_eq!(
+            served.logits.data, exact.logits.data,
+            "{arch:?}: snapshot-served logits must be bitwise-exact"
+        );
+        // 2. every deep row answered from the store, and strictly less work
+        assert!(served.cache_candidates > 0, "{arch:?}: deep rows must exist");
+        assert_eq!(served.cache_hits, served.cache_candidates);
+        assert_eq!(served.hit_rate(), 1.0, "{arch:?}: deep-layer hit-rate must be 100%");
+        assert_eq!(exact.cache_hits, 0, "exact mode never consults the store");
+        assert!(
+            served.sampled_edges < exact.sampled_edges,
+            "{arch:?}: snapshot mode must materialize fewer edges ({} vs {})",
+            served.sampled_edges,
+            exact.sampled_edges
+        );
+    }
+}
+
+#[test]
+fn snapshot_serving_reproduces_engine_evaluation() {
+    let ds = datasets::load(&tiny_spec());
+    let cfg = MiniBatchConfig {
+        batch_size: ds.spec.nodes,
+        fanouts: vec![3, 5],
+        prefetch: false,
+        cache: None,
+    };
+    let mut eng = MiniBatchEngine::paper_default(&ds, Arch::SageMean, cfg, 17)
+        .expect("sampled-mode arch must construct");
+    for _ in 0..2 {
+        eng.train_epoch(&ds);
+    }
+    let (eval_loss, eval_acc) = eng.evaluate(&ds, Mask::Val);
+
+    let snap = ServingSnapshot::build(&ds, eng.params().clone(), 0, 17, 1, ExecPolicy::serial())
+        .expect("snapshot build must succeed");
+    let targets = mask_ids(&ds.val_mask);
+    let mut scratch = SamplerScratch::new(ds.spec.nodes);
+    let served = snap.serve(&targets, ServeMode::Snapshot, &mut scratch);
+
+    // Same rows, same labels, same mask, same reduction arithmetic as the
+    // engine's single-batch evaluate() — bit-equality, not tolerance.
+    let labels: Vec<u32> = targets.iter().map(|&g| ds.labels[g as usize]).collect();
+    let all = vec![true; targets.len()];
+    let (l, a, n) = softmax_xent(&served.logits, &labels, &all, None);
+    assert_eq!(n, targets.len());
+    let loss = (l * n as f64) / n as f64;
+    let acc = (a * n as f64) / n as f64;
+    assert_eq!(loss, eval_loss, "served loss must equal evaluate() exactly");
+    assert_eq!(acc, eval_acc, "served accuracy must equal evaluate() exactly");
+}
+
+#[test]
+fn served_logits_invariant_across_worker_counts() {
+    let ds = datasets::load(&tiny_spec());
+    let snap = trained_snapshot(&ds, Arch::SageMean, 1, 1);
+    // A deterministic request stream: disjoint-ish target batches.
+    let requests: Vec<Vec<u32>> = (0..8u32)
+        .map(|i| {
+            let mut t: Vec<u32> = (0..16u32)
+                .map(|j| (i * 13 + j * 7) % ds.spec.nodes as u32)
+                .collect();
+            t.sort_unstable();
+            t.dedup();
+            t
+        })
+        .collect();
+    let mut per_workers: Vec<Vec<Vec<f32>>> = Vec::new();
+    for workers in [1usize, 4] {
+        let slot = Arc::new(SnapshotSlot::new(snap.clone()));
+        let server = Server::start(
+            Arc::clone(&slot),
+            &ServerConfig {
+                workers,
+                queue_cap: 2,
+                mode: ServeMode::Snapshot,
+            },
+        );
+        for (i, t) in requests.iter().enumerate() {
+            assert!(server.submit(ServeJob {
+                id: i as u64,
+                targets: t.clone(),
+            }));
+        }
+        let results = server.finish();
+        assert_eq!(results.len(), requests.len());
+        per_workers.push(
+            results
+                .into_iter()
+                .map(|r| {
+                    assert_eq!(r.response.version, 1);
+                    r.response.logits.data
+                })
+                .collect(),
+        );
+    }
+    assert_eq!(
+        per_workers[0], per_workers[1],
+        "served logits must be bitwise-invariant across worker counts"
+    );
+}
+
+#[test]
+fn snapshot_swap_never_tears_responses() {
+    let ds = datasets::load(&tiny_spec());
+    // Two versions with genuinely different parameters.
+    let v1 = trained_snapshot(&ds, Arch::SageMean, 1, 1);
+    let v2 = trained_snapshot(&ds, Arch::SageMean, 2, 2);
+    let requests: Vec<Vec<u32>> = (0..24u32)
+        .map(|i| {
+            let mut t: Vec<u32> = (0..12u32)
+                .map(|j| (i * 11 + j * 5) % ds.spec.nodes as u32)
+                .collect();
+            t.sort_unstable();
+            t.dedup();
+            t
+        })
+        .collect();
+    // Serial ground truth per (version, request).
+    let mut scratch = SamplerScratch::new(ds.spec.nodes);
+    let expect_v1: Vec<Vec<f32>> = requests
+        .iter()
+        .map(|t| v1.serve(t, ServeMode::Snapshot, &mut scratch).logits.data)
+        .collect();
+    let expect_v2: Vec<Vec<f32>> = requests
+        .iter()
+        .map(|t| v2.serve(t, ServeMode::Snapshot, &mut scratch).logits.data)
+        .collect();
+
+    let slot = Arc::new(SnapshotSlot::new(v1.clone()));
+    let server = Server::start(
+        Arc::clone(&slot),
+        &ServerConfig {
+            workers: 4,
+            queue_cap: 2,
+            mode: ServeMode::Snapshot,
+        },
+    );
+    let stop = Arc::new(AtomicBool::new(false));
+    let swapper = {
+        let slot = Arc::clone(&slot);
+        let stop = Arc::clone(&stop);
+        std::thread::spawn(move || {
+            let mut flip = false;
+            while !stop.load(Ordering::Relaxed) {
+                slot.swap(if flip { v1.clone() } else { v2.clone() });
+                flip = !flip;
+                std::thread::yield_now();
+            }
+        })
+    };
+    for (i, t) in requests.iter().enumerate() {
+        assert!(server.submit(ServeJob {
+            id: i as u64,
+            targets: t.clone(),
+        }));
+    }
+    let results = server.finish();
+    stop.store(true, Ordering::Relaxed);
+    swapper.join().expect("swapper thread panicked");
+
+    assert_eq!(results.len(), requests.len());
+    for r in &results {
+        let id = r.id as usize;
+        let expected = match r.response.version {
+            1 => &expect_v1[id],
+            2 => &expect_v2[id],
+            v => panic!("response carries unknown snapshot version {v}"),
+        };
+        assert_eq!(
+            &r.response.logits.data, expected,
+            "request {id}: response must match its snapshot version (v{}) bit-for-bit",
+            r.response.version
+        );
+    }
+}
