@@ -56,7 +56,7 @@ fn run_cfg(
         cache,
         ..Default::default()
     };
-    let r = train_distributed(ds, &cfg);
+    let r = train_distributed(ds, &cfg).expect("dist run");
     let comm: f64 = r.ranks.iter().map(|s| s.exposed_comm_secs).sum();
     let skip = usize::from(r.epoch_secs.len() > 1);
     let mut tail = r.epoch_secs[skip..].to_vec();

@@ -17,6 +17,7 @@
 mod common;
 
 use common::{epoch_time, probe, reps_for};
+use morphling::ckpt::CkptStore;
 use morphling::engine::native::NativeEngine;
 use morphling::engine::Engine;
 use morphling::graph::datasets;
@@ -70,8 +71,27 @@ fn main() {
             .chain(batches.iter().map(|b| format!("peak b={b}")))
             .collect::<Vec<_>>(),
     );
-    // JSON records: (dataset, mode, batch, epoch_secs, sampled eps, peak)
-    let mut records: Vec<(String, &'static str, usize, f64, f64, usize)> = Vec::new();
+    // JSON records: (dataset, mode, batch, epoch_secs, sampled eps, peak,
+    // ckpt_bytes, ckpt_secs) — the last two measure one crash-consistent
+    // checkpoint commit (serialize + write + fsync + rename) per config.
+    let mut records: Vec<(String, &'static str, usize, f64, f64, usize, u64, f64)> = Vec::new();
+    let ckpt_dir = std::env::temp_dir().join("morphling-bench-ckpt");
+    let store = CkptStore::new(&ckpt_dir).unwrap_or_else(|e| {
+        eprintln!("{e}");
+        std::process::exit(2);
+    });
+    let measure_ckpt = |eng: &dyn Engine| -> (u64, f64) {
+        let mut ck = eng
+            .export_ckpt()
+            .expect("native and mini-batch engines both export checkpoints");
+        ck.epoch = 1;
+        ck.seed = 42;
+        let st = store.save(&ck).unwrap_or_else(|e| {
+            eprintln!("{e}");
+            std::process::exit(2);
+        });
+        (st.bytes, st.secs)
+    };
 
     for name in &names {
         let Some(ds) = datasets::load_by_name(name) else {
@@ -83,7 +103,8 @@ fn main() {
         let (w, r) = budget(p);
         let t_full = epoch_time(&mut full, &ds, w, r);
         let peak_full = full.peak_bytes();
-        records.push((name.clone(), "full", 0, t_full, 0.0, peak_full));
+        let (ckb, cks) = measure_ckpt(&full);
+        records.push((name.clone(), "full", 0, t_full, 0.0, peak_full, ckb, cks));
         drop(full);
 
         let mut t_mb = Vec::with_capacity(batches.len());
@@ -107,7 +128,8 @@ fn main() {
             let secs = epoch_time(&mut eng, &ds, w, r);
             let eps = eng.sampled_edges_last_epoch() as f64 / secs.max(1e-12);
             let peak = eng.peak_bytes();
-            records.push((name.clone(), "minibatch", b, secs, eps, peak));
+            let (ckb, cks) = measure_ckpt(&eng);
+            records.push((name.clone(), "minibatch", b, secs, eps, peak, ckb, cks));
             t_mb.push(secs);
             eps_mb.push(eps);
             peak_mb.push(peak);
@@ -132,12 +154,13 @@ fn main() {
     if let Some(path) = args.get("json") {
         let body: Vec<String> = records
             .iter()
-            .map(|(ds, mode, b, secs, eps, peak)| {
+            .map(|(ds, mode, b, secs, eps, peak, ckb, cks)| {
                 format!(
-                    "{{\"dataset\":\"{ds}\",\"mode\":\"{mode}\",\"batch_size\":{b},\"threads\":{threads},\"epoch_secs\":{secs:.9},\"sampled_edges_per_sec\":{eps:.1},\"peak_bytes\":{peak}}}"
+                    "{{\"dataset\":\"{ds}\",\"mode\":\"{mode}\",\"batch_size\":{b},\"threads\":{threads},\"epoch_secs\":{secs:.9},\"sampled_edges_per_sec\":{eps:.1},\"peak_bytes\":{peak},\"ckpt_bytes\":{ckb},\"ckpt_secs\":{cks:.9}}}"
                 )
             })
             .collect();
         common::write_json_records(path, &body);
     }
+    let _ = std::fs::remove_dir_all(&ckpt_dir);
 }

@@ -193,6 +193,31 @@ impl HistCache {
             .sum()
     }
 
+    /// Raw read access to one level's embedding table + epoch stamps — the
+    /// checkpoint writer's serialization surface
+    /// ([`crate::ckpt::Checkpoint`] stores every level verbatim so a
+    /// resumed run's gate/stitch decisions are bitwise-identical).
+    pub fn level_data(&self, level: usize) -> (&Matrix, &[u32]) {
+        let lv = self.level(level);
+        (&lv.emb, &lv.stamp)
+    }
+
+    /// Rebuild a store from checkpointed `(embedding, stamps)` levels —
+    /// the inverse of [`HistCache::level_data`]. Stamp vectors must match
+    /// their embedding row counts (the deserializer reads them that way).
+    pub fn from_parts(staleness: u64, levels: Vec<(Matrix, Vec<u32>)>) -> HistCache {
+        HistCache {
+            staleness,
+            levels: levels
+                .into_iter()
+                .map(|(emb, stamp)| {
+                    debug_assert_eq!(emb.rows, stamp.len());
+                    LevelHist { emb, stamp }
+                })
+                .collect(),
+        }
+    }
+
     /// Byte footprint of the store (embedding tables + epoch stamps) —
     /// the static region charged to the engine's live-set model.
     pub fn nbytes(&self) -> usize {
@@ -311,6 +336,26 @@ mod tests {
         assert_eq!(out.row(0), &[0., 0., 0.]); // untouched
         assert_eq!(out.row(3), &[0., 0., 0.]);
         assert_eq!(stale, 4, "two rows of age 2 each");
+    }
+
+    #[test]
+    fn level_data_from_parts_roundtrip() {
+        let mut c = HistCache::new(5, &[3, 2], 2);
+        let h = Matrix::from_vec(2, 3, vec![1., 2., 3., 4., 5., 6.]);
+        c.push(0, &[4, 2], &h, 3);
+        let levels: Vec<(Matrix, Vec<u32>)> = (0..c.num_levels())
+            .map(|l| {
+                let (emb, stamp) = c.level_data(l);
+                (emb.clone(), stamp.to_vec())
+            })
+            .collect();
+        let back = HistCache::from_parts(c.staleness(), levels);
+        assert_eq!(back.staleness(), 2);
+        assert_eq!(back.num_levels(), 2);
+        assert_eq!(back.row(0, 4), c.row(0, 4));
+        assert_eq!(back.stamp(0, 2), 3);
+        // Gate decisions from the rebuilt store match the original.
+        assert_eq!(back.gate(4).fresh_count(0), c.gate(4).fresh_count(0));
     }
 
     #[test]

@@ -1,0 +1,779 @@
+//! Crash-consistent checkpoint/restore — versioned binary snapshots of the
+//! training state (parameters, Adam moments + step count, the epoch cursor,
+//! and historical-cache stores) with atomic-rename durability and
+//! CRC-verified loading.
+//!
+//! **Write protocol** (crash consistency). [`CkptStore::save`] serializes
+//! into `ckpt-<epoch>.tmp`, `fsync`s the file, atomically renames it to
+//! `ckpt-<epoch>.mck`, then `fsync`s the directory so the rename itself is
+//! durable. A crash at any point leaves either the previous checkpoint set
+//! untouched or a stray `.tmp` the loader ignores — never a half-written
+//! `.mck`.
+//!
+//! **Format** (version 1). A 28-byte header — `MORPHCK1` magic, format
+//! version, field count, payload length, payload CRC32 — followed by
+//! length-prefixed *named* fields (`meta`, `params`, `opt.meta`, `opt.m`,
+//! `opt.v`, `cache`), each carrying its own CRC32. The double CRC buys
+//! precise diagnostics: the header CRC detects any damage, the per-field
+//! CRCs name *which* field is damaged, so [`CkptStore::load_path`] errors
+//! always name both the file and the field
+//! (`checkpoint …/ckpt-000002.mck: field "opt.m": CRC mismatch …`).
+//!
+//! **Fallback.** [`CkptStore::latest_good`] scans the directory newest
+//! first, skips corrupt or truncated files (collecting one named rejection
+//! message per skip), and returns the newest checkpoint that verifies —
+//! i.e. the previous good checkpoint when the latest was damaged.
+//!
+//! **Determinism contract.** A checkpoint captures everything the epoch
+//! loop consumes: parameters, optimizer moments and step count, the
+//! completed-epoch cursor (the shuffle RNG is epoch-keyed and stateless, so
+//! the cursor alone restores the sampling schedule), and every
+//! historical-cache store with its epoch stamps (one per virtual shard in
+//! the distributed sampled mode). Resuming from epoch `E` therefore replays
+//! epochs `E..N` bit-for-bit: `tests/ckpt.rs` pins kill-at-every-boundary →
+//! resume ≡ the uninterrupted run at any `--threads`×`--world`.
+
+use crate::cache::HistCache;
+use crate::kernels::update::AdamParams;
+use crate::model::{Arch, GnnParams, LayerParams, ModelConfig};
+use crate::optim::{OptKind, OptimizerState};
+use crate::tensor::Matrix;
+use crate::util::Timer;
+use std::fs;
+use std::io::Write as _;
+use std::path::{Path, PathBuf};
+
+/// File magic: "MORPHCK1".
+const MAGIC: &[u8; 8] = b"MORPHCK1";
+/// Current format version.
+const FORMAT_VERSION: u32 = 1;
+/// Header bytes: magic(8) + version(4) + field_count(4) + payload_len(8) +
+/// payload_crc(4).
+const HEADER_LEN: usize = 28;
+
+/// IEEE CRC-32 lookup table (polynomial `0xEDB88320`), built at compile
+/// time — the same checksum zlib/PNG use, hand-rolled because the crate is
+/// dependency-free.
+const CRC_TABLE: [u32; 256] = {
+    let mut table = [0u32; 256];
+    let mut i = 0;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut k = 0;
+        while k < 8 {
+            c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            k += 1;
+        }
+        table[i] = c;
+        i += 1;
+    }
+    table
+};
+
+/// IEEE CRC-32 of `data`.
+pub fn crc32(data: &[u8]) -> u32 {
+    let mut c = 0xFFFF_FFFFu32;
+    for &b in data {
+        c = CRC_TABLE[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+    }
+    c ^ 0xFFFF_FFFF
+}
+
+/// One resumable training snapshot — the unit [`CkptStore`] saves/loads.
+#[derive(Clone, Debug)]
+pub struct Checkpoint {
+    /// Completed epochs at save time; resume restarts the loop here.
+    pub epoch: u64,
+    /// Seed material of the run. Validated on resume: restoring under a
+    /// different seed would silently break the bitwise-resume contract.
+    pub seed: u64,
+    /// Model parameters (gradient buffers are not stored; zeroed on load).
+    pub params: GnnParams,
+    /// Optimizer state: kind, hyperparameters, step count, moment buffers.
+    pub opt: OptimizerState,
+    /// Historical-cache stores with epoch stamps: empty = cache off, one
+    /// entry for the serial/minibatch engines, one per virtual shard for
+    /// the distributed sampled mode (shard-index order).
+    pub caches: Vec<HistCache>,
+}
+
+/// Outcome of one [`CkptStore::save`]: where it landed and what it cost
+/// (surfaced in bench `--json` records and the train report).
+#[derive(Clone, Debug)]
+pub struct SaveStats {
+    /// Final (renamed) checkpoint path.
+    pub path: PathBuf,
+    /// Serialized size in bytes.
+    pub bytes: u64,
+    /// Wall-clock seconds for serialize + write + fsync + rename.
+    pub secs: f64,
+}
+
+/// Result of scanning a checkpoint directory for the newest loadable
+/// snapshot ([`CkptStore::latest_good`]).
+#[derive(Debug, Default)]
+pub struct LatestGood {
+    /// Newest checkpoint that passed CRC + structural validation.
+    pub found: Option<(PathBuf, Checkpoint)>,
+    /// One rejection message (naming file and field) per corrupt,
+    /// truncated, or unreadable file skipped on the way.
+    pub skipped: Vec<String>,
+}
+
+/// A directory of checkpoints: `ckpt-<epoch>.mck` files written with the
+/// temp + fsync + rename protocol (module docs).
+#[derive(Clone, Debug)]
+pub struct CkptStore {
+    dir: PathBuf,
+}
+
+impl CkptStore {
+    /// Open (creating if needed) a checkpoint directory.
+    pub fn new(dir: impl Into<PathBuf>) -> Result<CkptStore, String> {
+        let dir = dir.into();
+        fs::create_dir_all(&dir)
+            .map_err(|e| format!("checkpoint dir {}: create failed: {e}", dir.display()))?;
+        Ok(CkptStore { dir })
+    }
+
+    /// The directory this store writes into.
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Canonical path for the checkpoint at `epoch`.
+    pub fn path_for(&self, epoch: u64) -> PathBuf {
+        self.dir.join(format!("ckpt-{epoch:06}.mck"))
+    }
+
+    /// Serialize and durably persist `ck`: write `ckpt-<epoch>.tmp`, fsync,
+    /// rename to `ckpt-<epoch>.mck`, fsync the directory.
+    pub fn save(&self, ck: &Checkpoint) -> Result<SaveStats, String> {
+        let t = Timer::start();
+        let bytes = encode(ck);
+        let final_path = self.path_for(ck.epoch);
+        let tmp_path = self.dir.join(format!("ckpt-{:06}.tmp", ck.epoch));
+        let err = |stage: &str, e: std::io::Error| {
+            format!("checkpoint {}: {stage} failed: {e}", final_path.display())
+        };
+        let mut f = fs::File::create(&tmp_path).map_err(|e| err("create temp", e))?;
+        f.write_all(&bytes).map_err(|e| err("write", e))?;
+        f.sync_all().map_err(|e| err("fsync", e))?;
+        drop(f);
+        fs::rename(&tmp_path, &final_path).map_err(|e| err("rename", e))?;
+        // fsync the directory so the rename itself survives a crash.
+        if let Ok(d) = fs::File::open(&self.dir) {
+            let _ = d.sync_all();
+        }
+        Ok(SaveStats {
+            path: final_path,
+            bytes: bytes.len() as u64,
+            secs: t.secs(),
+        })
+    }
+
+    /// Load and CRC-verify one checkpoint file. Errors name the file and,
+    /// where identifiable, the damaged field.
+    pub fn load_path(path: &Path) -> Result<Checkpoint, String> {
+        let bytes = fs::read(path)
+            .map_err(|e| format!("checkpoint {}: read failed: {e}", path.display()))?;
+        decode(&bytes).map_err(|e| format!("checkpoint {}: {e}", path.display()))
+    }
+
+    /// Scan the directory for the newest checkpoint that loads and
+    /// verifies, skipping (and naming) corrupt or truncated files — the
+    /// fallback path after a crash tore the most recent write.
+    pub fn latest_good(&self) -> LatestGood {
+        let mut out = LatestGood::default();
+        let Ok(entries) = fs::read_dir(&self.dir) else {
+            return out;
+        };
+        let mut candidates: Vec<(u64, PathBuf)> = entries
+            .flatten()
+            .filter_map(|e| {
+                let p = e.path();
+                let name = p.file_name()?.to_str()?;
+                let epoch = name
+                    .strip_prefix("ckpt-")?
+                    .strip_suffix(".mck")?
+                    .parse::<u64>()
+                    .ok()?;
+                Some((epoch, p))
+            })
+            .collect();
+        candidates.sort_by(|a, b| b.0.cmp(&a.0));
+        for (_, path) in candidates {
+            match CkptStore::load_path(&path) {
+                Ok(ck) => {
+                    out.found = Some((path, ck));
+                    break;
+                }
+                Err(msg) => out.skipped.push(msg),
+            }
+        }
+        out
+    }
+}
+
+/// Deterministically damage one payload byte of a checkpoint file (the
+/// `corrupt-ckpt@n=…` fault): XOR the middle payload byte with `0xFF` so
+/// the header CRC — and exactly one field CRC — stop verifying.
+pub fn corrupt_payload_byte(path: &Path) -> Result<(), String> {
+    let mut bytes =
+        fs::read(path).map_err(|e| format!("corrupt {}: read failed: {e}", path.display()))?;
+    if bytes.len() <= HEADER_LEN {
+        return Err(format!(
+            "corrupt {}: file too short ({} bytes) to hold a payload",
+            path.display(),
+            bytes.len()
+        ));
+    }
+    let at = HEADER_LEN + (bytes.len() - HEADER_LEN) / 2;
+    bytes[at] ^= 0xFF;
+    fs::write(path, &bytes).map_err(|e| format!("corrupt {}: write failed: {e}", path.display()))
+}
+
+// ---------------------------------------------------------------------------
+// encoding
+// ---------------------------------------------------------------------------
+
+fn put_u16(out: &mut Vec<u8>, v: u16) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+fn put_f32(out: &mut Vec<u8>, v: f32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+fn put_f32s(out: &mut Vec<u8>, vs: &[f32]) {
+    out.reserve(vs.len() * 4);
+    for &v in vs {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+}
+fn put_u32s(out: &mut Vec<u8>, vs: &[u32]) {
+    out.reserve(vs.len() * 4);
+    for &v in vs {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+}
+fn put_str(out: &mut Vec<u8>, s: &str) {
+    put_u16(out, s.len() as u16);
+    out.extend_from_slice(s.as_bytes());
+}
+
+/// Append one named, CRC-framed field to the payload buffer.
+fn push_field(payload: &mut Vec<u8>, name: &str, body: &[u8]) {
+    put_str(payload, name);
+    put_u64(payload, body.len() as u64);
+    put_u32(payload, crc32(body));
+    payload.extend_from_slice(body);
+}
+
+fn opt_kind_code(k: OptKind) -> u8 {
+    match k {
+        OptKind::Sgd => 0,
+        OptKind::Adam => 1,
+        OptKind::AdamW => 2,
+    }
+}
+
+fn opt_kind_from_code(c: u8) -> Result<OptKind, String> {
+    match c {
+        0 => Ok(OptKind::Sgd),
+        1 => Ok(OptKind::Adam),
+        2 => Ok(OptKind::AdamW),
+        _ => Err(format!("unknown optimizer kind code {c}")),
+    }
+}
+
+/// Serialize a checkpoint into the versioned on-disk format (module docs).
+fn encode(ck: &Checkpoint) -> Vec<u8> {
+    let mut payload = Vec::new();
+    let mut nfields = 0u32;
+
+    // --- meta: arch, dims, epoch, seed ---
+    let mut body = Vec::new();
+    put_str(&mut body, ck.params.config.arch.name());
+    put_u16(&mut body, ck.params.config.dims.len() as u16);
+    for &d in &ck.params.config.dims {
+        put_u64(&mut body, d as u64);
+    }
+    put_u64(&mut body, ck.epoch);
+    put_u64(&mut body, ck.seed);
+    push_field(&mut payload, "meta", &body);
+    nfields += 1;
+
+    // --- params: per layer w / optional w_self / b ---
+    let mut body = Vec::new();
+    put_u32(&mut body, ck.params.layers.len() as u32);
+    for l in &ck.params.layers {
+        put_u32(&mut body, l.w.rows as u32);
+        put_u32(&mut body, l.w.cols as u32);
+        put_f32s(&mut body, &l.w.data);
+        match &l.w_self {
+            Some(ws) => {
+                body.push(1);
+                put_u32(&mut body, ws.rows as u32);
+                put_u32(&mut body, ws.cols as u32);
+                put_f32s(&mut body, &ws.data);
+            }
+            None => body.push(0),
+        }
+        put_u32(&mut body, l.b.len() as u32);
+        put_f32s(&mut body, &l.b);
+    }
+    push_field(&mut payload, "params", &body);
+    nfields += 1;
+
+    // --- opt.meta: kind, hyperparams, step, buffer lengths ---
+    let mut body = Vec::new();
+    body.push(opt_kind_code(ck.opt.kind));
+    put_f32(&mut body, ck.opt.momentum);
+    put_f32(&mut body, ck.opt.hp.lr);
+    put_f32(&mut body, ck.opt.hp.beta1);
+    put_f32(&mut body, ck.opt.hp.beta2);
+    put_f32(&mut body, ck.opt.hp.eps);
+    put_f32(&mut body, ck.opt.hp.weight_decay);
+    put_u64(&mut body, ck.opt.step);
+    put_u32(&mut body, ck.opt.m.len() as u32);
+    for b in &ck.opt.m {
+        put_u64(&mut body, b.len() as u64);
+    }
+    push_field(&mut payload, "opt.meta", &body);
+    nfields += 1;
+
+    // --- opt.m / opt.v: concatenated moment buffers ---
+    let mut body = Vec::new();
+    for b in &ck.opt.m {
+        put_f32s(&mut body, b);
+    }
+    push_field(&mut payload, "opt.m", &body);
+    nfields += 1;
+    let mut body = Vec::new();
+    for b in &ck.opt.v {
+        put_f32s(&mut body, b);
+    }
+    push_field(&mut payload, "opt.v", &body);
+    nfields += 1;
+
+    // --- cache: per-shard historical stores (omitted when cache off) ---
+    if !ck.caches.is_empty() {
+        let mut body = Vec::new();
+        put_u32(&mut body, ck.caches.len() as u32);
+        put_u64(&mut body, ck.caches[0].staleness());
+        for c in &ck.caches {
+            put_u32(&mut body, c.num_levels() as u32);
+            for lvl in 0..c.num_levels() {
+                let (emb, stamps) = c.level_data(lvl);
+                put_u32(&mut body, emb.rows as u32);
+                put_u32(&mut body, emb.cols as u32);
+                put_f32s(&mut body, &emb.data);
+                put_u32s(&mut body, stamps);
+            }
+        }
+        push_field(&mut payload, "cache", &body);
+        nfields += 1;
+    }
+
+    let mut out = Vec::with_capacity(HEADER_LEN + payload.len());
+    out.extend_from_slice(MAGIC);
+    put_u32(&mut out, FORMAT_VERSION);
+    put_u32(&mut out, nfields);
+    put_u64(&mut out, payload.len() as u64);
+    put_u32(&mut out, crc32(&payload));
+    out.extend_from_slice(&payload);
+    out
+}
+
+// ---------------------------------------------------------------------------
+// decoding
+// ---------------------------------------------------------------------------
+
+/// Bounds-checked little-endian cursor whose errors name the field being
+/// read — the source of the "file and field" diagnostics.
+struct Cur<'a> {
+    buf: &'a [u8],
+    pos: usize,
+    field: &'a str,
+}
+
+impl<'a> Cur<'a> {
+    fn new(buf: &'a [u8], field: &'a str) -> Cur<'a> {
+        Cur { buf, pos: 0, field }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8], String> {
+        if self.pos + n > self.buf.len() {
+            return Err(format!(
+                "field \"{}\": truncated (need {} bytes at offset {}, have {})",
+                self.field,
+                n,
+                self.pos,
+                self.buf.len() - self.pos
+            ));
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8, String> {
+        Ok(self.take(1)?[0])
+    }
+    fn u16(&mut self) -> Result<u16, String> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+    }
+    fn u32(&mut self) -> Result<u32, String> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+    fn u64(&mut self) -> Result<u64, String> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+    fn f32(&mut self) -> Result<f32, String> {
+        Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+    fn f32s(&mut self, n: usize) -> Result<Vec<f32>, String> {
+        let raw = self.take(n * 4)?;
+        Ok(raw
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+    fn u32s(&mut self, n: usize) -> Result<Vec<u32>, String> {
+        let raw = self.take(n * 4)?;
+        Ok(raw
+            .chunks_exact(4)
+            .map(|c| u32::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+    fn str(&mut self) -> Result<String, String> {
+        let n = self.u16()? as usize;
+        let raw = self.take(n)?;
+        String::from_utf8(raw.to_vec())
+            .map_err(|_| format!("field \"{}\": invalid utf-8 string", self.field))
+    }
+}
+
+/// Split the payload into `(name, body)` fields, verifying each field CRC.
+fn split_fields(payload: &[u8]) -> Result<Vec<(String, &[u8])>, String> {
+    let mut fields = Vec::new();
+    let mut cur = Cur::new(payload, "<frame>");
+    while cur.pos < payload.len() {
+        let name = cur.str()?;
+        let body_len = cur.u64()? as usize;
+        let stored_crc = cur.u32()?;
+        // Re-borrow with the field's own name so truncation inside the body
+        // is attributed to it.
+        if cur.pos + body_len > payload.len() {
+            return Err(format!(
+                "field \"{name}\": truncated (need {body_len} body bytes, have {})",
+                payload.len() - cur.pos
+            ));
+        }
+        let body = &payload[cur.pos..cur.pos + body_len];
+        cur.pos += body_len;
+        let computed = crc32(body);
+        if computed != stored_crc {
+            return Err(format!(
+                "field \"{name}\": CRC mismatch (stored {stored_crc:#010x}, computed {computed:#010x})"
+            ));
+        }
+        fields.push((name, body));
+    }
+    Ok(fields)
+}
+
+/// Decode one checkpoint; errors are file-relative (the caller prefixes the
+/// path) and name the damaged field.
+fn decode(bytes: &[u8]) -> Result<Checkpoint, String> {
+    if bytes.len() < HEADER_LEN {
+        return Err(format!(
+            "truncated header ({} bytes, need {HEADER_LEN})",
+            bytes.len()
+        ));
+    }
+    if &bytes[..8] != MAGIC {
+        return Err("bad magic (not a Morphling checkpoint)".to_string());
+    }
+    let mut hdr = Cur::new(&bytes[8..HEADER_LEN], "<header>");
+    let version = hdr.u32()?;
+    if version != FORMAT_VERSION {
+        return Err(format!(
+            "unsupported format version {version} (supported: {FORMAT_VERSION})"
+        ));
+    }
+    let nfields = hdr.u32()? as usize;
+    let payload_len = hdr.u64()? as usize;
+    let payload_crc = hdr.u32()?;
+    let avail = bytes.len() - HEADER_LEN;
+    let payload = &bytes[HEADER_LEN..];
+    if avail < payload_len {
+        // Walk what we have to attribute the truncation to a field.
+        let field_err = split_fields(payload).err().unwrap_or_else(|| {
+            format!("truncated payload (header declares {payload_len} bytes, file has {avail})")
+        });
+        return Err(field_err);
+    }
+    let payload = &payload[..payload_len];
+    if crc32(payload) != payload_crc {
+        // Header CRC failed: walk the fields to name the damaged one.
+        match split_fields(payload) {
+            Err(field_err) => return Err(field_err),
+            Ok(_) => {
+                return Err(format!(
+                    "payload CRC mismatch (stored {payload_crc:#010x}, computed {:#010x}) \
+                     outside any field body (damaged framing)",
+                    crc32(payload)
+                ))
+            }
+        }
+    }
+    let fields = split_fields(payload)?;
+    if fields.len() != nfields {
+        return Err(format!(
+            "field count mismatch (header declares {nfields}, payload has {})",
+            fields.len()
+        ));
+    }
+    let get = |name: &str| -> Result<&[u8], String> {
+        fields
+            .iter()
+            .find(|(n, _)| n.as_str() == name)
+            .map(|(_, b)| *b)
+            .ok_or_else(|| format!("missing field \"{name}\""))
+    };
+
+    // --- meta ---
+    let mut c = Cur::new(get("meta")?, "meta");
+    let arch_name = c.str()?;
+    let arch = Arch::parse(&arch_name)
+        .ok_or_else(|| format!("field \"meta\": unknown arch \"{arch_name}\""))?;
+    let ndims = c.u16()? as usize;
+    let mut dims = Vec::with_capacity(ndims);
+    for _ in 0..ndims {
+        dims.push(c.u64()? as usize);
+    }
+    let epoch = c.u64()?;
+    let seed = c.u64()?;
+
+    // --- params ---
+    let mut c = Cur::new(get("params")?, "params");
+    let nlayers = c.u32()? as usize;
+    let mut layers = Vec::with_capacity(nlayers);
+    for _ in 0..nlayers {
+        let (rows, cols) = (c.u32()? as usize, c.u32()? as usize);
+        let w = Matrix::from_vec(rows, cols, c.f32s(rows * cols)?);
+        let w_self = if c.u8()? == 1 {
+            let (r, co) = (c.u32()? as usize, c.u32()? as usize);
+            Some(Matrix::from_vec(r, co, c.f32s(r * co)?))
+        } else {
+            None
+        };
+        let blen = c.u32()? as usize;
+        let b = c.f32s(blen)?;
+        let (dr, dc) = (w.rows, w.cols);
+        let ds = w_self.as_ref().map(|m| (m.rows, m.cols));
+        layers.push(LayerParams {
+            w,
+            w_self,
+            b,
+            dw: Matrix::zeros(dr, dc),
+            dw_self: ds.map(|(r, co)| Matrix::zeros(r, co)),
+            db: vec![0.0; blen],
+        });
+    }
+    let params = GnnParams {
+        config: ModelConfig { arch, dims },
+        layers,
+    };
+
+    // --- opt ---
+    let mut c = Cur::new(get("opt.meta")?, "opt.meta");
+    let kind =
+        opt_kind_from_code(c.u8()?).map_err(|e| format!("field \"opt.meta\": {e}"))?;
+    let momentum = c.f32()?;
+    let hp = AdamParams {
+        lr: c.f32()?,
+        beta1: c.f32()?,
+        beta2: c.f32()?,
+        eps: c.f32()?,
+        weight_decay: c.f32()?,
+    };
+    let step = c.u64()?;
+    let nbuf = c.u32()? as usize;
+    let mut lens = Vec::with_capacity(nbuf);
+    for _ in 0..nbuf {
+        lens.push(c.u64()? as usize);
+    }
+    let mut c = Cur::new(get("opt.m")?, "opt.m");
+    let m: Vec<Vec<f32>> = lens
+        .iter()
+        .map(|&n| c.f32s(n))
+        .collect::<Result<_, _>>()?;
+    let mut c = Cur::new(get("opt.v")?, "opt.v");
+    let v: Vec<Vec<f32>> = lens
+        .iter()
+        .map(|&n| c.f32s(n))
+        .collect::<Result<_, _>>()?;
+    let opt = OptimizerState {
+        kind,
+        momentum,
+        hp,
+        step,
+        m,
+        v,
+    };
+
+    // --- cache (optional) ---
+    let mut caches = Vec::new();
+    if let Ok(body) = get("cache") {
+        let mut c = Cur::new(body, "cache");
+        let nshards = c.u32()? as usize;
+        let staleness = c.u64()?;
+        for _ in 0..nshards {
+            let nlevels = c.u32()? as usize;
+            let mut levels = Vec::with_capacity(nlevels);
+            for _ in 0..nlevels {
+                let (rows, cols) = (c.u32()? as usize, c.u32()? as usize);
+                let emb = Matrix::from_vec(rows, cols, c.f32s(rows * cols)?);
+                let stamps = c.u32s(rows)?;
+                levels.push((emb, stamps));
+            }
+            caches.push(HistCache::from_parts(staleness, levels));
+        }
+    }
+
+    Ok(Checkpoint {
+        epoch,
+        seed,
+        params,
+        opt,
+        caches,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::optim::Optimizer;
+    use crate::util::Rng;
+
+    fn sample_ckpt(arch: Arch) -> Checkpoint {
+        let mut rng = Rng::new(7);
+        let cfg = ModelConfig::paper_default(arch, 12, 5);
+        let mut params = GnnParams::init(&cfg, &mut rng);
+        let mut opt = Optimizer::paper_default(&mut params);
+        // Make the optimizer state non-trivial.
+        for l in params.layers.iter_mut() {
+            l.dw.data.iter_mut().for_each(|g| *g = 0.25);
+        }
+        opt.step(&mut params);
+        let mut cache = HistCache::new(6, &[4, 4], 2);
+        let h = Matrix::from_vec(1, 4, vec![1., 2., 3., 4.]);
+        cache.push(0, &[3], &h, 2);
+        Checkpoint {
+            epoch: 2,
+            seed: 42,
+            params,
+            opt: opt.export_state(),
+            caches: vec![cache],
+        }
+    }
+
+    #[test]
+    fn encode_decode_roundtrip_bitwise() {
+        for arch in [Arch::Gcn, Arch::SageMean] {
+            let ck = sample_ckpt(arch);
+            let bytes = encode(&ck);
+            let back = decode(&bytes).expect("decode");
+            assert_eq!(back.epoch, ck.epoch);
+            assert_eq!(back.seed, ck.seed);
+            assert_eq!(back.params.config.dims, ck.params.config.dims);
+            for (a, b) in back.params.layers.iter().zip(&ck.params.layers) {
+                assert_eq!(a.w.data, b.w.data);
+                assert_eq!(
+                    a.w_self.as_ref().map(|m| &m.data),
+                    b.w_self.as_ref().map(|m| &m.data)
+                );
+                assert_eq!(a.b, b.b);
+            }
+            assert_eq!(back.opt.step, ck.opt.step);
+            assert_eq!(back.opt.m, ck.opt.m);
+            assert_eq!(back.opt.v, ck.opt.v);
+            assert_eq!(back.caches.len(), 1);
+            assert_eq!(back.caches[0].row(0, 3), ck.caches[0].row(0, 3));
+            assert_eq!(back.caches[0].stamp(0, 3), 2);
+        }
+    }
+
+    #[test]
+    fn bitflip_names_field() {
+        let ck = sample_ckpt(Arch::Gcn);
+        let mut bytes = encode(&ck);
+        // Find the opt.m field body and flip a byte inside it.
+        let marker = b"opt.m";
+        let at = bytes
+            .windows(marker.len())
+            .position(|w| w == marker)
+            .expect("field name present")
+            + marker.len()
+            + 8
+            + 4
+            + 2; // len + crc + 2 bytes into the body
+        bytes[at] ^= 0x01;
+        let err = decode(&bytes).expect_err("corrupt must be rejected");
+        assert!(err.contains("opt.m"), "error must name the field: {err}");
+        assert!(err.contains("CRC mismatch"), "error: {err}");
+    }
+
+    #[test]
+    fn truncation_names_field() {
+        let ck = sample_ckpt(Arch::Gcn);
+        let bytes = encode(&ck);
+        let err = decode(&bytes[..bytes.len() - 10]).expect_err("truncated must be rejected");
+        assert!(err.contains("truncated"), "error: {err}");
+        assert!(err.contains("field"), "error must name a field: {err}");
+    }
+
+    #[test]
+    fn bad_magic_and_version() {
+        let ck = sample_ckpt(Arch::Gcn);
+        let mut bytes = encode(&ck);
+        bytes[0] = b'X';
+        assert!(decode(&bytes).expect_err("magic").contains("bad magic"));
+        let mut bytes = encode(&ck);
+        bytes[8] = 99;
+        assert!(decode(&bytes)
+            .expect_err("version")
+            .contains("unsupported format version"));
+    }
+
+    #[test]
+    fn store_save_load_and_fallback() {
+        let dir = std::env::temp_dir().join("morphling-ckpt-unit");
+        let _ = fs::remove_dir_all(&dir);
+        let store = CkptStore::new(&dir).expect("store");
+        let mut ck = sample_ckpt(Arch::Gcn);
+        ck.epoch = 1;
+        store.save(&ck).expect("save e1");
+        ck.epoch = 2;
+        let st = store.save(&ck).expect("save e2");
+        assert!(st.bytes > HEADER_LEN as u64);
+        // Corrupt the newest; latest_good must fall back to epoch 1 and
+        // name the rejected file.
+        corrupt_payload_byte(&st.path).expect("corrupt");
+        let lg = store.latest_good();
+        let (path, found) = lg.found.expect("fallback to previous good");
+        assert_eq!(found.epoch, 1);
+        assert!(path.to_string_lossy().contains("ckpt-000001"));
+        assert_eq!(lg.skipped.len(), 1);
+        assert!(lg.skipped[0].contains("ckpt-000002"), "{:?}", lg.skipped);
+        assert!(lg.skipped[0].contains("field"), "{:?}", lg.skipped);
+        let _ = fs::remove_dir_all(&dir);
+    }
+}

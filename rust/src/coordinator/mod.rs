@@ -5,6 +5,7 @@
 //! loop.
 
 use crate::baselines::{GatherScatterEngine, NonFusedEngine};
+use crate::ckpt::CkptStore;
 use crate::dist::runtime::{
     train_distributed, DistConfig, DistMode, DistReport, PartitionerKind,
 };
@@ -12,6 +13,7 @@ use crate::dist::NetworkModel;
 use crate::engine::native::NativeEngine;
 use crate::engine::sparsity::{calibrate_gamma_ex, decide, SparsityPolicy};
 use crate::engine::{Engine, EngineKind, RunMode};
+use crate::fault::FaultPlan;
 use crate::graph::{datasets, Dataset};
 use crate::kernels::dispatch::{self, TuneManifest, VariantChoice};
 use crate::kernels::parallel::ExecPolicy;
@@ -23,8 +25,9 @@ use crate::runtime::PjrtEngine;
 use crate::sampler::{expand_fanouts, MiniBatchConfig, MiniBatchEngine};
 use crate::serve::{
     random_targets, ServeJob, ServeMode, Server, ServerConfig, ServingSnapshot, SnapshotSlot,
+    SubmitOutcome,
 };
-use crate::train::{train, TrainConfig, TrainReport};
+use crate::train::{train, CkptPolicy, TrainConfig, TrainReport};
 use crate::util::table::fmt_bytes;
 use crate::util::Rng;
 use anyhow::{anyhow, Result};
@@ -75,6 +78,18 @@ pub struct TrainSpec {
     pub seed: u64,
     pub artifacts_dir: PathBuf,
     pub log: bool,
+    /// Directory for crash-consistent checkpoints (`--checkpoint-dir`);
+    /// `None` disables checkpointing entirely.
+    pub checkpoint_dir: Option<String>,
+    /// Write a checkpoint every this many completed epochs
+    /// (`--checkpoint-every`; 0 with a dir set = never write, restore only).
+    pub checkpoint_every: usize,
+    /// Resume from the newest valid checkpoint in `checkpoint_dir`
+    /// (`--resume`); corrupt files are skipped with a named reason.
+    pub resume: bool,
+    /// Deterministic fault-injection plan (`--fault`, see
+    /// [`crate::fault::FaultPlan::parse`]).
+    pub fault: FaultPlan,
 }
 
 impl Default for TrainSpec {
@@ -100,6 +115,10 @@ impl Default for TrainSpec {
             seed: 42,
             artifacts_dir: PathBuf::from("artifacts"),
             log: false,
+            checkpoint_dir: None,
+            checkpoint_every: 0,
+            resume: false,
+            fault: FaultPlan::none(),
         }
     }
 }
@@ -230,6 +249,14 @@ pub struct DistSpec {
     pub cache: bool,
     /// Staleness bound K for `cache` (0 = exact, bitwise cache-off).
     pub cache_staleness: u64,
+    /// Rank-0 checkpoint directory (`--checkpoint-dir`).
+    pub checkpoint_dir: Option<String>,
+    /// Checkpoint cadence in completed epochs (`--checkpoint-every`).
+    pub checkpoint_every: usize,
+    /// Restore the newest valid checkpoint on every rank (`--resume`).
+    pub resume: bool,
+    /// Deterministic fault-injection plan (`--fault`).
+    pub fault: FaultPlan,
 }
 
 impl Default for DistSpec {
@@ -249,6 +276,10 @@ impl Default for DistSpec {
             threads: 0,
             cache: false,
             cache_staleness: 1,
+            checkpoint_dir: None,
+            checkpoint_every: 0,
+            resume: false,
+            fault: FaultPlan::none(),
         }
     }
 }
@@ -315,8 +346,12 @@ pub fn run_dist(spec: &DistSpec) -> Result<DistReport> {
         batch_size: spec.batch_size,
         fanouts: spec.fanouts.clone(),
         cache: spec.cache.then_some(spec.cache_staleness),
+        ckpt_dir: spec.checkpoint_dir.clone(),
+        ckpt_every: spec.checkpoint_every,
+        resume: spec.resume,
+        fault: spec.fault.clone(),
     };
-    Ok(train_distributed(&ds, &cfg))
+    train_distributed(&ds, &cfg).map_err(anyhow::Error::msg)
 }
 
 /// Specification for the `morphling serve` subcommand: train briefly,
@@ -352,6 +387,16 @@ pub struct ServeSpec {
     pub threads: usize,
     pub seed: u64,
     pub log: bool,
+    /// `--shed`: drop requests immediately when the queue is full instead
+    /// of blocking the submitter (degraded-throughput mode).
+    pub shed: bool,
+    /// `--deadline-ms`: retry a full queue for up to this many
+    /// milliseconds before shedding (0 with `shed` off = block forever).
+    pub deadline_ms: u64,
+    /// Deterministic fault-injection plan; `refresh-fail@n=K` makes the
+    /// K-th snapshot refresh fail (the slot keeps serving the last good
+    /// snapshot).
+    pub fault: FaultPlan,
 }
 
 impl Default for ServeSpec {
@@ -371,6 +416,9 @@ impl Default for ServeSpec {
             threads: 0,
             seed: 42,
             log: false,
+            shed: false,
+            deadline_ms: 0,
+            fault: FaultPlan::none(),
         }
     }
 }
@@ -402,6 +450,11 @@ pub struct ServeReport {
     pub versions: Vec<u64>,
     /// Top-1 accuracy of served logits against the dataset labels.
     pub accuracy: f64,
+    /// Requests dropped by the shed/deadline admission path.
+    pub shed: u64,
+    /// Snapshot refreshes that failed and fell back to the previous good
+    /// snapshot ([`SnapshotSlot::try_refresh`]).
+    pub degraded_refreshes: u64,
 }
 
 impl ServeReport {
@@ -507,25 +560,38 @@ pub fn run_serve(spec: &ServeSpec) -> Result<ServeReport> {
     let mut targets_by_id: Vec<Vec<u32>> = Vec::with_capacity(spec.requests);
     let mut submit_at: Vec<Instant> = Vec::with_capacity(spec.requests);
     let t0 = Instant::now();
-    let results = std::thread::scope(|s| {
+    let (results, shed) = std::thread::scope(|s| {
         // Refresher: each signal trains one more epoch, rebuilds a
         // successor snapshot (same graph/features, next version), and
         // swaps it in — in-flight requests keep their pinned snapshot.
+        // An injected `refresh-fail` fault (or any builder error) leaves
+        // the previous snapshot serving and bumps the degraded counter.
         let (refresh_tx, refresh_rx) = mpsc::channel::<()>();
         if spec.refresh_every > 0 {
             let slot = Arc::clone(&slot);
             let dsr = &ds;
+            let fault = spec.fault.clone();
             let mut eng = engine;
             s.spawn(move || {
+                let mut refresh_idx = 0u64;
                 while refresh_rx.recv().is_ok() {
-                    eng.train_epoch(dsr);
-                    let cur = slot.load();
-                    let next = cur.rebuilt(eng.params().clone(), cur.version() + 1);
-                    slot.swap(next);
+                    refresh_idx += 1;
+                    let fail = fault.fails_refresh(refresh_idx);
+                    let res = slot.try_refresh(|| {
+                        if fail {
+                            return Err(format!("injected refresh failure #{refresh_idx}"));
+                        }
+                        eng.train_epoch(dsr);
+                        let cur = slot.load();
+                        Ok(cur.rebuilt(eng.params().clone(), cur.version() + 1))
+                    });
+                    if let Err(msg) = res {
+                        eprintln!("snapshot refresh failed; serving last good snapshot: {msg}");
+                    }
                 }
             });
         }
-        for i in 0..spec.requests {
+        'submit: for i in 0..spec.requests {
             if spec.refresh_every > 0 && i > 0 && i % spec.refresh_every == 0 {
                 // Best-effort: a signal lost to a dead refresher only
                 // skips a refresh, never the request.
@@ -534,16 +600,29 @@ pub fn run_serve(spec: &ServeSpec) -> Result<ServeReport> {
             let targets = random_targets(&mut rng, ds.spec.nodes, spec.batch_size);
             targets_by_id.push(targets.clone());
             submit_at.push(Instant::now());
-            if !server.submit(ServeJob {
+            let job = ServeJob {
                 id: i as u64,
                 targets,
-            }) {
-                break;
+            };
+            if spec.deadline_ms > 0 {
+                match server.submit_deadline(job, spec.deadline_ms) {
+                    SubmitOutcome::Accepted | SubmitOutcome::Shed => {}
+                    SubmitOutcome::Closed => break 'submit,
+                }
+            } else if spec.shed {
+                match server.try_submit(job) {
+                    SubmitOutcome::Accepted | SubmitOutcome::Shed => {}
+                    SubmitOutcome::Closed => break 'submit,
+                }
+            } else if !server.submit(job) {
+                break 'submit;
             }
         }
         drop(refresh_tx);
-        server.finish()
+        let shed = server.shed_count();
+        (server.finish(), shed)
     });
+    let degraded_refreshes = slot.degraded_count();
     let served = results.len();
     if served == 0 {
         return Err(anyhow!("serving produced no responses (workers died?)"));
@@ -592,6 +671,8 @@ pub fn run_serve(spec: &ServeSpec) -> Result<ServeReport> {
         } else {
             correct as f64 / total as f64
         },
+        shed,
+        degraded_refreshes,
     })
 }
 
@@ -613,6 +694,9 @@ pub struct RunOutcome {
     pub sparsity: f64,
     pub mode: &'static str,
     pub peak_bytes: usize,
+    /// FNV-1a hash of the final parameter bits (engines that expose
+    /// parameters only) — the bitwise-resume acceptance comparator.
+    pub param_hash: Option<u64>,
 }
 
 /// The full coordinated flow: load → (install manifest) → decide → train →
@@ -646,6 +730,56 @@ pub fn run(spec: &TrainSpec) -> Result<RunOutcome> {
         );
     }
     let mut engine = build_engine(spec, &ds)?;
+    let mut start_epoch = 0usize;
+    let mut ckpt: Option<CkptPolicy> = None;
+    if let Some(dir) = &spec.checkpoint_dir {
+        if engine.export_ckpt().is_none() {
+            return Err(anyhow!(
+                "--checkpoint-dir: engine '{}' does not support checkpointing",
+                engine.name()
+            ));
+        }
+        let store = CkptStore::new(dir.as_str()).map_err(anyhow::Error::msg)?;
+        if spec.resume {
+            let scan = store.latest_good();
+            for msg in &scan.skipped {
+                eprintln!("resume: skipping {msg}");
+            }
+            match scan.found {
+                Some((path, ck)) => {
+                    if ck.seed != spec.seed {
+                        return Err(anyhow!(
+                            "resume rejected: checkpoint {} was written under seed {} but this \
+                             run uses seed {} — the epoch-keyed schedules would diverge",
+                            path.display(),
+                            ck.seed,
+                            spec.seed
+                        ));
+                    }
+                    engine.import_ckpt(&ck).map_err(anyhow::Error::msg)?;
+                    start_epoch = ck.epoch as usize;
+                    eprintln!(
+                        "resume: restoring {} (completed epoch {})",
+                        path.display(),
+                        ck.epoch
+                    );
+                }
+                None => eprintln!(
+                    "resume: no usable checkpoint in {} — starting from scratch",
+                    store.dir().display()
+                ),
+            }
+        }
+        ckpt = Some(CkptPolicy {
+            store,
+            every: spec.checkpoint_every,
+            seed: spec.seed,
+        });
+    } else if spec.resume {
+        return Err(anyhow!("--resume requires --checkpoint-dir"));
+    } else if spec.checkpoint_every > 0 {
+        return Err(anyhow!("--checkpoint-every requires --checkpoint-dir"));
+    }
     let report = train(
         engine.as_mut(),
         &ds,
@@ -653,6 +787,9 @@ pub fn run(spec: &TrainSpec) -> Result<RunOutcome> {
             epochs: spec.epochs,
             eval_every: if spec.log { 10 } else { 0 },
             log: spec.log,
+            start_epoch,
+            ckpt,
+            fault: spec.fault.clone(),
         },
     );
     Ok(RunOutcome {
@@ -669,6 +806,7 @@ pub fn run(spec: &TrainSpec) -> Result<RunOutcome> {
             }
         },
         peak_bytes: engine.peak_bytes(),
+        param_hash: engine.gnn_params().map(|p| p.param_hash()),
         report,
     })
 }
@@ -684,13 +822,14 @@ mod tests {
             epochs: 3,
             ..Default::default()
         };
-        let out = run(&spec).unwrap();
+        let out = run(&spec).expect("native run on corafull must succeed");
         assert_eq!(out.engine_name, "morphling-native");
         assert_eq!(out.report.epochs.len(), 3);
         assert!(out.report.final_loss().is_finite());
         // corafull is 95% sparse → sparse path at τ=0.8
         assert_eq!(out.mode, "sparse");
         assert!(out.sparsity > 0.9);
+        assert!(out.param_hash.is_some(), "native engine exposes parameters");
     }
 
     #[test]
@@ -713,7 +852,7 @@ mod tests {
             epochs: 2,
             ..Default::default()
         };
-        let out = run(&spec).unwrap();
+        let out = run(&spec).expect("minibatch run on corafull must succeed");
         assert_eq!(out.engine_name, "morphling-minibatch");
         assert_eq!(out.mode, "minibatch");
         assert_eq!(out.report.epochs.len(), 2);
@@ -734,7 +873,7 @@ mod tests {
             epochs: 3,
             ..Default::default()
         };
-        let out = run(&spec).unwrap();
+        let out = run(&spec).expect("cached minibatch run must succeed");
         assert_eq!(out.engine_name, "morphling-minibatch");
         assert_eq!(out.report.epochs.len(), 3);
         assert!(out.report.final_loss().is_finite());
@@ -887,6 +1026,111 @@ mod tests {
     }
 
     #[test]
+    fn checkpoint_flags_require_dir() {
+        let resume_only = TrainSpec {
+            resume: true,
+            epochs: 1,
+            ..Default::default()
+        };
+        let err = run(&resume_only).expect_err("--resume without a dir must be rejected");
+        assert!(err.to_string().contains("--checkpoint-dir"), "{err}");
+        let every_only = TrainSpec {
+            checkpoint_every: 1,
+            epochs: 1,
+            ..Default::default()
+        };
+        let err = run(&every_only).expect_err("--checkpoint-every without a dir must be rejected");
+        assert!(err.to_string().contains("--checkpoint-dir"), "{err}");
+    }
+
+    #[test]
+    fn checkpoint_kill_resume_matches_uninterrupted() {
+        let dir = std::env::temp_dir().join("morphling-coord-ckpt");
+        let _ = std::fs::remove_dir_all(&dir);
+        let base = TrainSpec {
+            dataset: "corafull".to_string(),
+            epochs: 3,
+            ..Default::default()
+        };
+        // Crash at the epoch-2 boundary with per-epoch checkpoints…
+        let crashed = run(&TrainSpec {
+            checkpoint_dir: Some(dir.display().to_string()),
+            checkpoint_every: 1,
+            fault: FaultPlan::parse("kill@epoch=2").expect("fault grammar"),
+            ..base.clone()
+        })
+        .expect("crashed leg must run to the kill point");
+        assert!(crashed.report.killed);
+        assert_eq!(crashed.report.epochs.len(), 2);
+        assert!(crashed.report.ckpt_saves >= 2);
+        // …resume from the newest checkpoint and finish…
+        let resumed = run(&TrainSpec {
+            checkpoint_dir: Some(dir.display().to_string()),
+            checkpoint_every: 1,
+            resume: true,
+            ..base.clone()
+        })
+        .expect("resumed leg must succeed");
+        assert!(!resumed.report.killed);
+        assert_eq!(resumed.report.epochs.len(), 1, "epochs 2..3 remain after restore");
+        // …and the final parameters must be bitwise-identical to a run
+        // that never crashed.
+        let clean = run(&base).expect("uninterrupted leg must succeed");
+        assert_eq!(
+            resumed.param_hash.expect("native engine exposes parameters"),
+            clean.param_hash.expect("native engine exposes parameters"),
+            "crash→resume must be bitwise-equal to the uninterrupted run"
+        );
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn resume_under_different_seed_is_rejected() {
+        let dir = std::env::temp_dir().join("morphling-coord-ckpt-seed");
+        let _ = std::fs::remove_dir_all(&dir);
+        run(&TrainSpec {
+            epochs: 1,
+            checkpoint_dir: Some(dir.display().to_string()),
+            checkpoint_every: 1,
+            ..Default::default()
+        })
+        .expect("checkpointed run must succeed");
+        let err = run(&TrainSpec {
+            epochs: 2,
+            seed: 43,
+            checkpoint_dir: Some(dir.display().to_string()),
+            resume: true,
+            ..Default::default()
+        })
+        .expect_err("resuming under a different seed must be rejected");
+        assert!(err.to_string().contains("seed"), "{err}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn serve_shed_and_degraded_refresh_are_reported() {
+        let spec = ServeSpec {
+            dataset: "corafull".into(),
+            requests: 6,
+            batch_size: 8,
+            workers: 1,
+            queue_cap: 1,
+            train_epochs: 1,
+            refresh_every: 2,
+            shed: true,
+            fault: FaultPlan::parse("refresh-fail@n=1").expect("fault grammar"),
+            ..Default::default()
+        };
+        let r = run_serve(&spec).expect("shed serve run must succeed");
+        // Every request is either served or shed — none may vanish.
+        assert_eq!(r.served + r.shed as usize, 6);
+        // Signals at i=2 and i=4: the first refresh is injected to fail
+        // (previous snapshot keeps serving), the second succeeds.
+        assert_eq!(r.degraded_refreshes, 1);
+        assert!(!r.versions.is_empty());
+    }
+
+    #[test]
     fn tau_override_forces_dense() {
         let spec = TrainSpec {
             dataset: "corafull".into(),
@@ -894,7 +1138,7 @@ mod tests {
             tau: Some(1.01),
             ..Default::default()
         };
-        let out = run(&spec).unwrap();
+        let out = run(&spec).expect("τ-pinned run must succeed");
         assert_eq!(out.mode, "dense");
     }
 }

@@ -48,9 +48,11 @@
 //!   (property-tested below).
 
 use crate::cache::CacheEpochStats;
+use crate::ckpt::{corrupt_payload_byte, Checkpoint, CkptStore};
 use crate::dist::g2l::{build_views, LocalView};
 use crate::dist::halo::{pack_dense_rows, unpack_rows};
 use crate::dist::NetworkModel;
+use crate::fault::FaultPlan;
 use crate::graph::{Dataset, Graph};
 use crate::kernels::activations::{
     relu_backward_inplace_ex, relu_inplace_ex, softmax_xent_row,
@@ -115,6 +117,18 @@ pub struct DistConfig {
     /// Sampled mode: per-shard historical-embedding cache staleness bound
     /// `K` (`Some(0)` is bitwise identical to `None`, test-enforced).
     pub cache: Option<u64>,
+    /// Checkpoint directory (None = checkpointing off). Rank 0 writes
+    /// `ckpt-<epoch>.mck` snapshots; restore happens on the main thread
+    /// before the workers are spawned, so every rank starts from the same
+    /// restored replica.
+    pub ckpt_dir: Option<String>,
+    /// Write a checkpoint every this many completed epochs (0 = never).
+    pub ckpt_every: usize,
+    /// Resume from the newest loadable checkpoint in `ckpt_dir`.
+    pub resume: bool,
+    /// Injected faults: kill at an epoch boundary, per-rank straggle
+    /// sleeps, corrupt the N-th checkpoint save.
+    pub fault: FaultPlan,
 }
 
 impl Default for DistConfig {
@@ -132,6 +146,10 @@ impl Default for DistConfig {
             batch_size: 512,
             fanouts: vec![10, 25],
             cache: None,
+            ckpt_dir: None,
+            ckpt_every: 0,
+            resume: false,
+            fault: FaultPlan::none(),
         }
     }
 }
@@ -190,6 +208,16 @@ pub struct DistReport {
     /// Final model parameters — identical on every rank by construction;
     /// the determinism tests compare these across world×threads runs.
     pub params: GnnParams,
+    /// First epoch actually run (non-zero after a checkpoint restore).
+    pub start_epoch: usize,
+    /// True when the fault plan killed the run at an epoch boundary.
+    pub killed: bool,
+    /// Checkpoints rank 0 wrote this run.
+    pub ckpt_saves: usize,
+    /// Serialized size of the last checkpoint, in bytes.
+    pub ckpt_bytes: u64,
+    /// Total wall-clock seconds rank 0 spent writing checkpoints.
+    pub ckpt_secs: f64,
 }
 
 impl DistReport {
@@ -241,6 +269,70 @@ pub(crate) fn partition_dataset(
             (chunk_partition(ds.spec.nodes, k), "vertex-chunk".to_string())
         }
     }
+}
+
+/// Shared checkpoint plumbing of the two distributed paths: open the store
+/// when a directory is configured and, under `resume`, locate the newest
+/// loadable checkpoint — printing one named rejection per damaged file the
+/// scan skipped — and validate it against this run's seed and model shape.
+/// The caller applies it to the replicated state on the main thread before
+/// any rank worker is spawned (that is what "all ranks restore" means in a
+/// shared-address-space runtime).
+pub(crate) fn setup_ckpt(
+    cfg: &DistConfig,
+    dims: &[usize],
+) -> Result<(Option<CkptStore>, Option<Checkpoint>), String> {
+    let store = match &cfg.ckpt_dir {
+        Some(d) => Some(CkptStore::new(d)?),
+        None => None,
+    };
+    if !cfg.resume {
+        return Ok((store, None));
+    }
+    let Some(st) = &store else {
+        return Err("--resume requires --checkpoint-dir".to_string());
+    };
+    let lg = st.latest_good();
+    for msg in &lg.skipped {
+        eprintln!("resume: skipping {msg}");
+    }
+    let Some((path, ck)) = lg.found else {
+        eprintln!(
+            "resume: no usable checkpoint in {}; starting from scratch",
+            st.dir().display()
+        );
+        return Ok((store, None));
+    };
+    if ck.seed != cfg.seed {
+        return Err(format!(
+            "resume rejected: checkpoint {} was written under seed {} but this \
+             run uses seed {} — the epoch-keyed schedules would diverge",
+            path.display(),
+            ck.seed,
+            cfg.seed
+        ));
+    }
+    if ck.params.config.arch != Arch::Gcn || ck.params.config.dims != dims {
+        return Err(format!(
+            "resume rejected: checkpoint {} holds {} {:?} but the distributed \
+             runtime builds gcn {:?}",
+            path.display(),
+            ck.params.config.arch.name(),
+            ck.params.config.dims,
+            dims
+        ));
+    }
+    eprintln!(
+        "resume: restoring {} (completed epoch {})",
+        path.display(),
+        ck.epoch
+    );
+    Ok((store, Some(ck)))
+}
+
+/// Did/will the fault plan kill a run spanning `start_epoch..epochs`?
+pub(crate) fn plan_kills(fault: &FaultPlan, start_epoch: usize, epochs: usize) -> bool {
+    matches!(fault.kill_epoch(), Some(ke) if ke > start_epoch as u64 && ke <= epochs as u64)
 }
 
 /// Gather `ids` rows of `m` into a dense local matrix.
@@ -348,11 +440,15 @@ struct RunLog {
     exposed: Vec<f64>,
     sent: Vec<usize>,
     params: Option<GnnParams>,
+    ckpt_saves: usize,
+    ckpt_bytes: u64,
+    ckpt_secs: f64,
 }
 
 /// Run multi-rank distributed training (see module docs): dispatches on
-/// [`DistConfig::mode`].
-pub fn train_distributed(ds: &Dataset, cfg: &DistConfig) -> DistReport {
+/// [`DistConfig::mode`]. Errors are checkpoint-related (unopenable store,
+/// rejected resume) — a plain run cannot fail.
+pub fn train_distributed(ds: &Dataset, cfg: &DistConfig) -> Result<DistReport, String> {
     match cfg.mode {
         DistMode::Full => train_full(ds, cfg),
         DistMode::Sampled => super::sampled::train_sampled(ds, cfg),
@@ -360,7 +456,7 @@ pub fn train_distributed(ds: &Dataset, cfg: &DistConfig) -> DistReport {
 }
 
 /// The threaded full-batch path.
-fn train_full(ds: &Dataset, cfg: &DistConfig) -> DistReport {
+fn train_full(ds: &Dataset, cfg: &DistConfig) -> Result<DistReport, String> {
     let k = cfg.world.max(1);
     let (parts, partition_strategy) = partition_dataset(ds, k, cfg);
     let views: Vec<LocalView> = build_views(&ds.graph, &parts);
@@ -371,9 +467,26 @@ fn train_full(ds: &Dataset, cfg: &DistConfig) -> DistReport {
     let config = ModelConfig::paper_default(Arch::Gcn, ds.spec.features, ds.spec.classes);
     let mut rng = Rng::new(cfg.seed);
     let mut params0 = GnnParams::init(&config, &mut rng);
-    let opt0 = Optimizer::new(OptKind::Adam, AdamParams::default(), &mut params0);
+    let mut opt0 = Optimizer::new(OptKind::Adam, AdamParams::default(), &mut params0);
     let nl = config.num_layers();
     let dims = config.dims.clone();
+
+    // --- checkpoint store + main-thread restore (before any worker spawns) ---
+    let (store, resumed) = setup_ckpt(cfg, &dims)?;
+    let mut start_epoch = 0usize;
+    if let Some(ck) = &resumed {
+        if !ck.caches.is_empty() {
+            return Err(format!(
+                "resume rejected: checkpoint carries {} historical-cache stores \
+                 but full-batch mode has no cache — it was written by a sampled run",
+                ck.caches.len()
+            ));
+        }
+        opt0.import_state(&ck.opt)?;
+        params0 = ck.params.clone();
+        params0.zero_grads();
+        start_epoch = ck.epoch as usize;
+    }
 
     // --- per-rank immutable data ---
     let mut owner_local = vec![0u32; ds.spec.nodes];
@@ -530,13 +643,16 @@ fn train_full(ds: &Dataset, cfg: &DistConfig) -> DistReport {
         exposed: vec![0.0; k],
         sent: vec![0usize; k],
         params: None,
+        ckpt_saves: 0,
+        ckpt_bytes: 0,
+        ckpt_secs: 0.0,
     });
 
     std::thread::scope(|scope| {
         for r in 0..k {
             let (views, xs, labels, masks) = (&views, &xs, &labels, &masks);
             let (fwd_groups, rev_groups) = (&fwd_groups, &rev_groups);
-            let (slots, barrier, log) = (&slots, &barrier, &log);
+            let (slots, barrier, log, store) = (&slots, &barrier, &log, &store);
             let (dims, params0, opt0) = (&dims, &params0, &opt0);
             let (halo_secs_r, halo_sent_r, grad_bytes) = (&halo_secs_r, &halo_sent_r, &grad_bytes);
             scope.spawn(move || {
@@ -553,7 +669,13 @@ fn train_full(ds: &Dataset, cfg: &DistConfig) -> DistReport {
                     .map(|l| Matrix::zeros(nloc + views[r].n_ghost(), dims[l + 1]))
                     .collect();
                 barrier.wait();
-                for _epoch in 0..cfg.epochs {
+                for e in start_epoch..cfg.epochs {
+                    // Timing-only straggler injection: sleep this rank at the
+                    // epoch start so every peer stalls at the next barrier.
+                    // Never touches numerics.
+                    if let Some(ms) = cfg.fault.straggle_ms(r) {
+                        std::thread::sleep(std::time::Duration::from_millis(ms));
+                    }
                     let t_epoch = Instant::now();
                     let mut compute = 0.0f64;
                     let mut bwd = 0.0f64;
@@ -723,8 +845,49 @@ fn train_full(ds: &Dataset, cfg: &DistConfig) -> DistReport {
                         }
                         lg.modeled_epoch_secs.push(modeled + grad_exposed);
                         lg.epoch_secs.push(t_epoch.elapsed().as_secs_f64());
+                        // ---- rank-0 checkpoint at the epoch boundary ----
+                        // Safe here: every peer is parked at the barrier
+                        // below, and every replica holds identical bits.
+                        if let Some(st) = store.as_ref() {
+                            if cfg.ckpt_every > 0 && (e + 1) % cfg.ckpt_every == 0 {
+                                let ck = Checkpoint {
+                                    epoch: (e + 1) as u64,
+                                    seed: cfg.seed,
+                                    params: params.clone(),
+                                    opt: opt.export_state(),
+                                    caches: Vec::new(),
+                                };
+                                match st.save(&ck) {
+                                    Ok(sv) => {
+                                        lg.ckpt_saves += 1;
+                                        lg.ckpt_bytes = sv.bytes;
+                                        lg.ckpt_secs += sv.secs;
+                                        if cfg.fault.corrupts_save(lg.ckpt_saves as u64) {
+                                            match corrupt_payload_byte(&sv.path) {
+                                                Ok(()) => eprintln!(
+                                                    "fault corrupt-ckpt: damaged {} (save #{})",
+                                                    sv.path.display(),
+                                                    lg.ckpt_saves
+                                                ),
+                                                Err(msg) => {
+                                                    eprintln!("fault corrupt-ckpt: {msg}")
+                                                }
+                                            }
+                                        }
+                                    }
+                                    Err(msg) => eprintln!("checkpoint save failed: {msg}"),
+                                }
+                            }
+                        }
                     }
                     barrier.wait();
+                    // Kill at the boundary, strictly after the checkpoint
+                    // committed — a real crash happens after the rename or
+                    // not at all. Every rank evaluates the same predicate,
+                    // so they all break together (no barrier deadlock).
+                    if cfg.fault.kill_epoch() == Some((e + 1) as u64) {
+                        break;
+                    }
                 }
                 if r == 0 {
                     log.lock()
@@ -751,7 +914,7 @@ fn train_full(ds: &Dataset, cfg: &DistConfig) -> DistReport {
         })
         .collect();
 
-    DistReport {
+    Ok(DistReport {
         losses: log.losses,
         epoch_secs: log.epoch_secs,
         modeled_epoch_secs: log.modeled_epoch_secs,
@@ -764,7 +927,12 @@ fn train_full(ds: &Dataset, cfg: &DistConfig) -> DistReport {
         params: log
             .params
             .expect("worker 0 always publishes the final parameters"),
-    }
+        start_epoch,
+        killed: plan_kills(&cfg.fault, start_epoch, cfg.epochs),
+        ckpt_saves: log.ckpt_saves,
+        ckpt_bytes: log.ckpt_bytes,
+        ckpt_secs: log.ckpt_secs,
+    })
 }
 
 #[cfg(test)]
@@ -804,7 +972,7 @@ mod tests {
             seed: 5,
             ..Default::default()
         };
-        let dist = train_distributed(&ds, &cfg);
+        let dist = train_distributed(&ds, &cfg).expect("dist run");
         let config = ModelConfig::paper_default(Arch::Gcn, ds.spec.features, ds.spec.classes);
         let mut serial = NativeEngine::new(
             &ds,
@@ -833,7 +1001,7 @@ mod tests {
             seed: 1,
             ..Default::default()
         };
-        let r = train_distributed(&ds, &cfg);
+        let r = train_distributed(&ds, &cfg).expect("dist run");
         assert_eq!(r.ranks.len(), 4);
         assert_eq!(r.losses.len(), 2);
         assert_eq!(r.epoch_secs.len(), 2);
@@ -858,7 +1026,7 @@ mod tests {
             seed: 3,
             ..Default::default()
         };
-        let r = train_distributed(&ds, &cfg);
+        let r = train_distributed(&ds, &cfg).expect("dist run");
         assert!(
             r.final_loss() < r.losses[0],
             "{} -> {}",
@@ -885,14 +1053,16 @@ mod tests {
                 pipelined: true,
                 ..base.clone()
             },
-        );
+        )
+        .expect("dist run");
         let block = train_distributed(
             &ds,
             &DistConfig {
                 pipelined: false,
                 ..base
             },
-        );
+        )
+        .expect("dist run");
         for (p, b) in pipe.ranks.iter().zip(&block.ranks) {
             assert!(
                 p.exposed_comm_secs <= b.exposed_comm_secs + 1e-12,
@@ -923,7 +1093,7 @@ mod tests {
             seed: 2,
             ..Default::default()
         };
-        let r = train_distributed(&ds, &cfg);
+        let r = train_distributed(&ds, &cfg).expect("dist run");
         assert_eq!(r.partition_strategy, "vertex-chunk");
         assert_eq!(r.ranks.iter().map(|s| s.n_local).sum::<usize>(), 300);
         assert!(r.final_loss().is_finite());
@@ -940,7 +1110,7 @@ mod tests {
             seed: 9,
             ..Default::default()
         };
-        let r = train_distributed(&ds, &cfg);
+        let r = train_distributed(&ds, &cfg).expect("dist run");
         assert_eq!(r.ranks.len(), 1);
         assert_eq!(r.ranks[0].n_ghost, 0);
         assert_eq!(r.ranks[0].bytes_sent, 0);
@@ -961,14 +1131,15 @@ mod tests {
             threads: 1,
             ..Default::default()
         };
-        let a = train_distributed(&ds, &base);
+        let a = train_distributed(&ds, &base).expect("dist run");
         let b = train_distributed(
             &ds,
             &DistConfig {
                 threads: 4,
                 ..base
             },
-        );
+        )
+        .expect("dist run");
         for (la, lb) in a.losses.iter().zip(&b.losses) {
             assert_eq!(la, lb, "thread count must not change numerics");
         }

@@ -43,10 +43,11 @@
 //! (test-enforced).
 
 use crate::cache::{CacheEpochStats, CacheGate, HistCache};
+use crate::ckpt::{corrupt_payload_byte, Checkpoint};
 use crate::dist::g2l::{build_views_with_features, LocalView};
 use crate::dist::halo::{fetch_feature_rows, unpack_rows, HaloStats, PeerMsg};
 use crate::dist::runtime::{
-    partition_dataset, resolve_policy, DistConfig, DistReport, RankStats,
+    partition_dataset, plan_kills, resolve_policy, setup_ckpt, DistConfig, DistReport, RankStats,
 };
 use crate::dist::NetworkModel;
 use crate::graph::Dataset;
@@ -108,6 +109,9 @@ struct RunLog {
     sent: Vec<usize>,
     cache: Option<CacheEpochStats>,
     params: Option<GnnParams>,
+    ckpt_saves: usize,
+    ckpt_bytes: u64,
+    ckpt_secs: f64,
 }
 
 /// Immutable context shared by all rank workers.
@@ -125,7 +129,7 @@ struct Shared<'a> {
 /// Run rank-parallel sampled distributed training (module docs). GCN only,
 /// like the full-batch path — the SAGE family's sampled formulation stays
 /// with the serial engine.
-pub fn train_sampled(ds: &Dataset, cfg: &DistConfig) -> DistReport {
+pub fn train_sampled(ds: &Dataset, cfg: &DistConfig) -> Result<DistReport, String> {
     let k = cfg.world.max(1);
     let s_count = cfg.effective_shards().max(k);
     let (parts, partition_strategy) = partition_dataset(ds, s_count, cfg);
@@ -141,9 +145,10 @@ pub fn train_sampled(ds: &Dataset, cfg: &DistConfig) -> DistReport {
     let config = ModelConfig::paper_default(Arch::Gcn, ds.spec.features, ds.spec.classes);
     let mut rng = Rng::new(cfg.seed);
     let mut params0 = GnnParams::init(&config, &mut rng);
-    let opt0 = Optimizer::new(OptKind::Adam, AdamParams::default(), &mut params0);
+    let mut opt0 = Optimizer::new(OptKind::Adam, AdamParams::default(), &mut params0);
     let nl = config.num_layers();
     let dims = config.dims.clone();
+    let (store, resumed) = setup_ckpt(cfg, &dims)?;
     let ctx = SampleCtx::for_arch(Arch::Gcn, ds, &cfg.fanouts, nl, cfg.seed, pol)
         .expect("sampled dist mode is GCN-only and GCN always has a sampling context");
 
@@ -167,6 +172,74 @@ pub fn train_sampled(ds: &Dataset, cfg: &DistConfig) -> DistReport {
     let stores = make_stores();
     let snaps = make_stores();
 
+    // --- main-thread restore, before any rank worker is spawned ---
+    let mut start_epoch = 0usize;
+    if let Some(ck) = &resumed {
+        match (&stores, ck.caches.as_slice()) {
+            (Some(stores), stored) if stored.len() == stores.len() => {
+                for (s, (fresh, old)) in stores.iter().zip(stored).enumerate() {
+                    let mut cur = fresh.lock().expect("no rank worker is running yet");
+                    if old.staleness() != cur.staleness() {
+                        return Err(format!(
+                            "resume rejected: checkpoint cache staleness K={} but this \
+                             run configures K={} — the gate schedule would diverge from \
+                             the original run",
+                            old.staleness(),
+                            cur.staleness()
+                        ));
+                    }
+                    if old.num_levels() != cur.num_levels() {
+                        return Err(format!(
+                            "resume rejected: shard {s} cache has {} levels in the \
+                             checkpoint but this model needs {}",
+                            old.num_levels(),
+                            cur.num_levels()
+                        ));
+                    }
+                    for lvl in 0..cur.num_levels() {
+                        let (want, got) = (cur.level_data(lvl).0.rows, old.level_data(lvl).0.rows);
+                        if want != got {
+                            return Err(format!(
+                                "resume rejected: shard {s} cache level {lvl} holds {got} \
+                                 rows but this partitioning owns {want} — the checkpoint \
+                                 was written against a different graph or shard count"
+                            ));
+                        }
+                    }
+                    *cur = old.clone();
+                }
+            }
+            (Some(stores), []) => {
+                return Err(format!(
+                    "resume rejected: checkpoint has no historical-cache store but this \
+                     run enables the cache over {} shards — resuming would restart from \
+                     a cold store and diverge",
+                    stores.len()
+                ));
+            }
+            (Some(stores), stored) => {
+                return Err(format!(
+                    "resume rejected: checkpoint carries {} per-shard cache stores but \
+                     this run partitions into {} shards",
+                    stored.len(),
+                    stores.len()
+                ));
+            }
+            (None, []) => {}
+            (None, stored) => {
+                return Err(format!(
+                    "resume rejected: checkpoint carries {} historical-cache stores — \
+                     re-enable --cache with the original staleness to resume",
+                    stored.len()
+                ));
+            }
+        }
+        opt0.import_state(&ck.opt)?;
+        params0 = ck.params.clone();
+        params0.zero_grads();
+        start_epoch = ck.epoch as usize;
+    }
+
     let slots: Vec<Mutex<ShardSlot>> = (0..s_count)
         .map(|_| {
             Mutex::new(ShardSlot {
@@ -189,6 +262,9 @@ pub fn train_sampled(ds: &Dataset, cfg: &DistConfig) -> DistReport {
         sent: vec![0usize; k],
         cache: None,
         params: None,
+        ckpt_saves: 0,
+        ckpt_bytes: 0,
+        ckpt_secs: 0.0,
     });
 
     let train_seeds: Vec<u32> = (0..ds.spec.nodes)
@@ -218,7 +294,7 @@ pub fn train_sampled(ds: &Dataset, cfg: &DistConfig) -> DistReport {
         for r in 0..k {
             let (lo, hi) = (r * s_count / k, (r + 1) * s_count / k);
             let shared = &shared;
-            let (slots, barrier, log) = (&slots, &barrier, &log);
+            let (slots, barrier, log, store) = (&slots, &barrier, &log, &store);
             let (stores, snaps) = (&stores, &snaps);
             let (params0, opt0, train_seeds) = (&params0, &opt0, &train_seeds);
             scope.spawn(move || {
@@ -227,8 +303,14 @@ pub fn train_sampled(ds: &Dataset, cfg: &DistConfig) -> DistReport {
                 let mut scratch = SamplerScratch::new(ds.spec.nodes);
                 let mut seeds = Vec::new();
                 let mut sub = Vec::new();
-                for e in 0..cfg.epochs {
+                for e in start_epoch..cfg.epochs {
                     let epoch = (e + 1) as u64; // engine numbering: first epoch is 1
+                    // Timing-only straggler injection: sleep this rank at the
+                    // epoch start so every peer stalls at the barrier below.
+                    // Never touches numerics.
+                    if let Some(ms) = cfg.fault.straggle_ms(r) {
+                        std::thread::sleep(std::time::Duration::from_millis(ms));
+                    }
                     barrier.wait();
                     let t_epoch = Instant::now();
                     for s in lo..hi {
@@ -344,8 +426,60 @@ pub fn train_sampled(ds: &Dataset, cfg: &DistConfig) -> DistReport {
                         if cfg.cache.is_some() {
                             lg.cache = Some(cache_tot);
                         }
+                        // ---- rank-0 checkpoint at the epoch boundary ----
+                        // Safe here: every peer is parked at the barrier
+                        // below, so the per-shard stores are quiescent and
+                        // every parameter replica holds identical bits.
+                        if let Some(st) = store.as_ref() {
+                            if cfg.ckpt_every > 0 && (e + 1) % cfg.ckpt_every == 0 {
+                                let caches: Vec<HistCache> = match stores {
+                                    Some(stores) => stores
+                                        .iter()
+                                        .map(|m| {
+                                            m.lock()
+                                                .expect("a rank worker panicked mid-epoch")
+                                                .clone()
+                                        })
+                                        .collect(),
+                                    None => Vec::new(),
+                                };
+                                let ck = Checkpoint {
+                                    epoch,
+                                    seed: cfg.seed,
+                                    params: params.clone(),
+                                    opt: opt.export_state(),
+                                    caches,
+                                };
+                                match st.save(&ck) {
+                                    Ok(sv) => {
+                                        lg.ckpt_saves += 1;
+                                        lg.ckpt_bytes = sv.bytes;
+                                        lg.ckpt_secs += sv.secs;
+                                        if cfg.fault.corrupts_save(lg.ckpt_saves as u64) {
+                                            match corrupt_payload_byte(&sv.path) {
+                                                Ok(()) => eprintln!(
+                                                    "fault corrupt-ckpt: damaged {} (save #{})",
+                                                    sv.path.display(),
+                                                    lg.ckpt_saves
+                                                ),
+                                                Err(msg) => {
+                                                    eprintln!("fault corrupt-ckpt: {msg}")
+                                                }
+                                            }
+                                        }
+                                    }
+                                    Err(msg) => eprintln!("checkpoint save failed: {msg}"),
+                                }
+                            }
+                        }
                     }
                     barrier.wait();
+                    // Kill at the boundary, strictly after the checkpoint
+                    // committed. Every rank evaluates the same predicate, so
+                    // they all break together (no barrier deadlock).
+                    if cfg.fault.kill_epoch() == Some(epoch) {
+                        break;
+                    }
                 }
                 if r == 0 {
                     log.lock()
@@ -373,7 +507,7 @@ pub fn train_sampled(ds: &Dataset, cfg: &DistConfig) -> DistReport {
         })
         .collect();
 
-    DistReport {
+    Ok(DistReport {
         losses: log.losses,
         epoch_secs: log.epoch_secs,
         modeled_epoch_secs: log.modeled_epoch_secs,
@@ -386,7 +520,12 @@ pub fn train_sampled(ds: &Dataset, cfg: &DistConfig) -> DistReport {
         params: log
             .params
             .expect("worker 0 always publishes the final parameters"),
-    }
+        start_epoch,
+        killed: plan_kills(&cfg.fault, start_epoch, cfg.epochs),
+        ckpt_saves: log.ckpt_saves,
+        ckpt_bytes: log.ckpt_bytes,
+        ckpt_secs: log.ckpt_secs,
+    })
 }
 
 /// Executing rank of a shard (contiguous ranges; see `rank_of` above).

@@ -18,7 +18,9 @@
 pub mod sparsity;
 pub mod native;
 
+use crate::ckpt::Checkpoint;
 use crate::graph::Dataset;
+use crate::model::GnnParams;
 use crate::train::EpochStats;
 
 /// Which node mask to evaluate against.
@@ -55,6 +57,30 @@ pub trait Engine {
     /// parameters, optimizer state, activations, transient buffers, graph
     /// copies). Reproduces the Table III comparison.
     fn peak_bytes(&self) -> usize;
+
+    /// The engine's trainable parameters, when it exposes them (used for
+    /// the param-hash fingerprint the CLI prints). `None` for engines whose
+    /// parameters live outside host memory (PJRT literals).
+    fn gnn_params(&self) -> Option<&GnnParams> {
+        None
+    }
+
+    /// Snapshot resumable training state — parameters, optimizer state, and
+    /// any historical-cache stores — for checkpointing. The `epoch`/`seed`
+    /// fields are filled by the training loop before saving. `None` means
+    /// the engine doesn't support checkpoint/restore (baselines, PJRT).
+    fn export_ckpt(&self) -> Option<Checkpoint> {
+        None
+    }
+
+    /// Restore state captured by [`Engine::export_ckpt`]. The default
+    /// rejects: an engine that can't export can't import.
+    fn import_ckpt(&mut self, _ck: &Checkpoint) -> Result<(), String> {
+        Err(format!(
+            "engine '{}' does not support checkpoint restore",
+            self.name()
+        ))
+    }
 }
 
 /// Identifier for constructing engines from CLI strings.

@@ -19,6 +19,7 @@
 //!   epoch (the generated-code memory plan), so the steady state performs
 //!   zero allocations.
 
+use crate::ckpt::Checkpoint;
 use crate::engine::sparsity::{decide, ExecutionMode, SparsityDecision, SparsityPolicy};
 use crate::engine::{Engine, Mask};
 use crate::graph::{Dataset, Graph};
@@ -477,6 +478,45 @@ impl Engine for NativeEngine {
         (loss, acc)
     }
 
+    fn gnn_params(&self) -> Option<&GnnParams> {
+        Some(&self.params)
+    }
+
+    fn export_ckpt(&self) -> Option<Checkpoint> {
+        // Full-batch training has no epoch-local state beyond params +
+        // optimizer; the loop driver fills epoch/seed before saving.
+        Some(Checkpoint {
+            epoch: 0,
+            seed: 0,
+            params: self.params.clone(),
+            opt: self.opt.export_state(),
+            caches: Vec::new(),
+        })
+    }
+
+    fn import_ckpt(&mut self, ck: &Checkpoint) -> Result<(), String> {
+        if ck.params.config.arch != self.arch || ck.params.config.dims != self.dims {
+            return Err(format!(
+                "checkpoint shape mismatch: checkpoint is {} {:?}, engine is {} {:?}",
+                ck.params.config.arch.name(),
+                ck.params.config.dims,
+                self.arch.name(),
+                self.dims
+            ));
+        }
+        if !ck.caches.is_empty() {
+            return Err(
+                "checkpoint carries historical-cache stores but the full-batch engine \
+                 has no cache — it was written by a minibatch/dist run"
+                    .to_string(),
+            );
+        }
+        self.opt.import_state(&ck.opt)?;
+        self.params = ck.params.clone();
+        self.params.zero_grads();
+        Ok(())
+    }
+
     fn peak_bytes(&self) -> usize {
         let feats = match self.decision.mode {
             ExecutionMode::Sparse => {
@@ -558,6 +598,7 @@ mod tests {
                 epochs: 30,
                 eval_every: 0,
                 log: false,
+                ..Default::default()
             },
         );
         assert!(
@@ -580,6 +621,7 @@ mod tests {
                 epochs: 30,
                 eval_every: 0,
                 log: false,
+                ..Default::default()
             },
         );
         assert!(report.final_loss() < report.epochs[0].loss);
@@ -637,6 +679,7 @@ mod tests {
                     epochs: 25,
                     eval_every: 0,
                     log: false,
+                    ..Default::default()
                 },
             );
             assert!(
@@ -711,6 +754,7 @@ mod tests {
                 epochs: 60,
                 eval_every: 0,
                 log: false,
+                ..Default::default()
             },
         );
         let (_, acc) = eng.evaluate(&ds, Mask::Test);

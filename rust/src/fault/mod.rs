@@ -1,0 +1,244 @@
+//! Deterministic fault injection — a parsed [`FaultPlan`] threaded through
+//! the training loops, the distributed rank workers, the checkpoint writer,
+//! and the serving refresher, so failure handling is *testable*: every
+//! fault fires at a deterministic point (an epoch boundary, the N-th
+//! checkpoint save, the N-th snapshot refresh), never from a timer or a
+//! signal.
+//!
+//! Grammar (the CLI's `--fault`), `;`-separated for multiple faults:
+//!
+//! ```text
+//! kill@epoch=3              crash at the boundary after 3 completed epochs
+//! straggle@rank=1,ms=50     rank 1 sleeps 50 ms at each epoch start
+//! corrupt-ckpt@n=2          damage the checkpoint file after the 2nd save
+//! refresh-fail@n=1          the 1st serving snapshot rebuild fails
+//! ```
+//!
+//! Semantics are chosen so injected faults never perturb numerics:
+//!
+//! - **kill** breaks the epoch loop at a boundary *after* any due
+//!   checkpoint write (a real crash happens after the rename commits or it
+//!   didn't happen at all) — the run reports `killed` and skips the final
+//!   test evaluation. In the distributed runtime every rank evaluates the
+//!   same predicate at the same barrier-aligned boundary, so all ranks
+//!   wind down together.
+//! - **straggle** is timing-only: the named rank sleeps at each epoch
+//!   start. Barrier-phased lock-step training tolerates it by
+//!   construction — final parameters stay bitwise-identical (pinned by the
+//!   dist tests' world×threads invariance).
+//! - **corrupt-ckpt** flips one payload byte of the just-written file
+//!   (via [`crate::ckpt::corrupt_payload_byte`]), exercising the CRC
+//!   reject + fall-back-to-previous-good path on the next resume.
+//! - **refresh-fail** makes the serving refresher's rebuild return an
+//!   error; [`crate::serve::SnapshotSlot`] keeps serving the last good
+//!   snapshot and counts the degradation.
+
+use std::fmt;
+
+/// One injected fault (see module docs for semantics).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Fault {
+    /// Crash at the epoch boundary after `epoch` completed epochs.
+    Kill {
+        /// Completed-epoch count at which the run dies.
+        epoch: u64,
+    },
+    /// Delay one rank at each epoch start (timing-only).
+    Straggle {
+        /// Rank to delay.
+        rank: usize,
+        /// Sleep per epoch, in milliseconds.
+        ms: u64,
+    },
+    /// Damage the checkpoint file after the `n`-th successful save
+    /// (1-based).
+    CorruptCkpt {
+        /// Which save to corrupt.
+        n: u64,
+    },
+    /// Fail the `n`-th serving snapshot refresh (1-based).
+    RefreshFail {
+        /// Which refresh fails.
+        n: u64,
+    },
+}
+
+/// A deterministic schedule of injected faults, queried at well-defined
+/// points by the training/serving loops. An empty plan is a no-op.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct FaultPlan {
+    faults: Vec<Fault>,
+}
+
+fn parse_kv(pairs: &str, spec: &str) -> Result<Vec<(String, u64)>, String> {
+    pairs
+        .split(',')
+        .map(|kv| {
+            let (k, v) = kv
+                .split_once('=')
+                .ok_or_else(|| format!("--fault \"{spec}\": expected key=value, got \"{kv}\""))?;
+            let v = v
+                .parse::<u64>()
+                .map_err(|_| format!("--fault \"{spec}\": \"{k}\" needs an integer, got \"{v}\""))?;
+            Ok((k.trim().to_string(), v))
+        })
+        .collect()
+}
+
+fn require(kvs: &[(String, u64)], key: &str, spec: &str) -> Result<u64, String> {
+    kvs.iter()
+        .find(|(k, _)| k == key)
+        .map(|(_, v)| *v)
+        .ok_or_else(|| format!("--fault \"{spec}\": missing required parameter \"{key}\""))
+}
+
+impl FaultPlan {
+    /// The empty plan (no faults).
+    pub fn none() -> FaultPlan {
+        FaultPlan::default()
+    }
+
+    /// Parse a `;`-separated fault list (module docs grammar).
+    pub fn parse(s: &str) -> Result<FaultPlan, String> {
+        let mut faults = Vec::new();
+        for spec in s.split(';').map(str::trim).filter(|s| !s.is_empty()) {
+            let (name, rest) = spec
+                .split_once('@')
+                .ok_or_else(|| format!("--fault \"{spec}\": expected kind@key=value"))?;
+            let kvs = parse_kv(rest, spec)?;
+            let fault = match name.trim() {
+                "kill" => Fault::Kill {
+                    epoch: require(&kvs, "epoch", spec)?,
+                },
+                "straggle" => Fault::Straggle {
+                    rank: require(&kvs, "rank", spec)? as usize,
+                    ms: require(&kvs, "ms", spec)?,
+                },
+                "corrupt-ckpt" => Fault::CorruptCkpt {
+                    n: require(&kvs, "n", spec)?,
+                },
+                "refresh-fail" => Fault::RefreshFail {
+                    n: require(&kvs, "n", spec)?,
+                },
+                other => {
+                    return Err(format!(
+                        "--fault \"{spec}\": unknown fault kind \"{other}\" \
+                         (known: kill, straggle, corrupt-ckpt, refresh-fail)"
+                    ))
+                }
+            };
+            faults.push(fault);
+        }
+        Ok(FaultPlan { faults })
+    }
+
+    /// Whether the plan injects nothing.
+    pub fn is_empty(&self) -> bool {
+        self.faults.is_empty()
+    }
+
+    /// The faults in the plan, in parse order.
+    pub fn faults(&self) -> &[Fault] {
+        &self.faults
+    }
+
+    /// Completed-epoch count at which the run should die, if any.
+    pub fn kill_epoch(&self) -> Option<u64> {
+        self.faults.iter().find_map(|f| match f {
+            Fault::Kill { epoch } => Some(*epoch),
+            _ => None,
+        })
+    }
+
+    /// Milliseconds `rank` should sleep at each epoch start, if any.
+    pub fn straggle_ms(&self, rank: usize) -> Option<u64> {
+        self.faults.iter().find_map(|f| match f {
+            Fault::Straggle { rank: r, ms } if *r == rank => Some(*ms),
+            _ => None,
+        })
+    }
+
+    /// Whether the `save_idx`-th (1-based) checkpoint save should be
+    /// damaged after it commits.
+    pub fn corrupts_save(&self, save_idx: u64) -> bool {
+        self.faults
+            .iter()
+            .any(|f| matches!(f, Fault::CorruptCkpt { n } if *n == save_idx))
+    }
+
+    /// Whether the `refresh_idx`-th (1-based) serving snapshot refresh
+    /// should fail.
+    pub fn fails_refresh(&self, refresh_idx: u64) -> bool {
+        self.faults
+            .iter()
+            .any(|f| matches!(f, Fault::RefreshFail { n } if *n == refresh_idx))
+    }
+}
+
+impl fmt::Display for FaultPlan {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let parts: Vec<String> = self
+            .faults
+            .iter()
+            .map(|fault| match fault {
+                Fault::Kill { epoch } => format!("kill@epoch={epoch}"),
+                Fault::Straggle { rank, ms } => format!("straggle@rank={rank},ms={ms}"),
+                Fault::CorruptCkpt { n } => format!("corrupt-ckpt@n={n}"),
+                Fault::RefreshFail { n } => format!("refresh-fail@n={n}"),
+            })
+            .collect();
+        write!(f, "{}", parts.join(";"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_single_faults() {
+        let p = FaultPlan::parse("kill@epoch=3").expect("kill");
+        assert_eq!(p.kill_epoch(), Some(3));
+        assert!(p.straggle_ms(0).is_none());
+
+        let p = FaultPlan::parse("straggle@rank=1,ms=50").expect("straggle");
+        assert_eq!(p.straggle_ms(1), Some(50));
+        assert_eq!(p.straggle_ms(0), None);
+
+        let p = FaultPlan::parse("corrupt-ckpt@n=2").expect("corrupt");
+        assert!(p.corrupts_save(2));
+        assert!(!p.corrupts_save(1));
+
+        let p = FaultPlan::parse("refresh-fail@n=1").expect("refresh");
+        assert!(p.fails_refresh(1));
+        assert!(!p.fails_refresh(2));
+    }
+
+    #[test]
+    fn parse_multi_and_display_roundtrip() {
+        let s = "kill@epoch=2;straggle@rank=0,ms=5";
+        let p = FaultPlan::parse(s).expect("multi");
+        assert_eq!(p.faults().len(), 2);
+        assert_eq!(p.to_string(), s);
+        assert_eq!(FaultPlan::parse(&p.to_string()).expect("reparse"), p);
+    }
+
+    #[test]
+    fn parse_errors_name_the_problem() {
+        let e = FaultPlan::parse("explode@now=1").expect_err("unknown kind");
+        assert!(e.contains("unknown fault kind"), "{e}");
+        let e = FaultPlan::parse("kill@late=3").expect_err("missing key");
+        assert!(e.contains("missing required parameter \"epoch\""), "{e}");
+        let e = FaultPlan::parse("kill@epoch=soon").expect_err("bad int");
+        assert!(e.contains("integer"), "{e}");
+        let e = FaultPlan::parse("kill").expect_err("no @");
+        assert!(e.contains("kind@key=value"), "{e}");
+    }
+
+    #[test]
+    fn empty_plan() {
+        assert!(FaultPlan::none().is_empty());
+        assert!(FaultPlan::parse("").expect("empty").is_empty());
+        assert_eq!(FaultPlan::none().kill_epoch(), None);
+    }
+}

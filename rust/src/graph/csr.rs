@@ -161,24 +161,53 @@ impl Graph {
         self.row_ptr.len() * 4 + self.col_idx.len() * 4 + self.weights.len() * 4
     }
 
-    /// Check structural invariants.
+    /// Check structural invariants. Every rejection names the offending
+    /// row or edge so a corrupt load is diagnosable without a debugger.
     pub fn validate(&self) -> Result<(), String> {
         if self.row_ptr.len() != self.num_nodes + 1 {
-            return Err("row_ptr length".into());
+            return Err(format!(
+                "row_ptr has {} entries but num_nodes + 1 = {}",
+                self.row_ptr.len(),
+                self.num_nodes + 1
+            ));
         }
-        if self.row_ptr[0] != 0 || *self.row_ptr.last().unwrap() as usize != self.col_idx.len() {
-            return Err("row_ptr endpoints".into());
+        if self.row_ptr[0] != 0 {
+            return Err(format!("row_ptr[0] = {} (must be 0)", self.row_ptr[0]));
         }
-        for w in self.row_ptr.windows(2) {
+        let last = *self.row_ptr.last().expect("row_ptr has num_nodes + 1 ≥ 1 entries") as usize;
+        if last != self.col_idx.len() {
+            return Err(format!(
+                "row_ptr ends at {last} but col_idx holds {} edges",
+                self.col_idx.len()
+            ));
+        }
+        for (u, w) in self.row_ptr.windows(2).enumerate() {
             if w[0] > w[1] {
-                return Err("row_ptr not monotone".into());
+                return Err(format!(
+                    "row_ptr not monotone at row {u}: {} > {}",
+                    w[0], w[1]
+                ));
             }
         }
-        if self.col_idx.iter().any(|&v| v as usize >= self.num_nodes) {
-            return Err("col_idx out of range".into());
+        for (e, &v) in self.col_idx.iter().enumerate() {
+            if v as usize >= self.num_nodes {
+                return Err(format!(
+                    "col_idx out of range at edge {e}: {v} ≥ num_nodes {}",
+                    self.num_nodes
+                ));
+            }
         }
         if self.col_idx.len() != self.weights.len() {
-            return Err("weights length".into());
+            return Err(format!(
+                "weights holds {} entries but col_idx holds {} edges",
+                self.weights.len(),
+                self.col_idx.len()
+            ));
+        }
+        for (e, &w) in self.weights.iter().enumerate() {
+            if !w.is_finite() {
+                return Err(format!("edge weight not finite at edge {e}: {w}"));
+            }
         }
         Ok(())
     }
@@ -303,5 +332,24 @@ mod tests {
         g.validate().unwrap();
         assert_eq!(g.num_edges(), 0);
         assert_eq!(g.max_degree(), 0);
+    }
+
+    #[test]
+    fn validate_names_offending_row_and_edge() {
+        let mut g = triangle();
+        g.row_ptr[1] = 3;
+        g.row_ptr[2] = 2; // non-monotone between rows 1 and 2
+        let err = g.validate().expect_err("non-monotone row_ptr must be rejected");
+        assert!(err.contains("row 1"), "{err}");
+
+        let mut g = triangle();
+        g.col_idx[2] = 99; // out-of-range neighbor at edge 2
+        let err = g.validate().expect_err("out-of-range col must be rejected");
+        assert!(err.contains("edge 2") && err.contains("99"), "{err}");
+
+        let mut g = triangle();
+        g.weights[1] = f32::NAN;
+        let err = g.validate().expect_err("NaN edge weight must be rejected");
+        assert!(err.contains("edge 1"), "{err}");
     }
 }

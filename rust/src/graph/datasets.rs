@@ -58,6 +58,68 @@ pub struct Dataset {
     pub test_mask: Vec<bool>,
 }
 
+impl Dataset {
+    /// Full structural validation, run at load time: both CSRs (monotone
+    /// `row_ptr`, in-bounds `col_idx`, finite weights — see
+    /// [`Graph::validate`]), finite features, in-range labels, and mask
+    /// shapes. Every rejection names the offending row/edge/node so a bad
+    /// load fails loudly instead of corrupting a training run.
+    pub fn validate(&self) -> Result<(), String> {
+        let name = self.spec.name;
+        self.graph
+            .validate()
+            .map_err(|e| format!("dataset '{name}': normalized graph: {e}"))?;
+        self.raw_graph
+            .validate()
+            .map_err(|e| format!("dataset '{name}': raw graph: {e}"))?;
+        if self.features.rows != self.spec.nodes || self.features.cols != self.spec.features {
+            return Err(format!(
+                "dataset '{name}': feature matrix is {}×{} but the spec says {}×{}",
+                self.features.rows, self.features.cols, self.spec.nodes, self.spec.features
+            ));
+        }
+        for (i, &v) in self.features.data.iter().enumerate() {
+            if !v.is_finite() {
+                let cols = self.features.cols.max(1);
+                return Err(format!(
+                    "dataset '{name}': feature not finite at row {} col {}: {v}",
+                    i / cols,
+                    i % cols
+                ));
+            }
+        }
+        if self.labels.len() != self.spec.nodes {
+            return Err(format!(
+                "dataset '{name}': {} labels for {} nodes",
+                self.labels.len(),
+                self.spec.nodes
+            ));
+        }
+        for (u, &l) in self.labels.iter().enumerate() {
+            if l as usize >= self.spec.classes {
+                return Err(format!(
+                    "dataset '{name}': label out of range at node {u}: {l} ≥ {} classes",
+                    self.spec.classes
+                ));
+            }
+        }
+        for (which, mask) in [
+            ("train", &self.train_mask),
+            ("val", &self.val_mask),
+            ("test", &self.test_mask),
+        ] {
+            if mask.len() != self.spec.nodes {
+                return Err(format!(
+                    "dataset '{name}': {which} mask has {} entries for {} nodes",
+                    mask.len(),
+                    self.spec.nodes
+                ));
+            }
+        }
+        Ok(())
+    }
+}
+
 /// All eleven benchmark configurations, ordered as in Table II
 /// (AmazonComputers appears in the paper's GPU evaluation §V-D).
 pub fn all_specs() -> Vec<DatasetSpec> {
@@ -169,7 +231,7 @@ pub fn load(spec: &DatasetSpec) -> Dataset {
             _ => test_mask[u] = true,
         }
     }
-    Dataset {
+    let ds = Dataset {
         spec: spec.clone(),
         graph,
         raw_graph,
@@ -178,7 +240,13 @@ pub fn load(spec: &DatasetSpec) -> Dataset {
         train_mask,
         val_mask,
         test_mask,
+    };
+    // Load-time gate: a generator bug must fail here, with a message
+    // naming the offending row/edge/node, not N epochs later as NaNs.
+    if let Err(e) = ds.validate() {
+        panic!("{e}");
     }
+    ds
 }
 
 /// Convenience: load by name.
@@ -239,5 +307,20 @@ mod tests {
     fn unknown_name_is_none() {
         assert!(spec_by_name("nope").is_none());
         assert!(spec_by_name("NELL").is_some()); // case-insensitive
+    }
+
+    #[test]
+    fn validate_names_bad_feature_and_label() {
+        let mut ds = load_by_name("corafull").unwrap();
+        ds.validate().expect("freshly loaded dataset must validate");
+        let cols = ds.features.cols;
+        ds.features.data[2 * cols + 3] = f32::INFINITY;
+        let err = ds.validate().expect_err("non-finite feature must be rejected");
+        assert!(err.contains("row 2") && err.contains("col 3"), "{err}");
+
+        let mut ds = load_by_name("corafull").unwrap();
+        ds.labels[7] = u32::MAX;
+        let err = ds.validate().expect_err("out-of-range label must be rejected");
+        assert!(err.contains("node 7"), "{err}");
     }
 }

@@ -3,7 +3,7 @@
 //! single fused sweep per buffer — no interpreter, no temporary tensors.
 
 /// Hyper-parameters for Adam/AdamW.
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Copy, Debug, PartialEq)]
 pub struct AdamParams {
     /// Learning rate.
     pub lr: f32,

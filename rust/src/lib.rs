@@ -39,6 +39,8 @@ pub mod cache;
 pub mod model;
 pub mod optim;
 pub mod train;
+pub mod ckpt;
+pub mod fault;
 pub mod baselines;
 pub mod partition;
 pub mod dist;

@@ -17,6 +17,7 @@ use anyhow::{anyhow, Result};
 use morphling::coordinator::{run, run_dist, run_serve, DistSpec, ServeSpec, TrainSpec};
 use morphling::engine::sparsity::calibrate_gamma_ex;
 use morphling::engine::{EngineKind, RunMode};
+use morphling::fault::FaultPlan;
 use morphling::graph::datasets;
 use morphling::kernels::dispatch::{tune, VariantChoice};
 use morphling::kernels::parallel::ExecPolicy;
@@ -75,6 +76,14 @@ fn cmd_shapes(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Parse the shared `--fault` plan flag (empty plan when absent).
+fn fault_arg(args: &Args) -> Result<FaultPlan> {
+    match args.get("fault") {
+        Some(raw) => FaultPlan::parse(raw).map_err(anyhow::Error::msg),
+        None => Ok(FaultPlan::none()),
+    }
+}
+
 fn cmd_train(args: &Args) -> Result<()> {
     let spec = TrainSpec {
         dataset: args.get_or("dataset", "corafull").to_string(),
@@ -125,6 +134,10 @@ fn cmd_train(args: &Args) -> Result<()> {
         seed: args.u64_or("seed", 42),
         artifacts_dir: args.get_or("artifacts", "artifacts").into(),
         log: !args.flag("quiet"),
+        checkpoint_dir: args.get("checkpoint-dir").map(str::to_string),
+        checkpoint_every: args.usize_or("checkpoint-every", 0),
+        resume: args.flag("resume"),
+        fault: fault_arg(args)?,
     };
     let out = run(&spec)?;
     println!(
@@ -152,6 +165,23 @@ fn cmd_train(args: &Args) -> Result<()> {
         fmt_secs(out.report.sustained_epoch_secs()),
         fmt_bytes(out.peak_bytes),
     );
+    if out.report.ckpt_saves > 0 {
+        println!(
+            "checkpoints: {} written to {} (last {}, {} total write time)",
+            out.report.ckpt_saves,
+            spec.checkpoint_dir.as_deref().unwrap_or("?"),
+            fmt_bytes(out.report.ckpt_bytes as usize),
+            fmt_secs(out.report.ckpt_secs),
+        );
+    }
+    if out.report.killed {
+        println!("run killed by injected fault at an epoch boundary (resume with --resume)");
+    }
+    if let Some(h) = out.param_hash {
+        // The bitwise-resume comparator: crash→resume and uninterrupted
+        // runs must print identical hashes (CI diffs this line).
+        println!("param hash: {h:016x}");
+    }
     Ok(())
 }
 
@@ -209,6 +239,10 @@ fn cmd_dist(args: &Args) -> Result<()> {
         threads: args.usize_or("threads", 0),
         cache: args.flag("cache") || args.get("cache-staleness").is_some(),
         cache_staleness: args.u64_or("cache-staleness", 1),
+        checkpoint_dir: args.get("checkpoint-dir").map(str::to_string),
+        checkpoint_every: args.usize_or("checkpoint-every", 0),
+        resume: args.flag("resume"),
+        fault: fault_arg(args)?,
     };
     let r = run_dist(&spec)?;
     println!(
@@ -239,6 +273,20 @@ fn cmd_dist(args: &Args) -> Result<()> {
             c.candidates,
             c.mean_staleness(),
         );
+    }
+    if r.start_epoch > 0 {
+        println!("resumed at completed epoch {}", r.start_epoch);
+    }
+    if r.ckpt_saves > 0 {
+        println!(
+            "checkpoints: {} written by rank 0 (last {}, {} total write time)",
+            r.ckpt_saves,
+            fmt_bytes(r.ckpt_bytes as usize),
+            fmt_secs(r.ckpt_secs),
+        );
+    }
+    if r.killed {
+        println!("run killed by injected fault at an epoch boundary (resume with --resume)");
     }
     let mut t = Table::new(vec!["rank", "local", "ghosts", "edges", "sent", "exposed-comm"]);
     for s in &r.ranks {
@@ -273,6 +321,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
         threads: args.usize_or("threads", 0),
         seed: args.u64_or("seed", 42),
         log: !args.flag("quiet"),
+        shed: args.flag("shed"),
+        deadline_ms: args.u64_or("deadline-ms", 0),
+        fault: fault_arg(args)?,
     };
     let r = run_serve(&spec)?;
     let mut lat = r.latencies_secs.clone();
@@ -297,6 +348,15 @@ fn cmd_serve(args: &Args) -> Result<()> {
         fmt_bytes(r.snapshot_bytes),
         r.accuracy,
     );
+    if r.shed > 0 || spec.shed || spec.deadline_ms > 0 {
+        println!("shed: {} request(s) dropped by the admission path", r.shed);
+    }
+    if r.degraded_refreshes > 0 {
+        println!(
+            "degraded: {} refresh(es) failed — last good snapshot kept serving",
+            r.degraded_refreshes
+        );
+    }
     Ok(())
 }
 
@@ -371,19 +431,25 @@ fn main() -> Result<()> {
                  \u{20}          --mode full|minibatch [--batch-size 512] [--fanouts 10,25] [--no-prefetch]\n\
                  \u{20}          [--cache] [--cache-staleness K]\n\
                  \u{20}          [--kernels auto|generic|specialized] [--tune-manifest artifacts/tune.json]\n\
+                 \u{20}          [--checkpoint-dir D] [--checkpoint-every N] [--resume] [--fault PLAN]\n\
                  \u{20}          (minibatch: native engine; fanout 0 = full neighborhood;\n\
-                 \u{20}           cache serves stale out-of-batch activations, K=0 exact)\n\
+                 \u{20}           cache serves stale out-of-batch activations, K=0 exact;\n\
+                 \u{20}           checkpoints are atomic + CRC-checked; crash→--resume is bitwise-\n\
+                 \u{20}           equal to an uninterrupted run; fault plans: kill@epoch=E,\n\
+                 \u{20}           corrupt-ckpt@n=N, straggle@rank=R,ms=M, refresh-fail@n=N)\n\
                  partition: --dataset corafull --k 4\n\
                  dist:      --dataset corafull --world 4 [--threads N] [--blocking] [--chunk]\n\
                  \u{20}          [--network infiniband|ethernet|ideal]\n\
                  \u{20}          --mode full|minibatch (or --dist-sampled) [--shards S] [--batch-size 512]\n\
                  \u{20}          [--fanouts 10,25] [--cache] [--cache-staleness K]\n\
+                 \u{20}          [--checkpoint-dir D] [--checkpoint-every N] [--resume] [--fault PLAN]\n\
                  \u{20}          (rank workers are real threads; epoch time reports measured wall clock\n\
                  \u{20}           and the modeled fabric column; sampled mode is bitwise-identical at\n\
                  \u{20}           any --world x --threads)\n\
                  serve:     --dataset corafull --arch sage --requests 256 --batch-size 32\n\
                  \u{20}          [--workers N] [--queue-cap Q] [--serve-exact] [--train-epochs 2]\n\
                  \u{20}          [--refresh-every R] [--serve-fanout 0] [--fanouts 10,25] [--threads N]\n\
+                 \u{20}          [--shed] [--deadline-ms D] [--fault refresh-fail@n=N]\n\
                  \u{20}          (snapshot-backed inference: deep layers answer from a frozen\n\
                  \u{20}           historical store — one block + one layer per request; --serve-exact\n\
                  \u{20}           runs the full recursion; --refresh-every R swaps in a freshly trained\n\

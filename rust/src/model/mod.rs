@@ -161,6 +161,29 @@ impl GnnParams {
     pub fn nbytes(&self) -> usize {
         self.num_params() * 4 * 2
     }
+
+    /// FNV-1a hash over the trainable scalars' bit patterns (gradients
+    /// excluded) — the cheap bitwise-equality fingerprint the CLI prints
+    /// and the crash-resume CI leg compares (`resume ≡ uninterrupted`).
+    pub fn param_hash(&self) -> u64 {
+        let mut h: u64 = 0xCBF2_9CE4_8422_2325;
+        let mut mix = |buf: &[f32]| {
+            for &x in buf {
+                for b in x.to_bits().to_le_bytes() {
+                    h ^= b as u64;
+                    h = h.wrapping_mul(0x0000_0100_0000_01B3);
+                }
+            }
+        };
+        for l in &self.layers {
+            mix(&l.w.data);
+            if let Some(ws) = &l.w_self {
+                mix(&ws.data);
+            }
+            mix(&l.b);
+        }
+        h
+    }
 }
 
 #[cfg(test)]
@@ -206,6 +229,20 @@ mod tests {
             seen += param.len();
         });
         assert_eq!(seen, total);
+    }
+
+    #[test]
+    fn param_hash_tracks_params_not_grads() {
+        let mut rng = Rng::new(5);
+        let c = ModelConfig::paper_default(Arch::SageMean, 16, 4);
+        let mut p = GnnParams::init(&c, &mut rng);
+        let h0 = p.param_hash();
+        // Gradients don't contribute.
+        p.layers[0].dw.data[0] = 123.0;
+        assert_eq!(p.param_hash(), h0);
+        // Any single param bit does.
+        p.layers[0].w.data[0] += 1.0;
+        assert_ne!(p.param_hash(), h0);
     }
 
     #[test]

@@ -57,7 +57,9 @@ pub struct PjrtEngine {
 /// Pad a graph's CSR arrays to `n_pad` nodes (extra isolated nodes).
 fn padded_csr(g: &Graph, n_pad: usize) -> (Vec<i32>, Vec<i32>, Vec<f32>, Vec<i32>) {
     let mut row_ptr: Vec<i32> = g.row_ptr.iter().map(|&v| v as i32).collect();
-    let last = *row_ptr.last().unwrap();
+    let last = *row_ptr
+        .last()
+        .expect("CSR invariant: row_ptr always holds num_nodes + 1 ≥ 1 entries");
     row_ptr.resize(n_pad + 1, last);
     let col: Vec<i32> = g.col_idx.iter().map(|&v| v as i32).collect();
     let val = g.weights.clone();
@@ -204,12 +206,12 @@ impl PjrtEngine {
         let mut it = tuple.into_iter();
         let loss = it
             .next()
-            .unwrap()
+            .expect("ensure! above pinned the tuple to 21 outputs; loss is output 0")
             .get_first_element::<f32>()
             .map_err(|e| anyhow!("loss: {e:?}"))? as f64;
         let acc = it
             .next()
-            .unwrap()
+            .expect("ensure! above pinned the tuple to 21 outputs; acc is output 1")
             .get_first_element::<f32>()
             .map_err(|e| anyhow!("acc: {e:?}"))? as f64;
         self.params = it.by_ref().take(6).collect();
@@ -230,7 +232,7 @@ impl Engine for PjrtEngine {
         let mut phases = PhaseTimes::new();
         let (loss, acc) = phases
             .time("fused_step", || self.run_train())
-            .expect("pjrt train step");
+            .expect("PJRT train step failed: executable/runtime mismatch with the AOT artifacts");
         EpochStats {
             loss,
             train_acc: acc,
@@ -251,14 +253,18 @@ impl Engine for PjrtEngine {
         let result = self
             .exe_eval
             .execute::<&xla::Literal>(&args)
-            .expect("eval execute");
+            .expect("PJRT eval execute failed: arity/shape drift against the compiled artifact");
         let tuple = result[0][0]
             .to_literal_sync()
-            .expect("to_literal")
+            .expect("PJRT eval output must transfer to host (device buffer still live)")
             .to_tuple()
-            .expect("to_tuple");
-        let loss = tuple[0].get_first_element::<f32>().expect("loss") as f64;
-        let acc = tuple[1].get_first_element::<f32>().expect("acc") as f64;
+            .expect("eval artifact contract: output is a (loss, acc) tuple");
+        let loss = tuple[0]
+            .get_first_element::<f32>()
+            .expect("eval artifact contract: loss is a scalar f32") as f64;
+        let acc = tuple[1]
+            .get_first_element::<f32>()
+            .expect("eval artifact contract: acc is a scalar f32") as f64;
         (loss, acc)
     }
 

@@ -34,6 +34,7 @@ use super::block::MiniBatch;
 use super::neighbor::{mix64, SampleCtx};
 use super::pipeline::run_batches;
 use crate::cache::{CacheEpochStats, CacheGate, HistCache};
+use crate::ckpt::Checkpoint;
 use crate::engine::{Engine, Mask};
 use crate::graph::Dataset;
 use crate::kernels::activations::{relu_backward_inplace_ex, relu_inplace_ex, softmax_xent};
@@ -661,6 +662,84 @@ impl Engine for MiniBatchEngine {
     fn peak_bytes(&self) -> usize {
         self.st.static_bytes + self.st.ws_peak
     }
+
+    fn gnn_params(&self) -> Option<&GnnParams> {
+        Some(&self.st.params)
+    }
+
+    fn export_ckpt(&self) -> Option<Checkpoint> {
+        // The epoch cursor is the engine's — the shuffle RNG is keyed by
+        // (seed, epoch), so restoring it restores the sampling schedule.
+        Some(Checkpoint {
+            epoch: self.st.epoch,
+            seed: self.st.seed,
+            params: self.st.params.clone(),
+            opt: self.st.opt.export_state(),
+            caches: self.st.hist.iter().cloned().collect(),
+        })
+    }
+
+    fn import_ckpt(&mut self, ck: &Checkpoint) -> Result<(), String> {
+        if ck.params.config.arch != self.st.arch || ck.params.config.dims != self.st.dims {
+            return Err(format!(
+                "checkpoint shape mismatch: checkpoint is {} {:?}, engine is {} {:?}",
+                ck.params.config.arch.name(),
+                ck.params.config.dims,
+                self.st.arch.name(),
+                self.st.dims
+            ));
+        }
+        match (self.st.hist.as_mut(), ck.caches.as_slice()) {
+            (Some(hist), [stored]) => {
+                if stored.staleness() != hist.staleness() {
+                    return Err(format!(
+                        "checkpoint cache staleness K={} but engine configured K={} — \
+                         the gate schedule would diverge from the original run",
+                        stored.staleness(),
+                        hist.staleness()
+                    ));
+                }
+                if stored.num_levels() != hist.num_levels() {
+                    return Err(format!(
+                        "checkpoint cache has {} levels, engine store has {}",
+                        stored.num_levels(),
+                        hist.num_levels()
+                    ));
+                }
+                *hist = stored.clone();
+            }
+            (Some(_), []) => {
+                return Err(
+                    "checkpoint has no historical-cache store but the engine has the cache \
+                     enabled — resuming would restart from a cold store and diverge"
+                        .to_string(),
+                )
+            }
+            (Some(_), more) => {
+                return Err(format!(
+                    "checkpoint carries {} per-shard cache stores (a distributed run); the \
+                     serial minibatch engine expects exactly one",
+                    more.len()
+                ))
+            }
+            (None, []) => {}
+            (None, stores) => {
+                return Err(format!(
+                    "checkpoint carries {} cache store(s) but the engine has the cache \
+                     disabled — enable --cache with the original staleness to resume",
+                    stores.len()
+                ))
+            }
+        }
+        self.st.opt.import_state(&ck.opt)?;
+        self.st.params = ck.params.clone();
+        self.st.params.zero_grads();
+        self.st.epoch = ck.epoch;
+        self.gate = None;
+        self.st.cache_stats = CacheEpochStats::default();
+        self.st.ws_peak = 0;
+        Ok(())
+    }
 }
 
 #[cfg(test)]
@@ -704,6 +783,7 @@ mod tests {
                     epochs: 25,
                     eval_every: 0,
                     log: false,
+                    ..Default::default()
                 },
             );
             assert!(

@@ -35,5 +35,5 @@ pub mod server;
 pub mod snapshot;
 
 pub use engine::{ServeMode, ServeResponse};
-pub use server::{random_targets, JobResult, ServeJob, Server, ServerConfig};
+pub use server::{random_targets, JobResult, ServeJob, Server, ServerConfig, SubmitOutcome};
 pub use snapshot::{ServingSnapshot, SnapshotSlot};

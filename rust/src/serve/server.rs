@@ -16,10 +16,11 @@ use super::snapshot::SnapshotSlot;
 use crate::sampler::SamplerScratch;
 use crate::util::Rng;
 use std::collections::HashSet;
-use std::sync::mpsc::{self, Receiver, SyncSender};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{self, Receiver, SyncSender, TrySendError};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 /// Server shape: worker count, queue depth, and the serve path.
 #[derive(Clone, Copy, Debug)]
@@ -68,12 +69,25 @@ pub struct JobResult {
     pub service_secs: f64,
 }
 
+/// What happened to one submitted job on the non-blocking paths.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SubmitOutcome {
+    /// Enqueued; a worker will serve it.
+    Accepted,
+    /// Dropped under load: the queue stayed full past the caller's
+    /// patience. Counted in [`Server::shed_count`].
+    Shed,
+    /// Every worker has exited; no further job can be served.
+    Closed,
+}
+
 /// A running server: submit jobs, then [`finish`](Server::finish) to
 /// drain results and join the workers.
 pub struct Server {
     tx: Option<SyncSender<ServeJob>>,
     results: Receiver<JobResult>,
     handles: Vec<JoinHandle<()>>,
+    shed: AtomicU64,
 }
 
 impl Server {
@@ -138,6 +152,7 @@ impl Server {
             tx: Some(tx),
             results,
             handles,
+            shed: AtomicU64::new(0),
         }
     }
 
@@ -149,6 +164,57 @@ impl Server {
             .expect("submit after finish: the job queue is already closed")
             .send(job)
             .is_ok()
+    }
+
+    /// Load-shedding submit: enqueue if there is room *right now*,
+    /// otherwise drop the job and count it ([`SubmitOutcome::Shed`]).
+    /// Degrades throughput instead of latency when the pool is saturated.
+    pub fn try_submit(&self, job: ServeJob) -> SubmitOutcome {
+        let tx = self
+            .tx
+            .as_ref()
+            .expect("submit after finish: the job queue is already closed");
+        match tx.try_send(job) {
+            Ok(()) => SubmitOutcome::Accepted,
+            Err(TrySendError::Full(_)) => {
+                self.shed.fetch_add(1, Ordering::Relaxed);
+                SubmitOutcome::Shed
+            }
+            Err(TrySendError::Disconnected(_)) => SubmitOutcome::Closed,
+        }
+    }
+
+    /// Deadline submit: retry enqueueing for up to `deadline_ms`, then
+    /// shed. `std::sync`'s `SyncSender` has no `send_timeout`, so this
+    /// polls `try_send` with a short sleep — the 200 µs granularity is
+    /// far below any useful admission deadline.
+    pub fn submit_deadline(&self, job: ServeJob, deadline_ms: u64) -> SubmitOutcome {
+        let tx = self
+            .tx
+            .as_ref()
+            .expect("submit after finish: the job queue is already closed");
+        let deadline = Instant::now() + Duration::from_millis(deadline_ms);
+        let mut job = job;
+        loop {
+            match tx.try_send(job) {
+                Ok(()) => return SubmitOutcome::Accepted,
+                Err(TrySendError::Disconnected(_)) => return SubmitOutcome::Closed,
+                Err(TrySendError::Full(j)) => {
+                    if Instant::now() >= deadline {
+                        self.shed.fetch_add(1, Ordering::Relaxed);
+                        return SubmitOutcome::Shed;
+                    }
+                    job = j;
+                    std::thread::sleep(Duration::from_micros(200));
+                }
+            }
+        }
+    }
+
+    /// Jobs dropped so far by [`try_submit`](Server::try_submit) /
+    /// [`submit_deadline`](Server::submit_deadline).
+    pub fn shed_count(&self) -> u64 {
+        self.shed.load(Ordering::Relaxed)
     }
 
     /// Close the queue, drain every result, join the workers, and return

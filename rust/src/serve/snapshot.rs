@@ -16,6 +16,7 @@ use crate::kernels::parallel::ExecPolicy;
 use crate::model::{Arch, GnnParams};
 use crate::sampler::{SampleCtx, SamplerScratch, FULL_NEIGHBORHOOD};
 use crate::tensor::Matrix;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, RwLock};
 
 /// The epoch stamp written by the precompute pass and presented by every
@@ -195,6 +196,9 @@ impl ServingSnapshot {
 #[derive(Debug)]
 pub struct SnapshotSlot {
     cur: RwLock<Arc<ServingSnapshot>>,
+    /// Refresh attempts that failed and left the previous snapshot serving
+    /// (the degraded-but-available counter the serve report surfaces).
+    degraded: AtomicU64,
 }
 
 impl SnapshotSlot {
@@ -202,6 +206,7 @@ impl SnapshotSlot {
     pub fn new(snap: ServingSnapshot) -> SnapshotSlot {
         SnapshotSlot {
             cur: RwLock::new(Arc::new(snap)),
+            degraded: AtomicU64::new(0),
         }
     }
 
@@ -230,5 +235,34 @@ impl SnapshotSlot {
     /// Version of the currently installed snapshot.
     pub fn version(&self) -> u64 {
         self.load().version
+    }
+
+    /// Degradation-tolerant refresh: run `build` *without* holding the
+    /// lock, swap in its snapshot on success, and on failure keep the last
+    /// good snapshot serving — availability degrades (stale version) but
+    /// never disappears. Failed attempts are counted for the serve report.
+    ///
+    /// Returns the newly installed version, or the builder's error.
+    pub fn try_refresh(
+        &self,
+        build: impl FnOnce() -> Result<ServingSnapshot, String>,
+    ) -> Result<u64, String> {
+        match build() {
+            Ok(next) => {
+                let v = next.version;
+                self.swap(next);
+                Ok(v)
+            }
+            Err(msg) => {
+                self.degraded.fetch_add(1, Ordering::Relaxed);
+                Err(msg)
+            }
+        }
+    }
+
+    /// How many refresh attempts failed and fell back to the previous
+    /// snapshot ([`SnapshotSlot::try_refresh`]).
+    pub fn degraded_count(&self) -> u64 {
+        self.degraded.load(Ordering::Relaxed)
     }
 }

@@ -2,7 +2,9 @@
 //! and convergence reporting — the synthesized `for epoch …` loop of
 //! Listing 1.
 
+use crate::ckpt::CkptStore;
 use crate::engine::{Engine, Mask};
+use crate::fault::FaultPlan;
 use crate::graph::Dataset;
 use crate::util::timer::PhaseTimes;
 use crate::util::Timer;
@@ -23,6 +25,20 @@ impl EpochStats {
     }
 }
 
+/// Checkpointing policy for the loop driver: where to write, how often,
+/// and the seed material recorded for resume validation.
+#[derive(Clone, Debug)]
+pub struct CkptPolicy {
+    /// Directory of `ckpt-<epoch>.mck` files.
+    pub store: CkptStore,
+    /// Save every `every` completed epochs (0 = never).
+    pub every: usize,
+    /// Run seed, stored in each checkpoint: resuming under a different
+    /// seed would silently break the bitwise-resume contract, so the
+    /// coordinator rejects the mismatch by comparing this field.
+    pub seed: u64,
+}
+
 /// Training configuration for the loop driver.
 #[derive(Clone, Debug)]
 pub struct TrainConfig {
@@ -30,6 +46,12 @@ pub struct TrainConfig {
     /// Evaluate on the validation mask every `eval_every` epochs (0 = never).
     pub eval_every: usize,
     pub log: bool,
+    /// First epoch to run (non-zero after a checkpoint restore).
+    pub start_epoch: usize,
+    /// Periodic checkpointing (None = off).
+    pub ckpt: Option<CkptPolicy>,
+    /// Injected faults (kill at an epoch boundary, corrupt the N-th save).
+    pub fault: FaultPlan,
 }
 
 impl Default for TrainConfig {
@@ -38,6 +60,9 @@ impl Default for TrainConfig {
             epochs: 100,
             eval_every: 10,
             log: false,
+            start_epoch: 0,
+            ckpt: None,
+            fault: FaultPlan::none(),
         }
     }
 }
@@ -50,6 +75,15 @@ pub struct TrainReport {
     pub val_curve: Vec<(usize, f64, f64)>,
     pub test_acc: f64,
     pub total_secs: f64,
+    /// True when the fault plan killed the run at an epoch boundary (the
+    /// final test evaluation is skipped; `test_acc` is NaN).
+    pub killed: bool,
+    /// Checkpoints written this run.
+    pub ckpt_saves: usize,
+    /// Serialized size of the last checkpoint, in bytes.
+    pub ckpt_bytes: u64,
+    /// Total wall-clock seconds spent writing checkpoints.
+    pub ckpt_secs: f64,
 }
 
 impl TrainReport {
@@ -67,12 +101,19 @@ impl TrainReport {
     }
 }
 
-/// Drive `engine` for `cfg.epochs` full-batch epochs on `ds`.
+/// Drive `engine` from `cfg.start_epoch` to `cfg.epochs` epochs on `ds`,
+/// writing checkpoints on the `cfg.ckpt` schedule and honoring the fault
+/// plan: a due checkpoint is committed *before* the kill predicate is
+/// checked at the same boundary (a real crash happens after the rename
+/// commits or it didn't happen at all), so with `--checkpoint-every 1` a
+/// killed run always resumes from exactly the boundary it died at.
 pub fn train(engine: &mut dyn Engine, ds: &Dataset, cfg: &TrainConfig) -> TrainReport {
     let t = Timer::start();
-    let mut epochs = Vec::with_capacity(cfg.epochs);
+    let mut epochs = Vec::with_capacity(cfg.epochs.saturating_sub(cfg.start_epoch));
     let mut val_curve = Vec::new();
-    for e in 0..cfg.epochs {
+    let mut killed = false;
+    let (mut ckpt_saves, mut ckpt_bytes, mut ckpt_secs) = (0usize, 0u64, 0f64);
+    for e in cfg.start_epoch..cfg.epochs {
         let stats = engine.train_epoch(ds);
         if cfg.log {
             println!(
@@ -91,13 +132,69 @@ pub fn train(engine: &mut dyn Engine, ds: &Dataset, cfg: &TrainConfig) -> TrainR
             }
             val_curve.push((e, vl, va));
         }
+        let completed = (e + 1) as u64;
+        if let Some(pol) = &cfg.ckpt {
+            if pol.every > 0 && (e + 1) % pol.every == 0 {
+                match engine.export_ckpt() {
+                    Some(mut ck) => {
+                        ck.epoch = completed;
+                        ck.seed = pol.seed;
+                        match pol.store.save(&ck) {
+                            Ok(st) => {
+                                ckpt_saves += 1;
+                                ckpt_bytes = st.bytes;
+                                ckpt_secs += st.secs;
+                                if cfg.log {
+                                    println!(
+                                        "            checkpoint {} ({} bytes, {:.1} ms)",
+                                        st.path.display(),
+                                        st.bytes,
+                                        st.secs * 1e3
+                                    );
+                                }
+                                if cfg.fault.corrupts_save(ckpt_saves as u64) {
+                                    if let Err(msg) = crate::ckpt::corrupt_payload_byte(&st.path) {
+                                        eprintln!("fault corrupt-ckpt: {msg}");
+                                    } else {
+                                        eprintln!(
+                                            "fault corrupt-ckpt: damaged {} (save #{ckpt_saves})",
+                                            st.path.display()
+                                        );
+                                    }
+                                }
+                            }
+                            Err(msg) => eprintln!("checkpoint save failed: {msg}"),
+                        }
+                    }
+                    None => eprintln!(
+                        "checkpoint skipped: engine '{}' does not support export",
+                        engine.name()
+                    ),
+                }
+            }
+        }
+        if cfg.fault.kill_epoch() == Some(completed) {
+            if cfg.log {
+                println!("fault kill: stopping at epoch boundary {completed}");
+            }
+            killed = true;
+            break;
+        }
     }
-    let (_, test_acc) = engine.evaluate(ds, Mask::Test);
+    let test_acc = if killed {
+        f64::NAN
+    } else {
+        engine.evaluate(ds, Mask::Test).1
+    };
     TrainReport {
         epochs,
         val_curve,
         test_acc,
         total_secs: t.secs(),
+        killed,
+        ckpt_saves,
+        ckpt_bytes,
+        ckpt_secs,
     }
 }
 
@@ -141,13 +238,47 @@ mod tests {
             epochs: 5,
             eval_every: 2,
             log: false,
+            ..Default::default()
         };
         let report = train(&mut eng, &ds, &cfg);
         assert_eq!(report.epochs.len(), 5);
         assert_eq!(report.val_curve.len(), 2);
         assert_eq!(report.test_acc, 0.9);
+        assert!(!report.killed);
+        assert_eq!(report.ckpt_saves, 0);
         // loss decreased monotonically in the fake
         assert!(report.final_loss() < report.epochs[0].loss);
         assert!((report.sustained_epoch_secs() - 0.015).abs() < 1e-9);
+    }
+
+    #[test]
+    fn kill_fault_stops_at_boundary_and_skips_test_eval() {
+        let ds = crate::graph::datasets::load_by_name("corafull").unwrap();
+        let mut eng = FakeEngine { calls: 0 };
+        let cfg = TrainConfig {
+            epochs: 5,
+            eval_every: 0,
+            fault: crate::fault::FaultPlan::parse("kill@epoch=3").unwrap(),
+            ..Default::default()
+        };
+        let report = train(&mut eng, &ds, &cfg);
+        assert!(report.killed);
+        assert_eq!(report.epochs.len(), 3, "killed after 3 completed epochs");
+        assert!(report.test_acc.is_nan(), "killed run must not report test");
+    }
+
+    #[test]
+    fn start_epoch_shortens_the_loop() {
+        let ds = crate::graph::datasets::load_by_name("corafull").unwrap();
+        let mut eng = FakeEngine { calls: 0 };
+        let cfg = TrainConfig {
+            epochs: 5,
+            eval_every: 0,
+            start_epoch: 3,
+            ..Default::default()
+        };
+        let report = train(&mut eng, &ds, &cfg);
+        assert_eq!(report.epochs.len(), 2, "resumed run trains epochs 3..5");
+        assert!(!report.killed);
     }
 }

@@ -1,0 +1,318 @@
+//! Crash-consistency acceptance suite (checkpoint/restore PR):
+//!
+//! 1. **Save/load identity** — a checkpoint round-trips bitwise: params,
+//!    optimizer moments/step, epoch cursor, seed, and the historical-cache
+//!    stores all survive the on-disk format unchanged.
+//! 2. **Corruption is detected and named** — a truncated or bit-flipped
+//!    file is rejected with a message naming the file and the damaged
+//!    field, and `latest_good` falls back to the previous good checkpoint.
+//! 3. **Bitwise resume** — killing a run at *every* epoch boundary and
+//!    resuming from the newest checkpoint yields final parameters
+//!    bit-identical to a run that never crashed, across
+//!    GCN/SAGE-mean/SAGE-max × threads {1, 4} (serial mini-batch, cache
+//!    on for SAGE-mean) and across the world-2 sampled distributed
+//!    runtime. This is the crash-consistency contract: because the
+//!    shuffle RNG is epoch-keyed, (params, opt state, epoch cursor,
+//!    cache stores) fully determine the remaining epochs.
+
+use morphling::ckpt::{corrupt_payload_byte, CkptStore};
+use morphling::dist::runtime::{train_distributed, DistConfig, DistMode};
+use morphling::engine::Engine;
+use morphling::fault::FaultPlan;
+use morphling::graph::{datasets, Dataset};
+use morphling::kernels::update::AdamParams;
+use morphling::model::{Arch, ModelConfig};
+use morphling::optim::OptKind;
+use morphling::sampler::{MiniBatchConfig, MiniBatchEngine};
+use morphling::train::{train, CkptPolicy, TrainConfig};
+use std::path::PathBuf;
+
+fn tiny_dataset() -> Dataset {
+    let spec = morphling::graph::DatasetSpec {
+        name: "tiny-ckpt-it",
+        real_nodes: 0,
+        real_edges: 0,
+        real_features: 0,
+        nodes: 220,
+        edges: 1400,
+        features: 40,
+        classes: 4,
+        feat_sparsity: 0.0,
+        gamma: 2.4,
+        components: 1,
+    };
+    datasets::load(&spec)
+}
+
+/// A fresh per-test checkpoint directory under the system temp dir.
+fn fresh_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("morphling-ckpt-it-{tag}"));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+const SEED: u64 = 77;
+
+/// Build the engine every leg of a comparison uses: identical seed and
+/// config, so divergence can only come from the checkpoint path.
+fn make_engine(ds: &Dataset, arch: Arch, threads: usize, cache: Option<u64>) -> MiniBatchEngine {
+    let config = ModelConfig::paper_default(arch, ds.spec.features, ds.spec.classes);
+    let mb = MiniBatchConfig {
+        batch_size: 64,
+        fanouts: vec![4, 4],
+        prefetch: false,
+        cache,
+    };
+    let mut eng = MiniBatchEngine::new(ds, &config, OptKind::Adam, AdamParams::default(), mb, SEED)
+        .expect("tiny dataset satisfies the mini-batch constructor");
+    eng.set_threads(threads);
+    eng
+}
+
+#[test]
+fn checkpoint_roundtrip_is_bitwise_identity() {
+    let ds = tiny_dataset();
+    let mut eng = make_engine(&ds, Arch::SageMean, 1, Some(2));
+    for _ in 0..2 {
+        eng.train_epoch(&ds);
+    }
+    let ck = eng.export_ckpt().expect("mini-batch engine supports checkpointing");
+    let dir = fresh_dir("roundtrip");
+    let store = CkptStore::new(&dir).expect("temp checkpoint dir must open");
+    store.save(&ck).expect("save must succeed");
+    let scan = store.latest_good();
+    assert!(scan.skipped.is_empty(), "no file may be skipped: {:?}", scan.skipped);
+    let (path, loaded) = scan.found.expect("the just-saved checkpoint must load");
+    assert_eq!(path, store.path_for(ck.epoch));
+    assert_eq!(loaded.epoch, ck.epoch);
+    assert_eq!(loaded.seed, ck.seed);
+    assert_eq!(
+        loaded.params.param_hash(),
+        ck.params.param_hash(),
+        "parameter bits must survive the round trip"
+    );
+    assert_eq!(loaded.opt, ck.opt, "optimizer moments/step must round-trip");
+    assert_eq!(loaded.caches.len(), ck.caches.len());
+    for (a, b) in loaded.caches.iter().zip(&ck.caches) {
+        assert_eq!(a.staleness(), b.staleness());
+        assert_eq!(a.num_levels(), b.num_levels());
+        for l in 0..a.num_levels() {
+            let (ma, sa) = a.level_data(l);
+            let (mb, sb) = b.level_data(l);
+            assert_eq!(sa, sb, "stamps at level {l}");
+            assert_eq!(ma.data, mb.data, "rows at level {l}");
+        }
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn corruption_is_rejected_by_name_and_falls_back() {
+    let ds = tiny_dataset();
+    let mut eng = make_engine(&ds, Arch::Gcn, 1, None);
+    eng.train_epoch(&ds);
+    let mut ck = eng.export_ckpt().expect("mini-batch engine supports checkpointing");
+    let dir = fresh_dir("corrupt");
+    let store = CkptStore::new(&dir).expect("temp checkpoint dir must open");
+    ck.epoch = 1;
+    store.save(&ck).expect("epoch-1 save");
+    ck.epoch = 2;
+    store.save(&ck).expect("epoch-2 save");
+
+    // Bit-flip the newest file's payload: the loader must name the file
+    // and the damaged field, and the scan must fall back to epoch 1.
+    let newest = store.path_for(2);
+    corrupt_payload_byte(&newest).expect("flip one payload byte");
+    let err = CkptStore::load_path(&newest).expect_err("flipped payload must be rejected");
+    assert!(
+        err.contains(&newest.display().to_string()),
+        "error must name the file: {err}"
+    );
+    assert!(err.contains("CRC mismatch"), "error must say what failed: {err}");
+    let scan = store.latest_good();
+    let (path, good) = scan.found.expect("epoch-1 checkpoint is still good");
+    assert_eq!(path, store.path_for(1));
+    assert_eq!(good.epoch, 1);
+    assert_eq!(scan.skipped.len(), 1, "the flipped file is skipped with a reason");
+    assert!(scan.skipped[0].contains("CRC mismatch"), "{:?}", scan.skipped);
+
+    // Truncation: chop the file mid-payload; the rejection names the
+    // field the cursor ran out inside.
+    let bytes = std::fs::read(store.path_for(1)).expect("read good checkpoint");
+    std::fs::write(&newest, &bytes[..bytes.len() / 2]).expect("write truncated file");
+    let err = CkptStore::load_path(&newest).expect_err("truncated file must be rejected");
+    assert!(
+        err.contains("truncated") || err.contains("payload"),
+        "error must describe the damage: {err}"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Run `epochs` epochs uninterrupted and return the final param hash.
+fn uninterrupted_hash(ds: &Dataset, arch: Arch, threads: usize, cache: Option<u64>) -> u64 {
+    let mut eng = make_engine(ds, arch, threads, cache);
+    let r = train(
+        &mut eng,
+        ds,
+        &TrainConfig {
+            epochs: 4,
+            eval_every: 0,
+            ..Default::default()
+        },
+    );
+    assert!(!r.killed);
+    eng.gnn_params().expect("mini-batch engine exposes params").param_hash()
+}
+
+/// Kill at `kill_epoch`, then resume from the newest checkpoint and
+/// finish; return the final param hash.
+fn crash_resume_hash(
+    ds: &Dataset,
+    arch: Arch,
+    threads: usize,
+    cache: Option<u64>,
+    kill_epoch: u64,
+    dir: &PathBuf,
+) -> u64 {
+    let store = CkptStore::new(dir).expect("temp checkpoint dir must open");
+    let mut eng = make_engine(ds, arch, threads, cache);
+    let r = train(
+        &mut eng,
+        ds,
+        &TrainConfig {
+            epochs: 4,
+            eval_every: 0,
+            ckpt: Some(CkptPolicy {
+                store: CkptStore::new(dir).expect("reopen"),
+                every: 1,
+                seed: SEED,
+            }),
+            fault: FaultPlan::parse(&format!("kill@epoch={kill_epoch}")).expect("fault grammar"),
+            ..Default::default()
+        },
+    );
+    assert!(r.killed, "the kill fault must fire at epoch {kill_epoch}");
+    assert_eq!(r.ckpt_saves as u64, kill_epoch, "one checkpoint per completed epoch");
+    drop(eng); // the "crashed" process
+
+    let (_, ck) = store
+        .latest_good()
+        .found
+        .expect("a checkpoint exists at every kill boundary");
+    assert_eq!(ck.epoch, kill_epoch);
+    let mut eng = make_engine(ds, arch, threads, cache);
+    eng.import_ckpt(&ck).expect("restore must accept a matching checkpoint");
+    let r = train(
+        &mut eng,
+        ds,
+        &TrainConfig {
+            epochs: 4,
+            eval_every: 0,
+            start_epoch: ck.epoch as usize,
+            ..Default::default()
+        },
+    );
+    assert!(!r.killed);
+    assert_eq!(r.epochs.len(), 4 - kill_epoch as usize);
+    eng.gnn_params().expect("mini-batch engine exposes params").param_hash()
+}
+
+#[test]
+fn kill_at_every_boundary_resumes_bitwise_across_arch_and_threads() {
+    let ds = tiny_dataset();
+    // SAGE-mean runs with the historical cache on (staleness 2) so the
+    // store round-trips through the checkpoint; the others run cache-off.
+    let grid = [
+        (Arch::Gcn, None),
+        (Arch::SageMean, Some(2u64)),
+        (Arch::SageMax, None),
+    ];
+    for (arch, cache) in grid {
+        for threads in [1usize, 4] {
+            let want = uninterrupted_hash(&ds, arch, threads, cache);
+            for kill_epoch in 1..=3u64 {
+                let dir = fresh_dir(&format!("grid-{arch:?}-{threads}-{kill_epoch}"));
+                let got = crash_resume_hash(&ds, arch, threads, cache, kill_epoch, &dir);
+                assert_eq!(
+                    got, want,
+                    "{arch:?} × {threads} threads, killed at epoch {kill_epoch}: \
+                     resume must be bitwise-equal to the uninterrupted run"
+                );
+                let _ = std::fs::remove_dir_all(&dir);
+            }
+        }
+    }
+}
+
+#[test]
+fn dist_world2_kill_resume_is_bitwise() {
+    let ds = tiny_dataset();
+    let base = DistConfig {
+        world: 2,
+        epochs: 4,
+        seed: SEED,
+        mode: DistMode::Sampled,
+        threads: 1,
+        shards: 2,
+        batch_size: 64,
+        fanouts: vec![4, 4],
+        cache: Some(2),
+        ..Default::default()
+    };
+    let clean = train_distributed(&ds, &base).expect("uninterrupted dist run");
+    assert!(!clean.killed);
+    let want = clean.params.param_hash();
+
+    for threads in [1usize, 4] {
+        let dir = fresh_dir(&format!("dist-{threads}"));
+        let crashed = train_distributed(
+            &ds,
+            &DistConfig {
+                threads,
+                ckpt_dir: Some(dir.display().to_string()),
+                ckpt_every: 1,
+                fault: FaultPlan::parse("kill@epoch=2").expect("fault grammar"),
+                ..base.clone()
+            },
+        )
+        .expect("crashed dist leg runs to the kill point");
+        assert!(crashed.killed);
+        assert_eq!(crashed.ckpt_saves, 2);
+
+        let resumed = train_distributed(
+            &ds,
+            &DistConfig {
+                threads,
+                ckpt_dir: Some(dir.display().to_string()),
+                resume: true,
+                ..base.clone()
+            },
+        )
+        .expect("resumed dist leg");
+        assert!(!resumed.killed);
+        assert_eq!(resumed.start_epoch, 2);
+        assert_eq!(
+            resumed.params.param_hash(),
+            want,
+            "world-2 crash→resume at {threads} kernel thread(s) must be bitwise-equal \
+             to the uninterrupted run"
+        );
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}
+
+#[test]
+fn resume_rejects_mismatched_engine_shape() {
+    let ds = tiny_dataset();
+    let mut eng = make_engine(&ds, Arch::Gcn, 1, None);
+    eng.train_epoch(&ds);
+    let ck = eng.export_ckpt().expect("export");
+    // A SAGE-mean engine must refuse a GCN checkpoint, naming both.
+    let mut other = make_engine(&ds, Arch::SageMean, 1, None);
+    let err = other.import_ckpt(&ck).expect_err("arch mismatch must be rejected");
+    assert!(err.contains("gcn") || err.contains("Gcn"), "{err}");
+    // A cache-enabled engine must refuse a cache-less checkpoint.
+    let mut cached = make_engine(&ds, Arch::Gcn, 1, Some(2));
+    let err = cached.import_ckpt(&ck).expect_err("cache mismatch must be rejected");
+    assert!(err.contains("cache"), "{err}");
+}

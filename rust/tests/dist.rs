@@ -77,7 +77,7 @@ fn params_bits_equal(a: &GnnParams, b: &GnnParams) -> bool {
 }
 
 fn run(ds: &Dataset, cfg: &DistConfig) -> DistReport {
-    train_distributed(ds, cfg)
+    train_distributed(ds, cfg).expect("dist run")
 }
 
 /// Criterion 1: the tentpole determinism property. Every world × threads

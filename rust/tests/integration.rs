@@ -50,7 +50,7 @@ fn distributed_equals_serial_on_ogbn_arxiv() {
         seed: 11,
         ..Default::default()
     };
-    let dist = train_distributed(&ds, &cfg);
+    let dist = train_distributed(&ds, &cfg).expect("dist run");
     let config = ModelConfig::paper_default(Arch::Gcn, ds.spec.features, ds.spec.classes);
     let mut serial = NativeEngine::new(
         &ds,
