@@ -15,7 +15,11 @@
 //! trajectory artifact; `--manifest PATH` installs a `morphling tune`
 //! manifest before any engine runs, so the native rows reflect tuned
 //! dispatch. A `morphling-native-generic` row (kernel specialization
-//! forced off at tmax) quantifies the specialized bodies' contribution.
+//! forced off at tmax) quantifies the specialized bodies' contribution,
+//! and a `morphling-native-obs` row (span tracing + metrics recording
+//! armed at tmax) quantifies observability overhead — the `obs-ovh`
+//! column and the `obs_overhead_pct` JSON field, with an acceptance
+//! target under 2%.
 //!
 //! Expected shape vs the paper (§V-C): Morphling wins everywhere except
 //! dense-feature Reddit-like workloads where the DGL analogue is close;
@@ -84,11 +88,14 @@ fn main() {
         "vs generic".to_string(),
         "vs pyg".to_string(),
         "vs dgl".to_string(),
+        "obs-ovh".to_string(),
         "sparsity-path".to_string(),
     ]);
     let (mut geo_gen, mut geo_pyg, mut geo_dgl, mut n_geo) = (0.0f64, 0.0f64, 0.0f64, 0usize);
     // JSON records: (dataset, engine, threads, epoch_secs)
     let mut records: Vec<(String, &'static str, usize, f64)> = Vec::new();
+    // Observability overhead records: (dataset, obs-on epoch_secs, pct).
+    let mut obs_rows: Vec<(String, f64, f64)> = Vec::new();
 
     for spec in datasets::all_specs() {
         if !only.is_empty() && !only.contains(&spec.name.to_string()) {
@@ -133,7 +140,21 @@ fn main() {
         records.push((spec.name.to_string(), "nonfused(dgl)", tmax, t_nf));
         drop(nf);
 
+        // Same native config at tmax with observability armed: the delta
+        // against the obs-off row is the instrumentation overhead.
+        morphling::obs::set_enabled(true);
+        morphling::obs::reset();
+        let mut nat_obs = NativeEngine::paper_default(&ds, Arch::Gcn, 42).with_threads(tmax);
+        let p = probe(&mut nat_obs, &ds);
+        let (w, r) = budget(p);
+        let t_obs = epoch_time(&mut nat_obs, &ds, w, r);
+        morphling::obs::set_enabled(false);
+        morphling::obs::reset();
+        drop(nat_obs);
+
         let t_best = *t_native.last().unwrap();
+        let obs_pct = (t_obs / t_best - 1.0) * 100.0;
+        obs_rows.push((spec.name.to_string(), t_obs, obs_pct));
         let mut row: Vec<String> = vec![spec.name.to_string()];
         row.extend(t_native.iter().map(|s| fmt_secs(*s)));
         row.push(fmt_secs(t_gs));
@@ -145,6 +166,7 @@ fn main() {
             format!("{:.2}x", t_gen / t_best),
             format!("{:.2}x", t_gs / t_best),
             format!("{:.2}x", t_nf / t_best),
+            format!("{obs_pct:+.1}%"),
             mode,
         ]);
         geo_gen += (t_gen / t_best).ln();
@@ -167,7 +189,7 @@ fn main() {
     }
 
     if let Some(path) = args.get("json") {
-        let body: Vec<String> = records
+        let mut body: Vec<String> = records
             .iter()
             .map(|(ds, eng, t, secs)| {
                 format!(
@@ -175,6 +197,11 @@ fn main() {
                 )
             })
             .collect();
+        body.extend(obs_rows.iter().map(|(ds, secs, pct)| {
+            format!(
+                "{{\"dataset\":\"{ds}\",\"engine\":\"morphling-native-obs\",\"threads\":{tmax},\"epoch_secs\":{secs:.9},\"obs_overhead_pct\":{pct:.3}}}"
+            )
+        }));
         common::write_json_records(path, &body);
     }
 }

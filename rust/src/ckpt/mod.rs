@@ -149,6 +149,7 @@ impl CkptStore {
     /// Serialize and durably persist `ck`: write `ckpt-<epoch>.tmp`, fsync,
     /// rename to `ckpt-<epoch>.mck`, fsync the directory.
     pub fn save(&self, ck: &Checkpoint) -> Result<SaveStats, String> {
+        let _sp = crate::obs::trace::span("ckpt_save");
         let t = Timer::start();
         let bytes = encode(ck);
         let final_path = self.path_for(ck.epoch);
@@ -183,6 +184,11 @@ impl CkptStore {
     /// Scan the directory for the newest checkpoint that loads and
     /// verifies, skipping (and naming) corrupt or truncated files — the
     /// fallback path after a crash tore the most recent write.
+    ///
+    /// Every skip is logged at `warn` and counted in the metrics registry
+    /// as `ckpt.skipped_corrupt` (when observability is enabled); callers
+    /// get the same messages back in [`LatestGood::skipped`] for
+    /// programmatic use and should not re-log them.
     pub fn latest_good(&self) -> LatestGood {
         let mut out = LatestGood::default();
         let Ok(entries) = fs::read_dir(&self.dir) else {
@@ -208,7 +214,13 @@ impl CkptStore {
                     out.found = Some((path, ck));
                     break;
                 }
-                Err(msg) => out.skipped.push(msg),
+                Err(msg) => {
+                    crate::log_warn!("checkpoint scan: skipping corrupt file: {msg}");
+                    if crate::obs::enabled() {
+                        crate::obs::global().metrics.incr("ckpt.skipped_corrupt", 1);
+                    }
+                    out.skipped.push(msg);
+                }
             }
         }
         out

@@ -90,6 +90,12 @@ pub struct TrainSpec {
     /// Deterministic fault-injection plan (`--fault`, see
     /// [`crate::fault::FaultPlan::parse`]).
     pub fault: FaultPlan,
+    /// Enable observability (`--obs`); implied by either export path.
+    pub obs: bool,
+    /// Chrome-trace JSON output path (`--trace-out`).
+    pub trace_out: Option<PathBuf>,
+    /// Metrics JSON output path (`--metrics-out`).
+    pub metrics_out: Option<PathBuf>,
 }
 
 impl Default for TrainSpec {
@@ -119,6 +125,9 @@ impl Default for TrainSpec {
             checkpoint_every: 0,
             resume: false,
             fault: FaultPlan::none(),
+            obs: false,
+            trace_out: None,
+            metrics_out: None,
         }
     }
 }
@@ -257,6 +266,12 @@ pub struct DistSpec {
     pub resume: bool,
     /// Deterministic fault-injection plan (`--fault`).
     pub fault: FaultPlan,
+    /// Enable observability (`--obs`); implied by either export path.
+    pub obs: bool,
+    /// Chrome-trace JSON output path (`--trace-out`).
+    pub trace_out: Option<PathBuf>,
+    /// Metrics JSON output path (`--metrics-out`).
+    pub metrics_out: Option<PathBuf>,
 }
 
 impl Default for DistSpec {
@@ -280,6 +295,9 @@ impl Default for DistSpec {
             checkpoint_every: 0,
             resume: false,
             fault: FaultPlan::none(),
+            obs: false,
+            trace_out: None,
+            metrics_out: None,
         }
     }
 }
@@ -287,12 +305,48 @@ impl Default for DistSpec {
 /// Fabric presets the `--network` flag accepts.
 pub const NETWORK_VALID: &[&str] = &["infiniband", "ethernet", "ideal"];
 
+/// Arm observability for one coordinated run when the spec asks for it
+/// (`--obs` or either export path): enable the global handle and clear
+/// whatever a previous run in this process recorded, so exports cover
+/// exactly this run. Returns whether exports should be written at the
+/// end. When nothing asks for observability the global state is left
+/// untouched (an `MORPHLING_OBS` env enable keeps recording, it just
+/// isn't exported here).
+fn obs_begin(obs_flag: bool, trace_out: &Option<PathBuf>, metrics_out: &Option<PathBuf>) -> bool {
+    let on = obs_flag || trace_out.is_some() || metrics_out.is_some();
+    if on {
+        crate::obs::set_enabled(true);
+        crate::obs::reset();
+    }
+    on
+}
+
+/// Write the trace / metrics files a spec requested. Every worker thread
+/// of the run has exited (scoped or joined) by the time coordinators call
+/// this, so the trace is complete; the calling thread is flushed by the
+/// export itself.
+fn obs_export(trace_out: &Option<PathBuf>, metrics_out: &Option<PathBuf>) -> Result<()> {
+    let o = crate::obs::global();
+    if let Some(p) = trace_out {
+        o.tracer
+            .export(p)
+            .map_err(|e| anyhow!("--trace-out {}: write failed: {e}", p.display()))?;
+    }
+    if let Some(p) = metrics_out {
+        o.metrics
+            .export(p)
+            .map_err(|e| anyhow!("--metrics-out {}: write failed: {e}", p.display()))?;
+    }
+    Ok(())
+}
+
 /// Validate a [`DistSpec`] and run distributed training: load the
 /// dataset, check the sampled-mode knob combinations (same rules as the
 /// serial `train` path — the cache is a mini-batch construct), and hand
 /// the assembled [`DistConfig`] to
 /// [`train_distributed`](crate::dist::runtime::train_distributed).
 pub fn run_dist(spec: &DistSpec) -> Result<DistReport> {
+    let obs_on = obs_begin(spec.obs, &spec.trace_out, &spec.metrics_out);
     if spec.world == 0 {
         return Err(anyhow!("--world must be at least 1"));
     }
@@ -351,7 +405,13 @@ pub fn run_dist(spec: &DistSpec) -> Result<DistReport> {
         resume: spec.resume,
         fault: spec.fault.clone(),
     };
-    train_distributed(&ds, &cfg).map_err(anyhow::Error::msg)
+    let run_span = crate::obs::trace::span("run");
+    let report = train_distributed(&ds, &cfg).map_err(anyhow::Error::msg)?;
+    run_span.finish();
+    if obs_on {
+        obs_export(&spec.trace_out, &spec.metrics_out)?;
+    }
+    Ok(report)
 }
 
 /// Specification for the `morphling serve` subcommand: train briefly,
@@ -397,6 +457,12 @@ pub struct ServeSpec {
     /// K-th snapshot refresh fail (the slot keeps serving the last good
     /// snapshot).
     pub fault: FaultPlan,
+    /// Enable observability (`--obs`); implied by either export path.
+    pub obs: bool,
+    /// Chrome-trace JSON output path (`--trace-out`).
+    pub trace_out: Option<PathBuf>,
+    /// Metrics JSON output path (`--metrics-out`).
+    pub metrics_out: Option<PathBuf>,
 }
 
 impl Default for ServeSpec {
@@ -419,6 +485,9 @@ impl Default for ServeSpec {
             shed: false,
             deadline_ms: 0,
             fault: FaultPlan::none(),
+            obs: false,
+            trace_out: None,
+            metrics_out: None,
         }
     }
 }
@@ -469,6 +538,8 @@ impl ServeReport {
 /// [`Server`], and stream requests — optionally rebuilding + swapping
 /// fresh snapshots mid-stream from a refresher thread.
 pub fn run_serve(spec: &ServeSpec) -> Result<ServeReport> {
+    let obs_on = obs_begin(spec.obs, &spec.trace_out, &spec.metrics_out);
+    let run_span = crate::obs::trace::span("run");
     if spec.requests == 0 {
         return Err(anyhow!("--requests must be at least 1"));
     }
@@ -560,7 +631,7 @@ pub fn run_serve(spec: &ServeSpec) -> Result<ServeReport> {
     let mut targets_by_id: Vec<Vec<u32>> = Vec::with_capacity(spec.requests);
     let mut submit_at: Vec<Instant> = Vec::with_capacity(spec.requests);
     let t0 = Instant::now();
-    let (results, shed) = std::thread::scope(|s| {
+    let scope_out = std::thread::scope(|s| {
         // Refresher: each signal trains one more epoch, rebuilds a
         // successor snapshot (same graph/features, next version), and
         // swaps it in — in-flight requests keep their pinned snapshot.
@@ -586,7 +657,12 @@ pub fn run_serve(spec: &ServeSpec) -> Result<ServeReport> {
                         Ok(cur.rebuilt(eng.params().clone(), cur.version() + 1))
                     });
                     if let Err(msg) = res {
-                        eprintln!("snapshot refresh failed; serving last good snapshot: {msg}");
+                        crate::log_warn!(
+                            "snapshot refresh failed; serving last good snapshot: {msg}"
+                        );
+                        if crate::obs::enabled() {
+                            crate::obs::global().metrics.incr("serve.degraded", 1);
+                        }
                     }
                 }
             });
@@ -620,8 +696,10 @@ pub fn run_serve(spec: &ServeSpec) -> Result<ServeReport> {
         }
         drop(refresh_tx);
         let shed = server.shed_count();
-        (server.finish(), shed)
+        let depth_max = server.max_queue_depth();
+        (server.finish(), shed, depth_max)
     });
+    let (results, shed, queue_depth_max) = scope_out;
     let degraded_refreshes = slot.degraded_count();
     let served = results.len();
     if served == 0 {
@@ -652,6 +730,31 @@ pub fn run_serve(spec: &ServeSpec) -> Result<ServeReport> {
         }
     }
     versions.sort_unstable();
+    if crate::obs::enabled() {
+        let m = &crate::obs::global().metrics;
+        // Deterministic for a fixed seed: what was asked, served, shed,
+        // degraded, and the snapshot/cache work behind it.
+        m.incr("serve.requests", spec.requests as u64);
+        m.incr("serve.served", served as u64);
+        m.incr("serve.shed", shed);
+        m.incr("serve.snapshot_bytes", snapshot_bytes as u64);
+        m.incr("serve.sampled_edges", edges);
+        m.incr("cache.hits", hits);
+        m.incr("cache.candidates", cands);
+        // Wall-clock: queue pressure and the per-request latency shape.
+        m.gauge_set("serve.queue_depth_max", queue_depth_max as f64);
+        for &l in &latencies {
+            m.observe(
+                "serve.latency_secs",
+                &crate::obs::metrics::LATENCY_BOUNDS_SECS,
+                l,
+            );
+        }
+    }
+    run_span.finish();
+    if obs_on {
+        obs_export(&spec.trace_out, &spec.metrics_out)?;
+    }
     Ok(ServeReport {
         mode: mode.name(),
         served,
@@ -702,14 +805,16 @@ pub struct RunOutcome {
 /// The full coordinated flow: load → (install manifest) → decide → train →
 /// report.
 pub fn run(spec: &TrainSpec) -> Result<RunOutcome> {
+    let obs_on = obs_begin(spec.obs, &spec.trace_out, &spec.metrics_out);
+    let run_span = crate::obs::trace::span("run");
     if let Some(path) = &spec.tune_manifest {
         let manifest = TuneManifest::load(path)
             .map_err(|e| anyhow!("--tune-manifest {}: {e}", path.display()))?;
         if !dispatch::install_manifest(manifest) {
             // Set-once semantics: a manifest (or the env-var default) is
             // already live for this process; keep it rather than racing.
-            eprintln!(
-                "morphling: tuning manifest already installed; ignoring {}",
+            crate::log_warn!(
+                "tuning manifest already installed; ignoring {}",
                 path.display()
             );
         }
@@ -741,10 +846,9 @@ pub fn run(spec: &TrainSpec) -> Result<RunOutcome> {
         }
         let store = CkptStore::new(dir.as_str()).map_err(anyhow::Error::msg)?;
         if spec.resume {
+            // latest_good() logs each skipped-corrupt file itself (and
+            // counts `ckpt.skipped_corrupt`); no re-logging here.
             let scan = store.latest_good();
-            for msg in &scan.skipped {
-                eprintln!("resume: skipping {msg}");
-            }
             match scan.found {
                 Some((path, ck)) => {
                     if ck.seed != spec.seed {
@@ -758,13 +862,13 @@ pub fn run(spec: &TrainSpec) -> Result<RunOutcome> {
                     }
                     engine.import_ckpt(&ck).map_err(anyhow::Error::msg)?;
                     start_epoch = ck.epoch as usize;
-                    eprintln!(
+                    crate::log_info!(
                         "resume: restoring {} (completed epoch {})",
                         path.display(),
                         ck.epoch
                     );
                 }
-                None => eprintln!(
+                None => crate::log_warn!(
                     "resume: no usable checkpoint in {} — starting from scratch",
                     store.dir().display()
                 ),
@@ -792,6 +896,10 @@ pub fn run(spec: &TrainSpec) -> Result<RunOutcome> {
             fault: spec.fault.clone(),
         },
     );
+    run_span.finish();
+    if obs_on {
+        obs_export(&spec.trace_out, &spec.metrics_out)?;
+    }
     Ok(RunOutcome {
         engine_name: engine.name(),
         sparsity: decision.s,

@@ -273,8 +273,8 @@ pub(crate) fn partition_dataset(
 
 /// Shared checkpoint plumbing of the two distributed paths: open the store
 /// when a directory is configured and, under `resume`, locate the newest
-/// loadable checkpoint — printing one named rejection per damaged file the
-/// scan skipped — and validate it against this run's seed and model shape.
+/// loadable checkpoint (the scan itself logs one named rejection per
+/// damaged file) and validate it against this run's seed and model shape.
 /// The caller applies it to the replicated state on the main thread before
 /// any rank worker is spawned (that is what "all ranks restore" means in a
 /// shared-address-space runtime).
@@ -292,12 +292,10 @@ pub(crate) fn setup_ckpt(
     let Some(st) = &store else {
         return Err("--resume requires --checkpoint-dir".to_string());
     };
+    // latest_good() logs (and counts) each skipped corrupt file itself.
     let lg = st.latest_good();
-    for msg in &lg.skipped {
-        eprintln!("resume: skipping {msg}");
-    }
     let Some((path, ck)) = lg.found else {
-        eprintln!(
+        crate::log_warn!(
             "resume: no usable checkpoint in {}; starting from scratch",
             st.dir().display()
         );
@@ -322,7 +320,7 @@ pub(crate) fn setup_ckpt(
             dims
         ));
     }
-    eprintln!(
+    crate::log_info!(
         "resume: restoring {} (completed epoch {})",
         path.display(),
         ck.epoch
@@ -449,10 +447,23 @@ struct RunLog {
 /// [`DistConfig::mode`]. Errors are checkpoint-related (unopenable store,
 /// rejected resume) — a plain run cannot fail.
 pub fn train_distributed(ds: &Dataset, cfg: &DistConfig) -> Result<DistReport, String> {
-    match cfg.mode {
+    let report = match cfg.mode {
         DistMode::Full => train_full(ds, cfg),
         DistMode::Sampled => super::sampled::train_sampled(ds, cfg),
+    }?;
+    if crate::obs::enabled() {
+        let m = &crate::obs::global().metrics;
+        // Modeled halo + ring all-reduce wire traffic, one counter per
+        // peer — deterministic for a fixed (dataset, world, seed).
+        for rs in &report.ranks {
+            m.incr(
+                &format!("dist.rank{}.sent_bytes", rs.rank),
+                rs.bytes_sent as u64,
+            );
+        }
+        m.incr("dist.world", report.ranks.len() as u64);
     }
+    Ok(report)
 }
 
 /// The threaded full-batch path.
@@ -670,6 +681,7 @@ fn train_full(ds: &Dataset, cfg: &DistConfig) -> Result<DistReport, String> {
                     .collect();
                 barrier.wait();
                 for e in start_epoch..cfg.epochs {
+                    let _ep_span = crate::obs::trace::span("epoch");
                     // Timing-only straggler injection: sleep this rank at the
                     // epoch start so every peer stalls at the next barrier.
                     // Never touches numerics.
@@ -862,20 +874,26 @@ fn train_full(ds: &Dataset, cfg: &DistConfig) -> Result<DistReport, String> {
                                         lg.ckpt_saves += 1;
                                         lg.ckpt_bytes = sv.bytes;
                                         lg.ckpt_secs += sv.secs;
+                                        if crate::obs::enabled() {
+                                            let m = &crate::obs::global().metrics;
+                                            m.incr("ckpt.saves", 1);
+                                            m.incr("ckpt.bytes", sv.bytes);
+                                            m.gauge_add("ckpt.commit_secs", sv.secs);
+                                        }
                                         if cfg.fault.corrupts_save(lg.ckpt_saves as u64) {
                                             match corrupt_payload_byte(&sv.path) {
-                                                Ok(()) => eprintln!(
+                                                Ok(()) => crate::log_warn!(
                                                     "fault corrupt-ckpt: damaged {} (save #{})",
                                                     sv.path.display(),
                                                     lg.ckpt_saves
                                                 ),
                                                 Err(msg) => {
-                                                    eprintln!("fault corrupt-ckpt: {msg}")
+                                                    crate::log_warn!("fault corrupt-ckpt: {msg}")
                                                 }
                                             }
                                         }
                                     }
-                                    Err(msg) => eprintln!("checkpoint save failed: {msg}"),
+                                    Err(msg) => crate::log_error!("checkpoint save failed: {msg}"),
                                 }
                             }
                         }

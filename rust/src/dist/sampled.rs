@@ -304,6 +304,7 @@ pub fn train_sampled(ds: &Dataset, cfg: &DistConfig) -> Result<DistReport, Strin
                 let mut seeds = Vec::new();
                 let mut sub = Vec::new();
                 for e in start_epoch..cfg.epochs {
+                    let _ep_span = crate::obs::trace::span("epoch");
                     let epoch = (e + 1) as u64; // engine numbering: first epoch is 1
                     // Timing-only straggler injection: sleep this rank at the
                     // epoch start so every peer stalls at the barrier below.
@@ -455,20 +456,26 @@ pub fn train_sampled(ds: &Dataset, cfg: &DistConfig) -> Result<DistReport, Strin
                                         lg.ckpt_saves += 1;
                                         lg.ckpt_bytes = sv.bytes;
                                         lg.ckpt_secs += sv.secs;
+                                        if crate::obs::enabled() {
+                                            let m = &crate::obs::global().metrics;
+                                            m.incr("ckpt.saves", 1);
+                                            m.incr("ckpt.bytes", sv.bytes);
+                                            m.gauge_add("ckpt.commit_secs", sv.secs);
+                                        }
                                         if cfg.fault.corrupts_save(lg.ckpt_saves as u64) {
                                             match corrupt_payload_byte(&sv.path) {
-                                                Ok(()) => eprintln!(
+                                                Ok(()) => crate::log_warn!(
                                                     "fault corrupt-ckpt: damaged {} (save #{})",
                                                     sv.path.display(),
                                                     lg.ckpt_saves
                                                 ),
                                                 Err(msg) => {
-                                                    eprintln!("fault corrupt-ckpt: {msg}")
+                                                    crate::log_warn!("fault corrupt-ckpt: {msg}")
                                                 }
                                             }
                                         }
                                     }
-                                    Err(msg) => eprintln!("checkpoint save failed: {msg}"),
+                                    Err(msg) => crate::log_error!("checkpoint save failed: {msg}"),
                                 }
                             }
                         }

@@ -473,6 +473,32 @@ impl Dispatcher {
         choice: VariantChoice,
         threads: usize,
     ) -> KernelVariant {
+        let v = self.resolve_inner(op, stats, choice, threads);
+        if crate::obs::enabled() {
+            let m = &crate::obs::global().metrics;
+            m.incr(
+                &format!(
+                    "dispatch.{}.{}.w{}.{}",
+                    op.as_str(),
+                    stats.bucket().as_str(),
+                    stats.width,
+                    v.as_str()
+                ),
+                1,
+            );
+            m.incr(&format!("dispatch.{}.rows", op.as_str()), stats.rows as u64);
+            m.incr(&format!("dispatch.{}.nnz", op.as_str()), stats.nnz as u64);
+        }
+        v
+    }
+
+    fn resolve_inner(
+        &self,
+        op: Op,
+        stats: InputStats,
+        choice: VariantChoice,
+        threads: usize,
+    ) -> KernelVariant {
         let width_ok = specialized::has_width(stats.width);
         match choice {
             VariantChoice::ForceGeneric => KernelVariant::Generic,
@@ -524,7 +550,7 @@ pub fn global() -> &'static Dispatcher {
         Ok(path) if !path.is_empty() => match TuneManifest::load(Path::new(&path)) {
             Ok(m) => Dispatcher::with_manifest(m),
             Err(e) => {
-                eprintln!("warning: ignoring MORPHLING_TUNE_MANIFEST: {e}");
+                crate::log_warn!("ignoring MORPHLING_TUNE_MANIFEST: {e}");
                 Dispatcher::heuristic()
             }
         },

@@ -63,6 +63,7 @@ pub fn gemm(a: &Matrix, b: &Matrix, c: &mut Matrix) {
 /// specialized for `b.cols` ∈ [`specialized::WIDTHS`]) and the k-panel
 /// height; both choices are speed-only (bitwise-identical results).
 pub fn gemm_ex(a: &Matrix, b: &Matrix, c: &mut Matrix, pol: ExecPolicy) {
+    let _sp = crate::obs::trace::span("kernel.gemm");
     assert_eq!(a.cols, b.rows, "inner dim");
     assert_eq!((c.rows, c.cols), (a.rows, b.cols), "out shape");
     let m = a.rows;
@@ -136,6 +137,7 @@ pub fn gemm_at_b(a: &Matrix, b: &Matrix, c: &mut Matrix) {
 /// `k` output rows — the conflict-free choice; partitioning over `m` would
 /// need atomics).
 pub fn gemm_at_b_ex(a: &Matrix, b: &Matrix, c: &mut Matrix, pol: ExecPolicy) {
+    let _sp = crate::obs::trace::span("kernel.gemm_at_b");
     assert_eq!(a.rows, b.rows, "outer dim");
     assert_eq!((c.rows, c.cols), (a.cols, b.cols), "out shape");
     let k = a.cols;
@@ -194,6 +196,7 @@ pub fn gemm_a_bt(a: &Matrix, b: &Matrix, c: &mut Matrix) {
 
 /// [`gemm_a_bt`] with an explicit execution policy (row-blocked over `m`).
 pub fn gemm_a_bt_ex(a: &Matrix, b: &Matrix, c: &mut Matrix, pol: ExecPolicy) {
+    let _sp = crate::obs::trace::span("kernel.gemm_a_bt");
     gemm_a_bt_dispatch(a, b, c, pol, false);
 }
 
@@ -205,6 +208,7 @@ pub fn gemm_a_bt_acc(a: &Matrix, b: &Matrix, c: &mut Matrix) {
 
 /// [`gemm_a_bt_acc`] with an explicit execution policy.
 pub fn gemm_a_bt_acc_ex(a: &Matrix, b: &Matrix, c: &mut Matrix, pol: ExecPolicy) {
+    let _sp = crate::obs::trace::span("kernel.gemm_a_bt_acc");
     gemm_a_bt_dispatch(a, b, c, pol, true);
 }
 

@@ -50,6 +50,7 @@ pub fn spmm_csr_dense(x: &CsrMatrix, w: &Matrix, y: &mut Matrix) {
 /// [`spmm_csr_dense`] with an explicit execution policy (rows partitioned
 /// by nnz; each worker owns its slice of `y`).
 pub fn spmm_csr_dense_ex(x: &CsrMatrix, w: &Matrix, y: &mut Matrix, pol: ExecPolicy) {
+    let _sp = crate::obs::trace::span("kernel.spmm_csr_dense");
     assert_eq!(x.cols, w.rows, "inner dim");
     assert_eq!((y.rows, y.cols), (x.rows, w.cols), "out shape");
     let stats = InputStats::new(x.rows, x.vals.len(), w.cols);
@@ -95,6 +96,7 @@ pub fn spmm_csc_t_dense(x: &CscMatrix, g: &Matrix, dw: &mut Matrix) {
 /// [`spmm_csc_t_dense`] with an explicit execution policy (columns
 /// partitioned by nnz; each worker owns its slice of `dw`).
 pub fn spmm_csc_t_dense_ex(x: &CscMatrix, g: &Matrix, dw: &mut Matrix, pol: ExecPolicy) {
+    let _sp = crate::obs::trace::span("kernel.spmm_csc_t_dense");
     assert_eq!(x.rows, g.rows, "outer dim");
     assert_eq!((dw.rows, dw.cols), (x.cols, g.cols), "out shape");
     // Stats key on the streamed node dimension (x.rows = g.rows), matching

@@ -112,6 +112,7 @@ pub fn spmm_tiled(g: &Graph, x: &Matrix, y: &mut Matrix) {
 /// partitioned by edge count and fanned out row-blocked, each worker owning
 /// a disjoint slice of `y`. Bitwise-identical to the serial kernel.
 pub fn spmm_tiled_ex(g: &Graph, x: &Matrix, y: &mut Matrix, pol: ExecPolicy) {
+    let _sp = crate::obs::trace::span("kernel.spmm_tiled");
     assert_eq!(g.num_nodes, x.rows);
     spmm_tiled_dispatch(g, x, y, pol);
 }
@@ -123,6 +124,7 @@ pub fn spmm_tiled_ex(g: &Graph, x: &Matrix, y: &mut Matrix, pol: ExecPolicy) {
 /// only the square-shape assertion is relaxed. The structural invariant is
 /// upheld by `sampler::extract` (every local id is minted below `n_src`).
 pub fn spmm_block_ex(g: &Graph, x: &Matrix, y: &mut Matrix, pol: ExecPolicy) {
+    let _sp = crate::obs::trace::span("kernel.spmm_block");
     debug_assert!(g.col_idx.iter().all(|&v| (v as usize) < x.rows));
     spmm_tiled_dispatch(g, x, y, pol);
 }
@@ -174,6 +176,7 @@ pub fn spmm_naive(g: &Graph, x: &Matrix, y: &mut Matrix) {
 
 /// [`spmm_naive`] with an explicit execution policy (row-blocked fan-out).
 pub fn spmm_naive_ex(g: &Graph, x: &Matrix, y: &mut Matrix, pol: ExecPolicy) {
+    let _sp = crate::obs::trace::span("kernel.spmm_naive");
     assert_eq!(g.num_nodes, x.rows);
     let stats = InputStats::new(g.num_nodes, g.col_idx.len(), x.cols);
     let body: specialized::SpmmBody =
@@ -267,6 +270,7 @@ pub fn spmm_max(g: &Graph, x: &Matrix, y: &mut Matrix, argmax: &mut [u32]) {
 /// argmax buffer split at the same row boundaries, so each worker owns its
 /// slices of both.
 pub fn spmm_max_ex(g: &Graph, x: &Matrix, y: &mut Matrix, argmax: &mut [u32], pol: ExecPolicy) {
+    let _sp = crate::obs::trace::span("kernel.spmm_max");
     assert_eq!(g.num_nodes, x.rows);
     spmm_max_dispatch(g, x, y, argmax, pol);
 }
@@ -281,6 +285,7 @@ pub fn spmm_max_block_ex(
     argmax: &mut [u32],
     pol: ExecPolicy,
 ) {
+    let _sp = crate::obs::trace::span("kernel.spmm_max_block");
     debug_assert!(g.col_idx.iter().all(|&v| (v as usize) < x.rows));
     spmm_max_dispatch(g, x, y, argmax, pol);
 }

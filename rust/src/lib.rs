@@ -30,6 +30,7 @@
 )]
 
 pub mod util;
+pub mod obs;
 pub mod tensor;
 pub mod graph;
 pub mod kernels;

@@ -84,8 +84,23 @@ fn fault_arg(args: &Args) -> Result<FaultPlan> {
     }
 }
 
+/// Parse the shared observability flags (`--obs`, `--trace-out`,
+/// `--metrics-out`) into the `(obs, trace_out, metrics_out)` triple every
+/// spec carries. Either output path implies `--obs`.
+fn obs_args(args: &Args) -> (bool, Option<std::path::PathBuf>, Option<std::path::PathBuf>) {
+    (
+        args.flag("obs"),
+        args.get("trace-out").map(std::path::PathBuf::from),
+        args.get("metrics-out").map(std::path::PathBuf::from),
+    )
+}
+
 fn cmd_train(args: &Args) -> Result<()> {
+    let (obs, trace_out, metrics_out) = obs_args(args);
     let spec = TrainSpec {
+        obs,
+        trace_out,
+        metrics_out,
         dataset: args.get_or("dataset", "corafull").to_string(),
         arch: choice("arch", args.get_or("arch", "gcn"), Arch::parse, Arch::VALID)
             .map_err(anyhow::Error::msg)?,
@@ -223,7 +238,11 @@ fn cmd_dist(args: &Args) -> Result<()> {
         )
         .map_err(anyhow::Error::msg)?
     };
+    let (obs, trace_out, metrics_out) = obs_args(args);
     let spec = DistSpec {
+        obs,
+        trace_out,
+        metrics_out,
         dataset: args.get_or("dataset", "corafull").to_string(),
         world: args.usize_or("world", 4),
         epochs: args.usize_or("epochs", 10),
@@ -304,7 +323,11 @@ fn cmd_dist(args: &Args) -> Result<()> {
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {
+    let (obs, trace_out, metrics_out) = obs_args(args);
     let spec = ServeSpec {
+        obs,
+        trace_out,
+        metrics_out,
         dataset: args.get_or("dataset", "corafull").to_string(),
         arch: choice("arch", args.get_or("arch", "sage"), Arch::parse, Arch::VALID)
             .map_err(anyhow::Error::msg)?,
@@ -398,6 +421,16 @@ fn cmd_tune(args: &Args) -> Result<()> {
 
 fn main() -> Result<()> {
     let args = Args::from_env();
+    if let Some(raw) = args.get("log-level") {
+        let level = choice(
+            "log-level",
+            raw,
+            morphling::util::log::Level::parse,
+            &morphling::util::log::Level::VALID,
+        )
+        .map_err(anyhow::Error::msg)?;
+        morphling::util::log::set_level(level);
+    }
     match args.positional.first().map(String::as_str) {
         Some("info") => {
             cmd_info();
@@ -461,6 +494,10 @@ fn main() -> Result<()> {
                  \u{20}           writes the manifest the dispatcher reads via --tune-manifest or\n\
                  \u{20}           MORPHLING_TUNE_MANIFEST)\n\
                  shapes:    --out artifacts/shapes.json [--datasets a,b,c]\n\
+                 shared:    [--log-level error|warn|info|debug] (default MORPHLING_LOG, else info)\n\
+                 \u{20}          train/dist/serve: [--obs] [--trace-out trace.json] [--metrics-out m.json]\n\
+                 \u{20}          (--obs enables in-process telemetry; either output path implies it;\n\
+                 \u{20}           trace is Chrome Trace Event JSON — load in Perfetto / about:tracing)\n\
                  (kernel threads default to MORPHLING_THREADS, else 1)"
             );
             Ok(())

@@ -1,0 +1,215 @@
+//! Named counters, gauges, and fixed-bucket histograms with deterministic
+//! JSON export.
+//!
+//! The registry separates **deterministic** metrics from **wall-clock**
+//! metrics so the determinism contract is visible in the schema itself:
+//!
+//! * `counters` — integer counts of *decisions and data volumes* (kernel
+//!   dispatches, cache hits, wire bytes, shed requests). For a fixed seed
+//!   these are a pure function of the workload, so the serialized
+//!   `"counters"` section is **bit-identical** across repeated runs and
+//!   across `MORPHLING_THREADS` settings (verified by `tests/obs.rs`).
+//! * `wall` — gauges and histograms of *measured time* (checkpoint commit
+//!   seconds, serve latency). These vary run to run by construction and
+//!   live in a separate section so diffing the deterministic part stays a
+//!   byte comparison.
+//!
+//! Export ordering is deterministic everywhere: names live in `BTreeMap`s
+//! and serialization goes through [`crate::util::json::Json`], which
+//! prints object keys in sorted order.
+
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::sync::Mutex;
+
+/// Histogram bucket boundaries for serve request latency, in seconds
+/// (roughly log-spaced 10 µs – 3 s; the last bucket is the overflow).
+pub const LATENCY_BOUNDS_SECS: [f64; 12] = [
+    1e-5, 3e-5, 1e-4, 3e-4, 1e-3, 3e-3, 1e-2, 3e-2, 0.1, 0.3, 1.0, 3.0,
+];
+
+/// Index of the bucket a value falls into: the first `i` with
+/// `v <= bounds[i]`, or `bounds.len()` for the overflow bucket. `bounds`
+/// must be sorted ascending.
+pub fn bucket_index(bounds: &[f64], v: f64) -> usize {
+    bounds.iter().position(|&b| v <= b).unwrap_or(bounds.len())
+}
+
+/// A fixed-bucket histogram: per-bucket counts plus total count and sum.
+#[derive(Clone, Debug)]
+pub struct Hist {
+    /// Ascending bucket upper bounds; an implicit overflow bucket follows.
+    pub bounds: Vec<f64>,
+    /// Observation counts per bucket (`bounds.len() + 1` entries).
+    pub counts: Vec<u64>,
+    /// Total observations.
+    pub count: u64,
+    /// Sum of observed values.
+    pub sum: f64,
+}
+
+impl Hist {
+    fn new(bounds: &[f64]) -> Hist {
+        Hist {
+            bounds: bounds.to_vec(),
+            counts: vec![0; bounds.len() + 1],
+            count: 0,
+            sum: 0.0,
+        }
+    }
+
+    fn observe(&mut self, v: f64) {
+        self.counts[bucket_index(&self.bounds, v)] += 1;
+        self.count += 1;
+        self.sum += v;
+    }
+
+    fn to_json(&self) -> Json {
+        let mut o = BTreeMap::new();
+        o.insert(
+            "bounds".to_string(),
+            Json::Arr(self.bounds.iter().map(|&b| Json::Num(b)).collect()),
+        );
+        o.insert(
+            "counts".to_string(),
+            Json::Arr(self.counts.iter().map(|&c| Json::Num(c as f64)).collect()),
+        );
+        o.insert("count".to_string(), Json::Num(self.count as f64));
+        o.insert("sum".to_string(), Json::Num(self.sum));
+        Json::Obj(o)
+    }
+}
+
+#[derive(Default)]
+struct Inner {
+    counters: BTreeMap<String, u64>,
+    gauges: BTreeMap<String, f64>,
+    hists: BTreeMap<String, Hist>,
+}
+
+/// The metrics registry. One instance lives in the process-global
+/// [`Obs`](crate::obs::Obs) handle; instrumentation sites reach it via
+/// `obs::global().metrics` after checking [`obs::enabled`](crate::obs::enabled).
+///
+/// A single mutex guards the maps — metric updates happen at decision
+/// points (per kernel dispatch, per batch, per request), not inside inner
+/// loops, so contention is negligible.
+pub struct Registry {
+    inner: Mutex<Inner>,
+}
+
+impl Registry {
+    /// An empty registry.
+    pub fn new() -> Registry {
+        Registry {
+            inner: Mutex::new(Inner::default()),
+        }
+    }
+
+    /// Add `delta` to the deterministic counter `name` (created at 0).
+    pub fn incr(&self, name: &str, delta: u64) {
+        let mut g = self.inner.lock().unwrap();
+        *g.counters.entry(name.to_string()).or_insert(0) += delta;
+    }
+
+    /// Set the wall-clock gauge `name` to `v`.
+    pub fn gauge_set(&self, name: &str, v: f64) {
+        self.inner.lock().unwrap().gauges.insert(name.to_string(), v);
+    }
+
+    /// Add `v` to the wall-clock gauge `name` (created at 0).
+    pub fn gauge_add(&self, name: &str, v: f64) {
+        let mut g = self.inner.lock().unwrap();
+        *g.gauges.entry(name.to_string()).or_insert(0.0) += v;
+    }
+
+    /// Record `v` into the wall-clock histogram `name`, creating it with
+    /// `bounds` on first use (later calls ignore `bounds`).
+    pub fn observe(&self, name: &str, bounds: &[f64], v: f64) {
+        let mut g = self.inner.lock().unwrap();
+        g.hists
+            .entry(name.to_string())
+            .or_insert_with(|| Hist::new(bounds))
+            .observe(v);
+    }
+
+    /// Current value of counter `name` (0 if never incremented).
+    pub fn counter(&self, name: &str) -> u64 {
+        self.inner
+            .lock()
+            .unwrap()
+            .counters
+            .get(name)
+            .copied()
+            .unwrap_or(0)
+    }
+
+    /// Drop every metric. Called at the start of a run so back-to-back
+    /// runs in one process export independent (and thus comparable)
+    /// metric files.
+    pub fn reset(&self) {
+        *self.inner.lock().unwrap() = Inner::default();
+    }
+
+    /// The deterministic `"counters"` section alone, serialized. Two
+    /// fixed-seed runs of the same workload must return byte-identical
+    /// strings from this.
+    pub fn counters_json(&self) -> String {
+        let g = self.inner.lock().unwrap();
+        Json::Obj(
+            g.counters
+                .iter()
+                .map(|(k, &v)| (k.clone(), Json::Num(v as f64)))
+                .collect(),
+        )
+        .to_string()
+    }
+
+    /// Serialize the full registry:
+    /// `{"counters": {...}, "schema": "morphling-metrics-v1",
+    ///   "wall": {"gauges": {...}, "histograms": {...}}}`.
+    pub fn to_json(&self) -> String {
+        let g = self.inner.lock().unwrap();
+        let counters = Json::Obj(
+            g.counters
+                .iter()
+                .map(|(k, &v)| (k.clone(), Json::Num(v as f64)))
+                .collect(),
+        );
+        let gauges = Json::Obj(
+            g.gauges
+                .iter()
+                .map(|(k, &v)| (k.clone(), Json::Num(v)))
+                .collect(),
+        );
+        let hists = Json::Obj(
+            g.hists
+                .iter()
+                .map(|(k, h)| (k.clone(), h.to_json()))
+                .collect(),
+        );
+        let mut wall = BTreeMap::new();
+        wall.insert("gauges".to_string(), gauges);
+        wall.insert("histograms".to_string(), hists);
+        let mut root = BTreeMap::new();
+        root.insert("counters".to_string(), counters);
+        root.insert(
+            "schema".to_string(),
+            Json::Str("morphling-metrics-v1".to_string()),
+        );
+        root.insert("wall".to_string(), Json::Obj(wall));
+        Json::Obj(root).to_string()
+    }
+
+    /// Write the full registry JSON to `path` (with a trailing newline).
+    pub fn export(&self, path: &Path) -> std::io::Result<()> {
+        std::fs::write(path, self.to_json() + "\n")
+    }
+}
+
+impl Default for Registry {
+    fn default() -> Registry {
+        Registry::new()
+    }
+}

@@ -1,0 +1,82 @@
+//! Unified observability: span tracing + metrics registry.
+//!
+//! One process-global [`Obs`] handle (same set-once pattern as the
+//! dispatch manifest global in [`crate::kernels::dispatch`]) owns
+//!
+//! * a [`trace::Tracer`] — hierarchical spans (run → epoch → batch →
+//!   phase → kernel call) recorded into thread-local buffers and exported
+//!   as Chrome Trace Event Format JSON (`--trace-out`), and
+//! * a [`metrics::Registry`] — named counters / gauges / histograms
+//!   exported as deterministic JSON (`--metrics-out`).
+//!
+//! Everything is gated on [`enabled`], a relaxed atomic load: with
+//! observability off every instrumentation site is a branch-and-skip, so
+//! disabled runs stay bitwise-identical to an uninstrumented build and
+//! within measurement noise of its throughput (`cpu_epoch` reports the
+//! overhead as `obs_overhead_pct`). Enabling observability never touches
+//! training numerics either — instrumentation only *reads* the values the
+//! engines already compute.
+//!
+//! See `docs/OBSERVABILITY.md` for the span model, metric naming
+//! convention, and file schemas.
+
+pub mod metrics;
+pub mod trace;
+
+use metrics::Registry;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::OnceLock;
+use trace::Tracer;
+
+/// The process-global observability handle: an enabled flag plus the
+/// tracer and metrics registry it gates.
+pub struct Obs {
+    enabled: AtomicBool,
+    /// The metrics registry (counters / gauges / histograms).
+    pub metrics: Registry,
+    /// The span tracer.
+    pub tracer: Tracer,
+}
+
+static GLOBAL: OnceLock<Obs> = OnceLock::new();
+
+/// The process-global [`Obs`] handle, created on first use. The initial
+/// enabled state comes from the `MORPHLING_OBS` env var (any value other
+/// than empty or `0` enables); the CLI overrides it via [`set_enabled`].
+pub fn global() -> &'static Obs {
+    GLOBAL.get_or_init(|| {
+        let env_on = matches!(
+            std::env::var("MORPHLING_OBS").as_deref(),
+            Ok(v) if !v.is_empty() && v != "0"
+        );
+        Obs {
+            enabled: AtomicBool::new(env_on),
+            metrics: Registry::new(),
+            tracer: Tracer::new(),
+        }
+    })
+}
+
+/// Whether observability is on. This is the fast path every
+/// instrumentation site checks first: one relaxed atomic load.
+#[inline]
+pub fn enabled() -> bool {
+    match GLOBAL.get() {
+        Some(o) => o.enabled.load(Ordering::Relaxed),
+        None => global().enabled.load(Ordering::Relaxed),
+    }
+}
+
+/// Turn observability on or off for the whole process.
+pub fn set_enabled(on: bool) {
+    global().enabled.store(on, Ordering::Relaxed);
+}
+
+/// Clear all recorded spans and metrics. Coordinators call this at run
+/// start so back-to-back runs in one process (tests, benches) export
+/// independent, comparable files.
+pub fn reset() {
+    let o = global();
+    o.tracer.clear();
+    o.metrics.reset();
+}

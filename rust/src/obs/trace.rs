@@ -1,0 +1,248 @@
+//! Span-based tracer with Chrome Trace Event Format export.
+//!
+//! Spans are RAII guards ([`SpanGuard`]) that record a `B` (begin) event at
+//! construction and an `E` (end) event at drop. Events land in a
+//! thread-local buffer — no locks, no allocation beyond the buffer's
+//! amortized growth — and are flushed into a process-global sink either
+//! when the local buffer fills, when [`Tracer::flush_local`] is called, or
+//! when the owning thread exits (via the thread-local's destructor). All
+//! worker threads in this crate are scoped or joined before export, so
+//! the exported trace is complete.
+//!
+//! Timestamps come from a single process-global [`Instant`] epoch, so they
+//! are monotonic within every thread (and comparable across threads on
+//! platforms with a global monotonic clock, i.e. everywhere we run).
+//!
+//! Balanced `B`/`E` under event-cap pressure: the global event cap applies
+//! to *begin* events only. A guard whose `B` was dropped is never armed
+//! and records nothing; a guard whose `B` was recorded always records its
+//! `E` (end events bypass the cap). Traces therefore stay well-formed
+//! even when truncated.
+
+use std::cell::RefCell;
+use std::fmt::Write as _;
+use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Mutex, OnceLock};
+use std::time::Instant;
+
+/// Flush the thread-local buffer into the global sink once it holds this
+/// many events.
+const LOCAL_FLUSH_AT: usize = 4096;
+
+/// Process-wide cap on recorded *begin* events per run — a memory
+/// backstop, not a correctness bound. At ~40 bytes/event this bounds
+/// trace memory to ~300 MB; real runs record a few thousand events.
+const MAX_BEGIN_EVENTS: u64 = 1 << 22;
+
+/// One trace event: a span boundary on one thread.
+#[derive(Clone, Copy, Debug)]
+pub struct Event {
+    /// Span name (static so recording never allocates).
+    pub name: &'static str,
+    /// `true` for a `B` (begin) event, `false` for `E` (end).
+    pub begin: bool,
+    /// Microseconds since the process trace epoch.
+    pub ts_us: f64,
+    /// Recording thread's trace id (small dense integers, not OS tids).
+    pub tid: u64,
+}
+
+/// Process epoch all timestamps are relative to.
+fn epoch() -> Instant {
+    static EPOCH: OnceLock<Instant> = OnceLock::new();
+    *EPOCH.get_or_init(Instant::now)
+}
+
+/// Dense per-thread trace ids, assigned on first event.
+static NEXT_TID: AtomicU64 = AtomicU64::new(1);
+
+/// Thread-local event buffer. Dropping it (at thread exit) flushes any
+/// remaining events into the owning tracer's sink.
+struct LocalBuf {
+    tid: u64,
+    buf: Vec<Event>,
+}
+
+impl Drop for LocalBuf {
+    fn drop(&mut self) {
+        if !self.buf.is_empty() {
+            crate::obs::global().tracer.absorb(&mut self.buf);
+        }
+    }
+}
+
+thread_local! {
+    static LOCAL: RefCell<Option<LocalBuf>> = const { RefCell::new(None) };
+}
+
+/// Collects span events from every thread and serializes them as Chrome
+/// Trace Event Format JSON. One instance lives in the process-global
+/// [`Obs`](crate::obs::Obs) handle.
+pub struct Tracer {
+    sink: Mutex<Vec<Event>>,
+    begins: AtomicU64,
+    dropped: AtomicU64,
+}
+
+impl Tracer {
+    /// An empty tracer.
+    pub fn new() -> Tracer {
+        Tracer {
+            sink: Mutex::new(Vec::new()),
+            begins: AtomicU64::new(0),
+            dropped: AtomicU64::new(0),
+        }
+    }
+
+    /// Move events from a thread-local buffer into the sink.
+    fn absorb(&self, buf: &mut Vec<Event>) {
+        let mut sink = self.sink.lock().unwrap();
+        sink.append(buf);
+    }
+
+    /// Flush the *calling thread's* buffered events into the sink. Call
+    /// before export; worker threads flush themselves at exit.
+    pub fn flush_local(&self) {
+        LOCAL.with(|l| {
+            if let Some(lb) = l.borrow_mut().as_mut() {
+                if !lb.buf.is_empty() {
+                    self.absorb(&mut lb.buf);
+                }
+            }
+        });
+    }
+
+    /// Number of begin events suppressed by the event cap this run.
+    pub fn dropped(&self) -> u64 {
+        self.dropped.load(Ordering::Relaxed)
+    }
+
+    /// Discard all buffered events (calling thread + sink) and reset the
+    /// cap counters. Called at the start of a run so back-to-back runs in
+    /// one process export independent traces.
+    pub fn clear(&self) {
+        LOCAL.with(|l| {
+            if let Some(lb) = l.borrow_mut().as_mut() {
+                lb.buf.clear();
+            }
+        });
+        self.sink.lock().unwrap().clear();
+        self.begins.store(0, Ordering::Relaxed);
+        self.dropped.store(0, Ordering::Relaxed);
+    }
+
+    /// Serialize all flushed events as a Chrome Trace Event Format JSON
+    /// array (loadable in Perfetto / `chrome://tracing`). Flushes the
+    /// calling thread first. Within each `tid`, events appear in record
+    /// order with monotonic timestamps.
+    pub fn to_chrome_json(&self) -> String {
+        self.flush_local();
+        let sink = self.sink.lock().unwrap();
+        let mut out = String::with_capacity(sink.len() * 80 + 2);
+        out.push('[');
+        for (i, ev) in sink.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            let ph = if ev.begin { 'B' } else { 'E' };
+            let _ = write!(
+                out,
+                "\n{{\"name\":\"{}\",\"cat\":\"morphling\",\"ph\":\"{}\",\"ts\":{:.3},\"pid\":1,\"tid\":{}}}",
+                ev.name, ph, ev.ts_us, ev.tid
+            );
+        }
+        out.push_str("\n]\n");
+        out
+    }
+
+    /// Write the Chrome trace JSON to `path`.
+    pub fn export(&self, path: &Path) -> std::io::Result<()> {
+        std::fs::write(path, self.to_chrome_json())
+    }
+
+    /// Record one event into the calling thread's buffer, flushing to the
+    /// sink when the buffer fills.
+    fn record(&self, name: &'static str, begin: bool) {
+        let ts_us = epoch().elapsed().as_secs_f64() * 1e6;
+        LOCAL.with(|l| {
+            let mut slot = l.borrow_mut();
+            let lb = slot.get_or_insert_with(|| LocalBuf {
+                tid: NEXT_TID.fetch_add(1, Ordering::Relaxed),
+                buf: Vec::with_capacity(LOCAL_FLUSH_AT),
+            });
+            lb.buf.push(Event {
+                name,
+                begin,
+                ts_us,
+                tid: lb.tid,
+            });
+            if lb.buf.len() >= LOCAL_FLUSH_AT {
+                self.absorb(&mut lb.buf);
+            }
+        });
+    }
+}
+
+impl Default for Tracer {
+    fn default() -> Tracer {
+        Tracer::new()
+    }
+}
+
+/// RAII span: records `B` on creation (when observability is enabled and
+/// the event cap has room) and `E` on drop. Always carries a start
+/// [`Instant`], so [`SpanGuard::finish`] returns the elapsed wall time
+/// whether or not events were recorded — this is how
+/// [`PhaseTimes::time`](crate::util::timer::PhaseTimes::time) keeps its
+/// bench columns and the trace reading from one measurement.
+pub struct SpanGuard {
+    name: &'static str,
+    t0: Instant,
+    armed: bool,
+}
+
+impl SpanGuard {
+    /// End the span now, returning elapsed seconds since creation.
+    pub fn finish(mut self) -> f64 {
+        let secs = self.t0.elapsed().as_secs_f64();
+        self.close();
+        secs
+    }
+
+    /// Record the `E` event if armed, then disarm.
+    fn close(&mut self) {
+        if self.armed {
+            self.armed = false;
+            crate::obs::global().tracer.record(self.name, false);
+        }
+    }
+}
+
+impl Drop for SpanGuard {
+    fn drop(&mut self) {
+        self.close();
+    }
+}
+
+/// Open a span named `name` on the calling thread. When observability is
+/// disabled this is a branch plus one `Instant::now()` — no events, no
+/// locks, no allocation.
+#[inline]
+pub fn span(name: &'static str) -> SpanGuard {
+    let armed = crate::obs::enabled() && {
+        let tr = &crate::obs::global().tracer;
+        if tr.begins.fetch_add(1, Ordering::Relaxed) < MAX_BEGIN_EVENTS {
+            tr.record(name, true);
+            true
+        } else {
+            tr.dropped.fetch_add(1, Ordering::Relaxed);
+            false
+        }
+    };
+    SpanGuard {
+        name,
+        t0: Instant::now(),
+        armed,
+    }
+}

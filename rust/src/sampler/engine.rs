@@ -600,6 +600,7 @@ impl Engine for MiniBatchEngine {
             pipelined,
             gate.as_ref(),
             |mb| {
+                let _sp = crate::obs::trace::span("batch");
                 edges += mb.sampled_edges();
                 let (l, a, n) = st.run_batch(&mb, true, pipelined, &mut phases);
                 loss_sum += l * n as f64;
@@ -609,6 +610,17 @@ impl Engine for MiniBatchEngine {
         );
         phases.add("sample", report.exposed_sample_secs);
         st.sampled_edges = edges;
+        if crate::obs::enabled() {
+            let m = &crate::obs::global().metrics;
+            m.incr("sampler.batches", report.batches as u64);
+            m.incr("sampler.sampled_edges", edges);
+            if st.hist.is_some() {
+                let cs = st.cache_stats;
+                m.incr("cache.hits", cs.hits);
+                m.incr("cache.candidates", cs.candidates);
+                m.incr("cache.staleness_sum", cs.staleness_sum);
+            }
+        }
         let total = total.max(1);
         EpochStats {
             loss: loss_sum / total as f64,

@@ -59,9 +59,9 @@ where
     if !prefetch || chunks.len() <= 1 {
         let mut scratch = SamplerScratch::new(ctx.agg.num_nodes);
         for c in &chunks {
-            let t = Instant::now();
+            let sp = crate::obs::trace::span("sample");
             let mb = ctx.sample_batch(&mut scratch, feats, labels, c, salt, fanouts, gate);
-            exposed += t.elapsed().as_secs_f64();
+            exposed += sp.finish();
             consume(mb);
         }
     } else {
@@ -74,7 +74,9 @@ where
             s.spawn(move || {
                 let mut scratch = SamplerScratch::new(ctx.agg.num_nodes);
                 for c in chunks {
+                    let sp = crate::obs::trace::span("sample");
                     let mb = ctx.sample_batch(&mut scratch, feats, labels, c, salt, fanouts, gate);
+                    drop(sp);
                     // consumer gone (panic unwinding): stop sampling
                     if tx.send(mb).is_err() {
                         break;

@@ -16,7 +16,7 @@ use super::snapshot::SnapshotSlot;
 use crate::sampler::SamplerScratch;
 use crate::util::Rng;
 use std::collections::HashSet;
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
 use std::sync::mpsc::{self, Receiver, SyncSender, TrySendError};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
@@ -88,6 +88,8 @@ pub struct Server {
     results: Receiver<JobResult>,
     handles: Vec<JoinHandle<()>>,
     shed: AtomicU64,
+    depth: Arc<AtomicI64>,
+    depth_max: Arc<AtomicU64>,
 }
 
 impl Server {
@@ -98,11 +100,14 @@ impl Server {
         let rx = Arc::new(Mutex::new(rx));
         let (res_tx, results) = mpsc::channel::<JobResult>();
         let mode = cfg.mode;
+        let depth = Arc::new(AtomicI64::new(0));
+        let depth_max = Arc::new(AtomicU64::new(0));
         let handles = (0..workers)
             .map(|_| {
                 let rx = Arc::clone(&rx);
                 let res_tx = res_tx.clone();
                 let slot = Arc::clone(&slot);
+                let depth = Arc::clone(&depth);
                 std::thread::spawn(move || {
                     // Scratch is reusable across requests as long as the
                     // node count is stable (refresh keeps the graph).
@@ -118,6 +123,8 @@ impl Server {
                                 Err(_) => break, // queue closed and drained
                             }
                         };
+                        depth.fetch_sub(1, Ordering::Relaxed);
+                        let req_span = crate::obs::trace::span("serve_request");
                         let t = Instant::now();
                         // Pin once per request: the whole response computes
                         // against this one snapshot even if a swap lands
@@ -131,6 +138,7 @@ impl Server {
                             .as_mut()
                             .expect("scratch initialized just above for this node count");
                         let response = snap.serve(&job.targets, mode, sc);
+                        req_span.finish();
                         let done = Instant::now();
                         let out = JobResult {
                             id: job.id,
@@ -153,17 +161,40 @@ impl Server {
             results,
             handles,
             shed: AtomicU64::new(0),
+            depth,
+            depth_max,
         }
+    }
+
+    /// Record one accepted enqueue in the depth gauge (and its high-water
+    /// mark). The count is approximate under contention — a worker can
+    /// decrement before the submitter's increment lands (hence the signed
+    /// atomic); it is telemetry, not a synchronization primitive.
+    fn note_enqueued(&self) {
+        let d = self.depth.fetch_add(1, Ordering::Relaxed) + 1;
+        if d > 0 {
+            self.depth_max.fetch_max(d as u64, Ordering::Relaxed);
+        }
+    }
+
+    /// High-water mark of the request queue depth over the server's life.
+    pub fn max_queue_depth(&self) -> u64 {
+        self.depth_max.load(Ordering::Relaxed)
     }
 
     /// Submit one job; blocks while the bounded queue is full
     /// (backpressure). Returns `false` only if every worker has exited.
     pub fn submit(&self, job: ServeJob) -> bool {
-        self.tx
+        let ok = self
+            .tx
             .as_ref()
             .expect("submit after finish: the job queue is already closed")
             .send(job)
-            .is_ok()
+            .is_ok();
+        if ok {
+            self.note_enqueued();
+        }
+        ok
     }
 
     /// Load-shedding submit: enqueue if there is room *right now*,
@@ -175,7 +206,10 @@ impl Server {
             .as_ref()
             .expect("submit after finish: the job queue is already closed");
         match tx.try_send(job) {
-            Ok(()) => SubmitOutcome::Accepted,
+            Ok(()) => {
+                self.note_enqueued();
+                SubmitOutcome::Accepted
+            }
             Err(TrySendError::Full(_)) => {
                 self.shed.fetch_add(1, Ordering::Relaxed);
                 SubmitOutcome::Shed
@@ -197,7 +231,10 @@ impl Server {
         let mut job = job;
         loop {
             match tx.try_send(job) {
-                Ok(()) => return SubmitOutcome::Accepted,
+                Ok(()) => {
+                    self.note_enqueued();
+                    return SubmitOutcome::Accepted;
+                }
                 Err(TrySendError::Disconnected(_)) => return SubmitOutcome::Closed,
                 Err(TrySendError::Full(j)) => {
                     if Instant::now() >= deadline {

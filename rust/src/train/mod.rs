@@ -114,7 +114,9 @@ pub fn train(engine: &mut dyn Engine, ds: &Dataset, cfg: &TrainConfig) -> TrainR
     let mut killed = false;
     let (mut ckpt_saves, mut ckpt_bytes, mut ckpt_secs) = (0usize, 0u64, 0f64);
     for e in cfg.start_epoch..cfg.epochs {
+        let epoch_span = crate::obs::trace::span("epoch");
         let stats = engine.train_epoch(ds);
+        epoch_span.finish();
         if cfg.log {
             println!(
                 "epoch {:>4}  loss {:.4}  acc {:.3}  [{}]",
@@ -144,6 +146,12 @@ pub fn train(engine: &mut dyn Engine, ds: &Dataset, cfg: &TrainConfig) -> TrainR
                                 ckpt_saves += 1;
                                 ckpt_bytes = st.bytes;
                                 ckpt_secs += st.secs;
+                                if crate::obs::enabled() {
+                                    let m = &crate::obs::global().metrics;
+                                    m.incr("ckpt.saves", 1);
+                                    m.incr("ckpt.bytes", st.bytes);
+                                    m.gauge_add("ckpt.commit_secs", st.secs);
+                                }
                                 if cfg.log {
                                     println!(
                                         "            checkpoint {} ({} bytes, {:.1} ms)",
@@ -154,19 +162,19 @@ pub fn train(engine: &mut dyn Engine, ds: &Dataset, cfg: &TrainConfig) -> TrainR
                                 }
                                 if cfg.fault.corrupts_save(ckpt_saves as u64) {
                                     if let Err(msg) = crate::ckpt::corrupt_payload_byte(&st.path) {
-                                        eprintln!("fault corrupt-ckpt: {msg}");
+                                        crate::log_warn!("fault corrupt-ckpt: {msg}");
                                     } else {
-                                        eprintln!(
+                                        crate::log_warn!(
                                             "fault corrupt-ckpt: damaged {} (save #{ckpt_saves})",
                                             st.path.display()
                                         );
                                     }
                                 }
                             }
-                            Err(msg) => eprintln!("checkpoint save failed: {msg}"),
+                            Err(msg) => crate::log_error!("checkpoint save failed: {msg}"),
                         }
                     }
-                    None => eprintln!(
+                    None => crate::log_warn!(
                         "checkpoint skipped: engine '{}' does not support export",
                         engine.name()
                     ),

@@ -1,0 +1,149 @@
+//! Leveled stderr logging.
+//!
+//! One process-global level (default [`Level::Info`]) gates four macros —
+//! [`log_error!`](crate::log_error), [`log_warn!`](crate::log_warn),
+//! [`log_info!`](crate::log_info), [`log_debug!`](crate::log_debug) —
+//! that print `[level] message` lines to stderr. The default level comes
+//! from the `MORPHLING_LOG` env var; the CLI's `--log-level` flag
+//! overrides it via [`set_level`].
+//!
+//! Program *output* (losses, hashes, bench tables) stays on stdout via
+//! plain `println!`; this module is only for diagnostics that previously
+//! went through scattered `eprintln!` calls.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::OnceLock;
+
+/// Log severity, most severe first. A message prints when its level is
+/// at or above (numerically at or below) the process level.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    /// Unrecoverable or data-losing conditions.
+    Error = 0,
+    /// Degraded-but-continuing conditions (corrupt checkpoint skipped,
+    /// snapshot refresh failed, ...).
+    Warn = 1,
+    /// Notices a user running interactively wants (resume progress,
+    /// manifest fallbacks). The default level.
+    Info = 2,
+    /// Per-step detail for debugging.
+    Debug = 3,
+}
+
+impl Level {
+    /// Accepted `--log-level` / `MORPHLING_LOG` spellings.
+    pub const VALID: [&'static str; 4] = ["error", "warn", "info", "debug"];
+
+    /// Parse a spelling from [`Level::VALID`].
+    pub fn parse(s: &str) -> Option<Level> {
+        match s {
+            "error" => Some(Level::Error),
+            "warn" => Some(Level::Warn),
+            "info" => Some(Level::Info),
+            "debug" => Some(Level::Debug),
+            _ => None,
+        }
+    }
+
+    /// The spelling of this level (also the message prefix).
+    pub fn name(self) -> &'static str {
+        match self {
+            Level::Error => "error",
+            Level::Warn => "warn",
+            Level::Info => "info",
+            Level::Debug => "debug",
+        }
+    }
+}
+
+fn cell() -> &'static AtomicU8 {
+    static LEVEL: OnceLock<AtomicU8> = OnceLock::new();
+    LEVEL.get_or_init(|| {
+        let init = std::env::var("MORPHLING_LOG")
+            .ok()
+            .and_then(|s| Level::parse(&s))
+            .unwrap_or(Level::Info);
+        AtomicU8::new(init as u8)
+    })
+}
+
+/// The current process log level.
+pub fn level() -> Level {
+    match cell().load(Ordering::Relaxed) {
+        0 => Level::Error,
+        1 => Level::Warn,
+        2 => Level::Info,
+        _ => Level::Debug,
+    }
+}
+
+/// Set the process log level (CLI `--log-level`).
+pub fn set_level(l: Level) {
+    cell().store(l as u8, Ordering::Relaxed);
+}
+
+/// Whether a message at level `l` would print.
+#[inline]
+pub fn enabled(l: Level) -> bool {
+    (l as u8) <= cell().load(Ordering::Relaxed)
+}
+
+/// Print `args` to stderr as `[level] ...` if `l` passes the process
+/// level. Use the `log_*!` macros rather than calling this directly.
+pub fn log(l: Level, args: std::fmt::Arguments<'_>) {
+    if enabled(l) {
+        eprintln!("[{}] {}", l.name(), args);
+    }
+}
+
+/// Log at [`Level::Error`]. Takes `format!` arguments.
+#[macro_export]
+macro_rules! log_error {
+    ($($t:tt)*) => {
+        $crate::util::log::log($crate::util::log::Level::Error, format_args!($($t)*))
+    };
+}
+
+/// Log at [`Level::Warn`]. Takes `format!` arguments.
+#[macro_export]
+macro_rules! log_warn {
+    ($($t:tt)*) => {
+        $crate::util::log::log($crate::util::log::Level::Warn, format_args!($($t)*))
+    };
+}
+
+/// Log at [`Level::Info`]. Takes `format!` arguments.
+#[macro_export]
+macro_rules! log_info {
+    ($($t:tt)*) => {
+        $crate::util::log::log($crate::util::log::Level::Info, format_args!($($t)*))
+    };
+}
+
+/// Log at [`Level::Debug`]. Takes `format!` arguments.
+#[macro_export]
+macro_rules! log_debug {
+    ($($t:tt)*) => {
+        $crate::util::log::log($crate::util::log::Level::Debug, format_args!($($t)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_roundtrip() {
+        for s in Level::VALID {
+            assert_eq!(Level::parse(s).unwrap().name(), s);
+        }
+        assert!(Level::parse("verbose").is_none());
+    }
+
+    #[test]
+    fn ordering() {
+        assert!(Level::Error < Level::Warn);
+        assert!(Level::Warn < Level::Info);
+        assert!(Level::Info < Level::Debug);
+    }
+}

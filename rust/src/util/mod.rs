@@ -9,6 +9,7 @@
 pub mod rng;
 pub mod json;
 pub mod argparse;
+pub mod log;
 pub mod timer;
 pub mod proptest;
 pub mod table;

@@ -40,10 +40,16 @@ impl PhaseTimes {
     }
 
     /// Time a closure under `phase`, accumulating its wall time.
+    ///
+    /// Implemented on top of [`crate::obs::trace::span`]: the same
+    /// measurement that lands in this accumulator (and from there in bench
+    /// columns) bounds the phase's trace span, so the two can never
+    /// disagree. With observability disabled the span is a branch plus an
+    /// `Instant` pair — identical cost to the pre-obs implementation.
     pub fn time<T>(&mut self, phase: &'static str, f: impl FnOnce() -> T) -> T {
-        let t = Instant::now();
+        let sp = crate::obs::trace::span(phase);
         let out = f();
-        *self.acc.entry(phase).or_insert(0.0) += t.elapsed().as_secs_f64();
+        *self.acc.entry(phase).or_insert(0.0) += sp.finish();
         out
     }
 

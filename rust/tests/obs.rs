@@ -1,0 +1,337 @@
+//! Observability acceptance suite (unified-telemetry PR):
+//!
+//! 1. **Traces are well-formed** — a minibatch+cache training run and a
+//!    serving run each export valid Chrome Trace Event JSON: balanced
+//!    `B`/`E` pairs per thread (RAII spans nest), monotonic timestamps
+//!    per thread, and the expected span names (`run`, `epoch`, `batch`,
+//!    `sample`, `serve_request`, `kernel.*`).
+//! 2. **Counter sections are bit-deterministic** — the serialized
+//!    `"counters"` section is byte-identical across repeated fixed-seed
+//!    runs and across kernel thread counts {1, 4}, for both training and
+//!    serving. Wall-clock gauges/histograms live in a separate section
+//!    and are exempt by construction.
+//! 3. **Disabled observability is bitwise invisible** — final parameter
+//!    hashes match between obs-off and obs-on runs for GCN (full batch),
+//!    SAGE-mean (minibatch + cache), and SAGE-max (minibatch):
+//!    instrumentation only reads values the engines already compute.
+//! 4. **Histogram bucketing** — `bucket_index` boundary semantics
+//!    (`v <= bound`, overflow bucket) and `Registry::observe` placement.
+//!
+//! Observability state is process-global, so every test touching it
+//! serializes on `OBS_LOCK` (the test harness runs tests on threads).
+
+use morphling::coordinator::{run, run_serve, ServeSpec, TrainSpec};
+use morphling::engine::RunMode;
+use morphling::model::Arch;
+use morphling::obs;
+use morphling::obs::metrics::{bucket_index, Registry, LATENCY_BOUNDS_SECS};
+use morphling::util::json::Json;
+use std::collections::{BTreeMap, BTreeSet};
+use std::path::{Path, PathBuf};
+use std::sync::{Mutex, MutexGuard};
+
+static OBS_LOCK: Mutex<()> = Mutex::new(());
+
+/// Serialize access to the process-global observability handle. A panic
+/// in one test must not poison the rest of the suite.
+fn obs_lock() -> MutexGuard<'static, ()> {
+    OBS_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// A per-test output path under the system temp dir.
+fn tmp(name: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("morphling-obs-it-{name}"))
+}
+
+/// Parse an exported Chrome trace and check well-formedness: every event
+/// carries the required fields, `E` events close the innermost open span
+/// of their thread (RAII nesting), timestamps are monotonic per thread,
+/// and every opened span is closed. Returns the set of span names seen.
+fn check_trace(path: &Path) -> BTreeSet<String> {
+    let raw = std::fs::read_to_string(path).expect("trace file must exist");
+    let v = Json::parse(&raw).expect("trace must be valid JSON");
+    let events = v.as_arr().expect("trace root must be an array");
+    assert!(!events.is_empty(), "trace must contain events");
+    let mut names = BTreeSet::new();
+    let mut stacks: BTreeMap<u64, Vec<String>> = BTreeMap::new();
+    let mut last_ts: BTreeMap<u64, f64> = BTreeMap::new();
+    for ev in events {
+        let name = ev
+            .get("name")
+            .and_then(Json::as_str)
+            .expect("span name")
+            .to_string();
+        let ph = ev.get("ph").and_then(Json::as_str).expect("phase");
+        let ts = ev.get("ts").and_then(Json::as_f64).expect("timestamp");
+        assert!(ts >= 0.0, "timestamps are relative to the process epoch");
+        assert_eq!(ev.get("pid").and_then(Json::as_f64), Some(1.0));
+        let tid = ev.get("tid").and_then(Json::as_f64).expect("tid") as u64;
+        let prev = last_ts.entry(tid).or_insert(0.0);
+        assert!(
+            ts >= *prev,
+            "timestamps must be monotonic within tid {tid}: {ts} after {prev}"
+        );
+        *prev = ts;
+        let stack = stacks.entry(tid).or_default();
+        match ph {
+            "B" => stack.push(name.clone()),
+            "E" => {
+                let open = stack
+                    .pop()
+                    .unwrap_or_else(|| panic!("E '{name}' on tid {tid} with no open span"));
+                assert_eq!(open, name, "spans must nest (RAII) within a thread");
+            }
+            other => panic!("unexpected phase '{other}'"),
+        }
+        names.insert(name);
+    }
+    for (tid, stack) in &stacks {
+        assert!(stack.is_empty(), "unclosed spans on tid {tid}: {stack:?}");
+    }
+    names
+}
+
+/// The minibatch+cache training spec the trace/determinism tests share.
+fn mb_spec(threads: usize) -> TrainSpec {
+    TrainSpec {
+        arch: Arch::SageMean,
+        mode: RunMode::Minibatch,
+        fanouts: vec![4, 4],
+        batch_size: 256,
+        cache: true,
+        cache_staleness: 2,
+        epochs: 2,
+        threads: Some(threads),
+        obs: true,
+        ..Default::default()
+    }
+}
+
+/// The serialized deterministic counter section of the global registry.
+fn counters_now() -> String {
+    obs::global().metrics.counters_json()
+}
+
+#[test]
+fn train_trace_and_metrics_files_are_well_formed() {
+    let _g = obs_lock();
+    let trace = tmp("train-trace.json");
+    let metrics = tmp("train-metrics.json");
+    let spec = TrainSpec {
+        trace_out: Some(trace.clone()),
+        metrics_out: Some(metrics.clone()),
+        ..mb_spec(1)
+    };
+    run(&spec).expect("instrumented minibatch run must succeed");
+
+    let names = check_trace(&trace);
+    for expected in ["run", "epoch", "batch", "sample"] {
+        assert!(names.contains(expected), "missing span '{expected}'");
+    }
+    assert!(
+        names.iter().any(|n| n.starts_with("kernel.")),
+        "trace must attribute kernel calls, got {names:?}"
+    );
+
+    let raw = std::fs::read_to_string(&metrics).expect("metrics file must exist");
+    let v = Json::parse(&raw).expect("metrics must be valid JSON");
+    assert_eq!(
+        v.get("schema").and_then(Json::as_str),
+        Some("morphling-metrics-v1")
+    );
+    let counters = v.get("counters").and_then(Json::as_obj).expect("counters");
+    assert!(
+        counters.get("sampler.batches").and_then(Json::as_f64) > Some(0.0),
+        "batches must be counted"
+    );
+    assert!(
+        counters.get("cache.candidates").and_then(Json::as_f64) > Some(0.0),
+        "cache stats must be counted"
+    );
+    assert!(
+        counters.keys().any(|k| k.starts_with("dispatch.")),
+        "dispatch decisions must be counted, got {:?}",
+        counters.keys().collect::<Vec<_>>()
+    );
+    let wall = v.get("wall").expect("wall section");
+    assert!(wall.get("gauges").and_then(Json::as_obj).is_some());
+    assert!(wall.get("histograms").and_then(Json::as_obj).is_some());
+
+    let _ = std::fs::remove_file(&trace);
+    let _ = std::fs::remove_file(&metrics);
+}
+
+#[test]
+fn train_counter_section_is_deterministic_across_runs_and_threads() {
+    let _g = obs_lock();
+    run(&mb_spec(1)).expect("first run");
+    let first = counters_now();
+    run(&mb_spec(1)).expect("repeat run");
+    let repeat = counters_now();
+    assert_eq!(
+        first,
+        repeat,
+        "counter section must be byte-identical across fixed-seed runs"
+    );
+    run(&mb_spec(4)).expect("threaded run");
+    let threaded = counters_now();
+    assert_eq!(
+        first,
+        threaded,
+        "counter section must not depend on the kernel thread count"
+    );
+    assert!(first.contains("\"sampler.batches\""), "got: {first}");
+}
+
+#[test]
+fn serve_counters_deterministic_and_trace_well_formed() {
+    let _g = obs_lock();
+    let trace = tmp("serve-trace.json");
+    let metrics = tmp("serve-metrics.json");
+    let spec = ServeSpec {
+        requests: 32,
+        batch_size: 8,
+        workers: 2,
+        train_epochs: 1,
+        threads: 1,
+        obs: true,
+        trace_out: Some(trace.clone()),
+        metrics_out: Some(metrics.clone()),
+        ..Default::default()
+    };
+    let report = run_serve(&spec).expect("instrumented serve run must succeed");
+    assert_eq!(report.served, 32);
+
+    let names = check_trace(&trace);
+    assert!(names.contains("run"));
+    assert!(
+        names.contains("serve_request"),
+        "each request must be a span, got {names:?}"
+    );
+
+    let raw = std::fs::read_to_string(&metrics).expect("metrics file must exist");
+    let v = Json::parse(&raw).expect("metrics must be valid JSON");
+    let counters = v.get("counters").and_then(Json::as_obj).expect("counters");
+    assert_eq!(
+        counters.get("serve.requests").and_then(Json::as_f64),
+        Some(32.0)
+    );
+    assert_eq!(
+        counters.get("serve.served").and_then(Json::as_f64),
+        Some(32.0)
+    );
+    let hist = v
+        .get("wall")
+        .and_then(|w| w.get("histograms"))
+        .and_then(|h| h.get("serve.latency_secs"))
+        .expect("latency histogram");
+    assert_eq!(hist.get("count").and_then(Json::as_f64), Some(32.0));
+    let first = counters_now();
+
+    let again = ServeSpec {
+        trace_out: None,
+        metrics_out: None,
+        ..spec
+    };
+    run_serve(&again).expect("repeat serve run");
+    assert_eq!(
+        first,
+        counters_now(),
+        "serve counter section must be byte-identical across fixed-seed runs"
+    );
+
+    let _ = std::fs::remove_file(&trace);
+    let _ = std::fs::remove_file(&metrics);
+}
+
+#[test]
+fn disabled_observability_is_bitwise_invisible() {
+    let _g = obs_lock();
+    let cases = [
+        (Arch::Gcn, RunMode::Full, false),
+        (Arch::SageMean, RunMode::Minibatch, true),
+        (Arch::SageMax, RunMode::Minibatch, false),
+    ];
+    for (arch, mode, cache) in cases {
+        let spec = TrainSpec {
+            arch,
+            mode,
+            fanouts: vec![4, 4],
+            batch_size: 256,
+            cache,
+            cache_staleness: 2,
+            epochs: 2,
+            threads: Some(1),
+            ..Default::default()
+        };
+        obs::set_enabled(false);
+        let off = run(&spec).expect("obs-off run");
+        let on = run(&TrainSpec { obs: true, ..spec }).expect("obs-on run");
+        assert_eq!(
+            off.param_hash.expect("engine exposes parameters"),
+            on.param_hash.expect("engine exposes parameters"),
+            "{arch:?}/{mode:?}: observability must not change trained bits"
+        );
+    }
+    obs::set_enabled(false);
+}
+
+#[test]
+fn bucket_index_boundary_semantics() {
+    let bounds = [1.0, 2.0, 4.0];
+    assert_eq!(bucket_index(&bounds, -1.0), 0);
+    assert_eq!(bucket_index(&bounds, 0.5), 0);
+    assert_eq!(bucket_index(&bounds, 1.0), 0, "inclusive bound");
+    assert_eq!(bucket_index(&bounds, 1.0001), 1);
+    assert_eq!(bucket_index(&bounds, 2.0), 1);
+    assert_eq!(bucket_index(&bounds, 3.0), 2);
+    assert_eq!(bucket_index(&bounds, 4.0), 2);
+    assert_eq!(bucket_index(&bounds, 4.0001), 3, "overflow bucket");
+    assert!(
+        LATENCY_BOUNDS_SECS.windows(2).all(|w| w[0] < w[1]),
+        "latency bounds must be sorted ascending"
+    );
+}
+
+#[test]
+fn histogram_observation_lands_in_the_right_bucket() {
+    // A local registry: no global state, no lock needed.
+    let reg = Registry::new();
+    reg.observe("h", &[1.0, 2.0], 0.5); // bucket 0
+    reg.observe("h", &[1.0, 2.0], 1.5); // bucket 1
+    reg.observe("h", &[1.0, 2.0], 99.0); // overflow bucket 2
+    reg.observe("h", &[1.0, 2.0], 2.0); // bucket 1 (inclusive bound)
+    reg.incr("c", 3);
+    reg.gauge_set("g", 2.5);
+    let v = Json::parse(&reg.to_json()).expect("registry JSON parses");
+    let h = v
+        .get("wall")
+        .and_then(|w| w.get("histograms"))
+        .and_then(|hs| hs.get("h"))
+        .expect("histogram present");
+    let counts: Vec<f64> = h
+        .get("counts")
+        .and_then(Json::as_arr)
+        .expect("counts array")
+        .iter()
+        .map(|c| c.as_f64().expect("count is a number"))
+        .collect();
+    assert_eq!(counts, vec![1.0, 2.0, 1.0]);
+    assert_eq!(h.get("count").and_then(Json::as_f64), Some(4.0));
+    assert_eq!(h.get("sum").and_then(Json::as_f64), Some(103.0));
+    assert_eq!(
+        v.get("counters")
+            .and_then(|c| c.get("c"))
+            .and_then(Json::as_f64),
+        Some(3.0)
+    );
+    assert_eq!(
+        v.get("wall")
+            .and_then(|w| w.get("gauges"))
+            .and_then(|g| g.get("g"))
+            .and_then(Json::as_f64),
+        Some(2.5)
+    );
+    // The deterministic section excludes wall-clock metrics entirely.
+    assert_eq!(reg.counters_json(), r#"{"c":3}"#);
+}
